@@ -1,0 +1,37 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import copy
+import csv
+import io
+import sys
+import time
+from typing import Dict, List
+
+
+def print_rows(name: str, rows: List[Dict]) -> None:
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    cols = list(rows[0].keys())
+    w = io.StringIO()
+    writer = csv.DictWriter(w, fieldnames=cols)
+    writer.writeheader()
+    for r in rows:
+        writer.writerow({k: (f"{v:.6g}" if isinstance(v, float) else v)
+                         for k, v in r.items()})
+    print(f"# ---- {name} ----")
+    print(w.getvalue(), end="")
+
+
+def fresh(reqs):
+    return copy.deepcopy(reqs)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.monotonic() - self.t0

@@ -1,0 +1,47 @@
+"""Fig. 4: (a) execution-time ratio per operation class on the GPU system,
+(b) Op/B roofline placement of MoE / attention in the decoding-only stage.
+
+Reproduces: MoE + attention dominate decoding-only stages; their Op/B sits
+in the 1-32 band (GQA: ~2·deg_grp; MoE: ~2·tokens/expert), far below the
+GPU's ~295 Op/B roofline knee.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.opb import decoding_only, mixed, stage_cost_breakdown
+from repro.core.costmodel import H100
+from repro.sim.layermodel import stage_exec
+from repro.sim.paper_models import GLAM, MIXTRAL
+from repro.sim.specs import default_system
+
+
+def run(quick: bool = True) -> List[Dict]:
+    rows = []
+    for cfg in (MIXTRAL, GLAM):
+        system = default_system(cfg, "gpu")
+        for batch in (32, 128) if not quick else (32,):
+            for l_out, ctx in ((1024, 2048 + 512),):
+                mix = decoding_only(batch, ctx)
+                ex = stage_exec(system, cfg, mix, "gpu",
+                                rng=np.random.default_rng(0))
+                total = sum(ex.breakdown.values())
+                agg = stage_cost_breakdown(cfg, mix)
+                for name, t in sorted(ex.breakdown.items()):
+                    c = agg.get({"fc": "qkv+proj", "attn": "attn_decode",
+                                 "moe": "moe", "ffn": "ffn",
+                                 "lm_head": "lm_head"}.get(name, name))
+                    rows.append({
+                        "model": cfg.name, "batch": batch, "stage": "decode",
+                        "component": name, "time_frac": t / total,
+                        "opb": (c.opb if c else float("nan")),
+                        "gpu_knee_opb": H100.knee_opb,
+                    })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows("fig04_opb_breakdown", run(quick=False))

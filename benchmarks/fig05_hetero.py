@@ -1,0 +1,62 @@
+"""Fig. 5: (a) decoding-only vs mixed stage ratio, (b) hetero-system latency
+vs the GPU system, (c) hetero throughput at large batch.
+
+Reproduces: decoding-only stages dominate; the hetero system (2 GPU +
+2 Logic-PIM devices) improves median TBT/E2E but its p99 TBT and T2FT blow
+up because mixed-stage MoE is compute-bound on the weak unit; its throughput
+trails the 4-GPU system at big batch (capacity wasted on a device split).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.sim.engine_sim import simulate
+from repro.sim.metrics import latency_summary
+from repro.sim.paper_models import MIXTRAL
+from repro.sim.specs import duplex_system, gpu_system
+from repro.sim.workload import gaussian_requests
+
+from benchmarks.common import fresh
+
+
+def run(quick: bool = True) -> List[Dict]:
+    cfg = MIXTRAL
+    rows = []
+    n_req = 48 if quick else 128
+    cases = [(512, 512), (2048, 512)] if quick else \
+        [(512, 512), (1024, 512), (2048, 512), (4096, 512)]
+    for l_in, l_out in cases:
+        proto = gaussian_requests(n_req, l_in, l_out, seed=3)
+        # stage-ratio (a)
+        reqs = fresh(proto)
+        gpu = simulate(gpu_system(1, 4), cfg, "gpu", reqs, max_batch=32)
+        ratio = gpu.mixed_stages / max(gpu.stages, 1)
+        lat_gpu = latency_summary(reqs)
+        # hetero (b): 2 GPUs + 2 PIM devices in one box
+        reqs_h = fresh(proto)
+        het = simulate(duplex_system(1, 4, name="hetero"), cfg, "hetero",
+                       reqs_h, max_batch=32)
+        lat_het = latency_summary(reqs_h)
+        for metric in ("tbt_p50", "tbt_p90", "tbt_p99", "t2ft_p50",
+                       "e2e_p50"):
+            rows.append({
+                "l_in": l_in, "l_out": l_out,
+                "mixed_stage_frac": ratio, "metric": metric,
+                "hetero_over_gpu": lat_het[metric] / lat_gpu[metric],
+            })
+        # throughput (c) at large batch
+        reqs_g2 = fresh(proto)
+        g2 = simulate(gpu_system(1, 4), cfg, "gpu", reqs_g2, max_batch=128)
+        reqs_h2 = fresh(proto)
+        h2 = simulate(duplex_system(1, 4, name="hetero"), cfg, "hetero",
+                      reqs_h2, max_batch=128)
+        rows.append({"l_in": l_in, "l_out": l_out,
+                     "mixed_stage_frac": ratio,
+                     "metric": "throughput_b128",
+                     "hetero_over_gpu": h2.throughput / g2.throughput})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows("fig05_hetero", run(quick=False))

@@ -1,0 +1,34 @@
+"""Fig. 8: normalized energy-delay-area product of Bank-PIM, BankGroup-PIM,
+and Logic-PIM vs the Op/B of an FP16 GEMM with a (16384 x 4096) weight.
+
+Reproduces: Bank-PIM wins below ~8 Op/B (highest internal bandwidth);
+Logic-PIM wins above (more compute, logic-process area); BankGroup-PIM is
+uniformly worse than Logic-PIM (same ratios, DRAM-process area penalty).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.costmodel import (BANK_PIM, BANKGROUP_PIM, LOGIC_PIM, edap)
+
+
+def run(quick: bool = True) -> List[Dict]:
+    K, N = 16384, 4096
+    rows = []
+    for opb in (1, 2, 4, 8, 16, 32, 64):
+        # tokens m sets the arithmetic intensity: opb ~= 2m (weight-bound)
+        m = max(opb // 2, 1)
+        flops = 2.0 * m * K * N
+        bytes_ = 2.0 * (K * N + m * (K + N))
+        vals = {d.name: edap(d, flops, bytes_)
+                for d in (BANK_PIM, BANKGROUP_PIM, LOGIC_PIM)}
+        base = vals["logic_pim"]
+        for name, v in vals.items():
+            rows.append({"opb": opb, "device": name,
+                         "edap_norm_to_logicpim": v / base})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows("fig08_edap", run(quick=False))

@@ -1,0 +1,45 @@
+"""Fig. 10: operation flows — serial Duplex (a/b), naive mini-batch split
+(c), and expert/attention co-processing (d), on the same total batch.
+
+Reproduces: the mini-batch split keeps both units busy but halves the
+batching effect of FC/MoE layers (weights read twice, memory-bound time
+unchanged) and burns more energy; co-processing preserves full-batch GEMMs
+while overlapping the units — faster AND cheaper.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.opb import decoding_only, mixed
+from repro.sim.paper_models import GLAM, MIXTRAL
+from repro.sim.specs import default_system
+from repro.sim.layermodel import stage_exec
+
+
+def run(quick: bool = True) -> List[Dict]:
+    rows = []
+    models = (MIXTRAL,) if quick else (MIXTRAL, GLAM)
+    for cfg in models:
+        system = default_system(cfg, "duplex")
+        for mix_name, mix in (("decode_b64_ctx2k", decoding_only(64, 2048)),
+                              ("mixed_+2x1k", mixed(62, 2048, 2, 1024))):
+            base = None
+            for policy in ("duplex", "minibatch_split", "duplex_pe"):
+                ex = stage_exec(system, cfg, mix, policy,
+                                rng=np.random.default_rng(0))
+                if base is None:
+                    base = ex
+                rows.append({
+                    "model": cfg.name, "stage": mix_name, "flow": policy,
+                    "stage_ms": ex.time * 1e3,
+                    "time_vs_serial": ex.time / base.time,
+                    "energy_vs_serial": ex.energy / max(base.energy, 1e-12),
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows("fig10_flows", run(quick=False))

@@ -1,0 +1,50 @@
+"""Fig. 11: normalized throughput of Duplex / Duplex+PE / Duplex+PE+ET vs
+GPU and 2xGPU for Mixtral, GLaM, Grok1 over (L_in, L_out) and batch size.
+
+Reproduces: Duplex up to ~2.5x GPU, +PE ~1.04x over Duplex, +PE+ET up to
+~2.67x GPU; Grok1 gains least (2-node IB communication overhead).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.sim.engine_sim import simulate
+from repro.sim.paper_models import GLAM, GROK1, MIXTRAL
+from repro.sim.specs import default_system
+from repro.sim.workload import gaussian_requests
+
+from benchmarks.common import fresh
+
+VARIANTS = [("gpu", "gpu"), ("gpu2x", "gpu"), ("duplex", "duplex"),
+            ("duplex", "duplex_pe"), ("duplex_et", "duplex_pe_et")]
+
+
+def run(quick: bool = True) -> List[Dict]:
+    rows = []
+    models = (MIXTRAL,) if quick else (MIXTRAL, GLAM, GROK1)
+    cases = [(256, 256, 32), (1024, 1024, 64)] if quick else \
+        [(256, 256, 32), (1024, 1024, 64), (4096, 4096, 128)]
+    for cfg in models:
+        for l_in, l_out, batch in cases:
+            n_req = max(2 * batch, 48) if quick else 4 * batch
+            proto = gaussian_requests(n_req, l_in, min(l_out, 256 if quick
+                                                       else l_out), seed=11)
+            base = None
+            for kind, policy in VARIANTS:
+                reqs = fresh(proto)
+                r = simulate(default_system(cfg, kind), cfg, policy, reqs,
+                             max_batch=batch)
+                if kind == "gpu" and policy == "gpu":
+                    base = r.throughput
+                rows.append({
+                    "model": cfg.name, "l_in": l_in, "l_out": l_out,
+                    "batch": batch, "system": kind, "policy": policy,
+                    "tok_per_s": r.throughput,
+                    "speedup_vs_gpu": r.throughput / base,
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows("fig11_throughput", run(quick=False))

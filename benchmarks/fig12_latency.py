@@ -1,0 +1,53 @@
+"""Fig. 12: normalized TBT / T2FT / E2E latencies of GLaM (batch 64) for
+Duplex variants vs GPU and 2xGPU.
+
+Reproduces: median TBT cut ~58% vs GPU (decoding-only stage accelerated by
+Logic-PIM bandwidth), Duplex below 2xGPU on median TBT; +PE+ET competitive
+on p99 TBT / T2FT.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.sim.engine_sim import simulate
+from repro.sim.metrics import latency_summary
+from repro.sim.paper_models import GLAM
+from repro.sim.specs import default_system
+from repro.sim.workload import gaussian_requests
+
+from benchmarks.common import fresh
+
+VARIANTS = [("gpu", "gpu"), ("gpu2x", "gpu"), ("duplex", "duplex"),
+            ("duplex_et", "duplex_pe_et")]
+
+
+def run(quick: bool = True) -> List[Dict]:
+    cfg = GLAM
+    rows = []
+    cases = [(512, 512)] if quick else [(512, 512), (1024, 1024),
+                                        (2048, 2048)]
+    for l_in, l_out in cases:
+        proto = gaussian_requests(48 if quick else 192, l_in,
+                                  min(l_out, 128) if quick else l_out,
+                                  seed=12)
+        base = None
+        for kind, policy in VARIANTS:
+            reqs = fresh(proto)
+            simulate(default_system(cfg, kind), cfg, policy, reqs,
+                     max_batch=64)
+            lat = latency_summary(reqs)
+            if base is None:
+                base = dict(lat)
+            for metric in ("tbt_p50", "tbt_p99", "t2ft_p50", "e2e_p50"):
+                rows.append({
+                    "l_in": l_in, "l_out": l_out, "system": kind,
+                    "policy": policy, "metric": metric,
+                    "seconds": lat[metric],
+                    "norm_vs_gpu": lat[metric] / base[metric],
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows("fig12_latency", run(quick=False))

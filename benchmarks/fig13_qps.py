@@ -1,0 +1,46 @@
+"""Fig. 13: TBT / T2FT / E2E vs queries-per-second (Poisson arrivals) for
+Mixtral, (L_in, L_out) = (4096, 512), max batch 128.
+
+Reproduces: Duplex always beats GPU; GPU saturates (T2FT skyrockets) around
+9 QPS while Duplex sustains ~14, near 2xGPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.sim.engine_sim import simulate
+from repro.sim.metrics import latency_summary
+from repro.sim.paper_models import MIXTRAL
+from repro.sim.specs import default_system
+from repro.sim.workload import gaussian_requests, poisson_arrivals
+
+from benchmarks.common import fresh
+
+VARIANTS = [("gpu", "gpu"), ("gpu2x", "gpu"), ("duplex_et", "duplex_pe_et")]
+
+
+def run(quick: bool = True) -> List[Dict]:
+    cfg = MIXTRAL
+    rows = []
+    l_in, l_out = (4096, 512) if not quick else (1024, 64)
+    qps_list = (4, 8) if quick else (4, 6, 8, 10, 12, 14, 16)
+    n_req = 32 if quick else 160
+    for qps in qps_list:
+        proto = poisson_arrivals(
+            gaussian_requests(n_req, l_in, l_out, seed=13), qps, seed=13)
+        for kind, policy in VARIANTS:
+            reqs = fresh(proto)
+            simulate(default_system(cfg, kind), cfg, policy, reqs,
+                     max_batch=128, max_prefill_per_stage=2)
+            lat = latency_summary(reqs)
+            rows.append({
+                "qps": qps, "system": kind, "policy": policy,
+                "tbt_p50": lat["tbt_p50"], "tbt_p90": lat["tbt_p90"],
+                "t2ft_p50": lat["t2ft_p50"], "e2e_p50": lat["e2e_p50"],
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows("fig13_qps", run(quick=False))

@@ -1,0 +1,50 @@
+"""Fig. 14: Duplex vs Bank-PIM across Mixtral (MoE+GQA), Llama3 (GQA), and
+OPT (MHA).
+
+Reproduces: Duplex > Bank-PIM on MoE/GQA models (Bank-PIM lacks compute for
+Op/B > 1); Bank-PIM wins on OPT (MHA decode attention is sub-1 Op/B, pure
+bandwidth).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.sim.engine_sim import simulate
+from repro.sim.paper_models import LLAMA3, MIXTRAL, OPT
+from repro.sim.specs import default_system
+from repro.sim.workload import gaussian_requests
+
+from benchmarks.common import fresh
+
+VARIANTS = [("gpu", "gpu"), ("duplex", "duplex_pe"),
+            ("bankpim", "duplex_pe")]
+
+
+def run(quick: bool = True) -> List[Dict]:
+    rows = []
+    models = (MIXTRAL, OPT) if quick else (MIXTRAL, LLAMA3, OPT)
+    cases = [(256, 256, 64)] if quick else \
+        [(256, 256, 64), (1024, 1024, 32), (4096, 4096, 32)]
+    for cfg in models:
+        for l_in, l_out, batch in cases:
+            proto = gaussian_requests(max(48, batch), l_in,
+                                      min(l_out, 128) if quick else l_out,
+                                      seed=14)
+            base = None
+            for kind, policy in VARIANTS:
+                reqs = fresh(proto)
+                r = simulate(default_system(cfg, kind), cfg, policy, reqs,
+                             max_batch=batch)
+                if base is None:
+                    base = r.throughput
+                rows.append({
+                    "model": cfg.name, "l_in": l_in, "batch": batch,
+                    "system": kind, "policy": policy,
+                    "speedup_vs_gpu": r.throughput / base,
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows("fig14_bankpim", run(quick=False))

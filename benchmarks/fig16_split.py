@@ -1,0 +1,47 @@
+"""Fig. 16 / §VIII-A: phase-split (Splitwise-style) vs non-split Duplex.
+
+Reproduces: the split system (2 prefill + 2 decode Duplex devices) gets good
+tail TBT (no mixed stages in the decode pool) but loses throughput — weight
+duplication wastes KV capacity and each phase only uses half the devices.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.sim.engine_sim import simulate, simulate_split
+from repro.sim.metrics import latency_summary
+from repro.sim.paper_models import MIXTRAL
+from repro.sim.specs import duplex_system
+from repro.sim.workload import gaussian_requests
+
+from benchmarks.common import fresh
+
+
+def run(quick: bool = True) -> List[Dict]:
+    cfg = MIXTRAL
+    rows = []
+    cases = [(256, 128)] if quick else [(256, 256), (1024, 1024),
+                                        (4096, 4096)]
+    for l_in, l_out in cases:
+        proto = gaussian_requests(48 if quick else 160, l_in, l_out, seed=16)
+        reqs_ns = fresh(proto)
+        ns = simulate(duplex_system(1, 4), cfg, "duplex_pe", reqs_ns,
+                      max_batch=128)
+        lat_ns = latency_summary(reqs_ns)
+        reqs_sp = fresh(proto)
+        sp = simulate_split(duplex_system(1, 2, name="split_prefill"),
+                            duplex_system(1, 2, name="split_decode"),
+                            cfg, "duplex_pe", reqs_sp)
+        lat_sp = latency_summary(reqs_sp)
+        rows.append({
+            "l_in": l_in, "l_out": l_out,
+            "nonsplit_tok_s": ns.throughput, "split_tok_s": sp.throughput,
+            "split_over_nonsplit_thr": sp.throughput / ns.throughput,
+            "split_tbt_p99_ratio": lat_sp["tbt_p99"] / lat_ns["tbt_p99"],
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows("fig16_split", run(quick=False))

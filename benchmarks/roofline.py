@@ -1,0 +1,76 @@
+"""§Roofline aggregation: read artifacts/dryrun/*.json into the per-cell
+roofline table (markdown + CSV on stdout).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dirname: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": "-", "status": "skipped"})
+            continue
+        r = rec.get("roofline", {})
+        mem = rec.get("memory_analysis", {})
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "status": rec.get("status"),
+            "t_compute": r.get("t_compute"), "t_memory": r.get("t_memory"),
+            "t_collective": r.get("t_collective"),
+            "dominant": r.get("dominant"), "t_bound": r.get("t_bound"),
+            "t_ideal": r.get("t_ideal"),
+            "roofline_frac": r.get("roofline_fraction"),
+            "useful_flop_ratio": r.get("useful_flop_ratio"),
+            "model_tflops": (r.get("model_flops_global", 0) or 0) / 1e12,
+            "hlo_tflops": (r.get("flops_global", 0) or 0) / 1e12,
+            "temp_gb_per_dev": (mem.get("temp_size_in_bytes", 0) or 0) / 1e9,
+            "moe_impl": rec.get("moe_impl"),
+        })
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    cols = ["arch", "shape", "mesh", "dominant", "t_compute", "t_memory",
+            "t_collective", "t_bound", "t_ideal", "roofline_frac",
+            "useful_flop_ratio", "temp_gb_per_dev"]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "---|" * len(cols)]
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | skipped "
+                       "(full attention) |" + " |" * (len(cols) - 4))
+            continue
+        vals = []
+        for c in cols:
+            v = r.get(c)
+            vals.append(f"{v:.4g}" if isinstance(v, float) else str(v))
+        out.append("| " + " | ".join(vals) + " |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="artifacts/dryrun")
+    p.add_argument("--format", default="md", choices=["md", "csv"])
+    args = p.parse_args()
+    rows = load(args.dir)
+    if args.format == "md":
+        print(markdown_table(rows))
+    else:
+        from benchmarks.common import print_rows
+        print_rows("roofline", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick mode (CI-sized)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-sized sweeps
+  PYTHONPATH=src python -m benchmarks.run --only fig11_throughput
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+FIGS = [
+    "fig04_opb_breakdown",   # SIII computational analysis
+    "fig05_hetero",          # SIII-B hetero-system limitation
+    "fig08_edap",            # SIV-E EDAP vs PIM placement
+    "fig10_flows",           # SV-B operation flows (naive split vs co-proc)
+    "fig11_throughput",      # SVII-A throughput
+    "fig12_latency",         # SVII-B latency
+    "fig13_qps",             # SVII-B QPS sweep
+    "fig14_bankpim",         # SVII-C Bank-PIM comparison
+    "fig15_energy",          # SVII-D energy
+    "fig16_split",           # SVIII-A split-node comparison
+    "skew_study",            # SVIII-B expert-skew implications
+    "duplex_runtime",        # TPU-runtime counterpart (HLO-level wins)
+]
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--full", action="store_true",
+                   help="paper-sized workloads (slow)")
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+
+    from benchmarks.common import print_rows
+    failures = 0
+    for name in FIGS:
+        if args.only and args.only != name:
+            continue
+        t0 = time.monotonic()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run(quick=not args.full)
+            print_rows(name, rows)
+            print(f"# {name}: {len(rows)} rows in "
+                  f"{time.monotonic() - t0:.1f}s\n")
+        except Exception:
+            failures += 1
+            print(f"# {name}: FAILED\n{traceback.format_exc()}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

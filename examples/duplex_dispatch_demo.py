@@ -1,0 +1,34 @@
+"""Demo: the paper's expert co-processing partitioner (§V-B) end to end.
+
+Shows, for progressively skewed expert loads, how the greedy LUT
+partitioner splits experts between xPU and Logic-PIM, and how close the
+greedy makespan is to the exhaustive optimum (test oracle).
+
+Run: PYTHONPATH=src python examples/duplex_dispatch_demo.py
+"""
+import numpy as np
+
+from repro.core.costmodel import DUPLEX
+from repro.core.partition import (build_luts, optimal_partition_bruteforce,
+                                  partition_experts)
+
+D_MODEL, D_FF, E = 4096, 14336, 8          # Mixtral-like layer
+lut_x, lut_p = build_luts(DUPLEX, D_MODEL, D_FF, max_tokens=4096)
+
+print(f"{'skew':>6s} {'counts':>40s} {'k_cold':>6s} {'makespan_us':>12s} "
+      f"{'all_xpu_us':>11s} {'greedy/opt':>10s}")
+rng = np.random.default_rng(0)
+for skew in (0.0, 0.5, 1.0, 2.0, 4.0):
+    # Zipf-ish skew over 8 experts, 64 assignments (batch 32, top-2)
+    w = (1.0 / (np.arange(E) + 1) ** skew)
+    counts = rng.multinomial(64, w / w.sum())
+    part = partition_experts(counts, lut_x, lut_p)
+    t_all_xpu = float(lut_x(counts).sum())
+    opt = optimal_partition_bruteforce(counts, lut_x, lut_p)
+    print(f"{skew:6.1f} {str(counts.tolist()):>40s} {part.k_cold:6d} "
+          f"{part.makespan*1e6:12.1f} {t_all_xpu*1e6:11.1f} "
+          f"{part.makespan/opt:10.3f}")
+
+print("\nWith hot/cold experts (skew>0) the split wins; with uniform counts "
+      "co-processing helps less (paper §VIII-B).")
+print("OK")

@@ -1,0 +1,59 @@
+"""End-to-end training driver: ~100M-parameter MoE LM, a few hundred steps.
+
+Exercises the full training substrate: synthetic-but-learnable data
+pipeline, AdamW + cosine schedule, grouped-MoE forward, fault-tolerant
+checkpointing (kill and re-run: it resumes from the last checkpoint,
+bit-exact data order).
+
+Run: PYTHONPATH=src python examples/train_moe_100m.py [--steps 300]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig, small_test_config
+from repro.launch.train import make_step
+from repro.configs.base import RunConfig
+from repro.models.model import model_specs
+from repro.models.param import init_params, param_count
+from repro.training.data import DataConfig, SyntheticLMData
+from repro.training.loop import LoopConfig, train_loop
+from repro.training.optimizer import OptConfig, init_opt_state
+
+p = argparse.ArgumentParser()
+p.add_argument("--steps", type=int, default=300)
+p.add_argument("--batch", type=int, default=8)
+p.add_argument("--seq", type=int, default=256)
+p.add_argument("--ckpt-dir", default="/tmp/repro_moe100m")
+args = p.parse_args()
+
+# ~100M params: 8 layers, d=512, 16 experts of d_ff 1024 (top-2)
+cfg = small_test_config(
+    "moe-100m", family="moe", num_layers=8, d_model=512, num_heads=8,
+    num_kv_heads=4, d_ff=1024, vocab_size=8192,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=1024))
+n_params = param_count(model_specs(cfg))
+print(f"model: {cfg.name} with {n_params/1e6:.1f}M params "
+      f"({cfg.active_param_count()/1e6:.1f}M active/token)")
+
+opt = OptConfig(learning_rate=3e-4, total_steps=args.steps,
+                warmup_steps=max(args.steps // 20, 5))
+params = init_params(jax.random.PRNGKey(0), model_specs(cfg))
+state = {"params": params, "opt": init_opt_state(params, opt),
+         "step": jnp.zeros((), jnp.int32)}
+data = SyntheticLMData(DataConfig(cfg.vocab_size, args.seq, args.batch))
+
+step_fn = make_step(cfg, opt, RunConfig(remat_policy="none"))
+loop = train_loop(
+    state, step_fn, lambda s: {"tokens": jnp.asarray(data.batch_at(s)["tokens"])},
+    LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+               ckpt_every=50, log_every=10))
+
+first = np.mean(loop.losses[:10])
+last = np.mean(loop.losses[-10:])
+print(f"loss {first:.4f} -> {last:.4f} over {loop.step} steps "
+      f"({'interrupted, resumable' if loop.interrupted else 'complete'})")
+assert last < first, "loss must decrease on the learnable synthetic data"
+print("OK")

@@ -1,0 +1,12 @@
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig, Segment,
+                                LayerKind, ShapeConfig, RunConfig, SHAPES,
+                                small_test_config, shape_applicable,
+                                LONG_CONTEXT_ARCHS)
+from repro.configs.registry import all_archs, all_cells, get_config, get_shape
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "Segment", "LayerKind",
+    "ShapeConfig", "RunConfig", "SHAPES", "small_test_config",
+    "shape_applicable", "LONG_CONTEXT_ARCHS", "all_archs", "all_cells",
+    "get_config", "get_shape",
+]

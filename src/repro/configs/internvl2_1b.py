@@ -1,0 +1,27 @@
+"""internvl2-1b — VLM: InternViT frontend (stub) + Qwen2-0.5B-class LM backbone.
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655. [arXiv:2404.16821; hf]
+
+``input_specs()`` provides ``frontend_embeds`` precomputed patch embeddings
+(batch, 1024, d_model) prepended to text-token embeddings; only the LM backbone
+is lowered (assignment: modality frontend is a STUB).
+"""
+from repro.configs.base import ATTN, DENSE, LayerKind, ModelConfig, Segment
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    segments=(Segment((LayerKind(ATTN, DENSE),), 24),),
+    attn_bias=True,
+    tie_embeddings=True,
+    frontend_embeds=1024,
+    rope_theta=1_000_000.0,
+    source="arXiv:2404.16821",
+).validate()

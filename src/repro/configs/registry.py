@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolution for every entry point."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig, shape_applicable
+
+
+def _load() -> dict:
+    from repro.configs import (command_r_35b, deepseek_moe_16b, gemma3_4b,
+                               internvl2_1b, jamba_v0_1_52b, mamba2_2p7b,
+                               mistral_large_123b, olmoe_1b_7b, qwen3_8b,
+                               whisper_small)
+    mods = [jamba_v0_1_52b, olmoe_1b_7b, deepseek_moe_16b, gemma3_4b, qwen3_8b,
+            command_r_35b, mistral_large_123b, mamba2_2p7b, whisper_small,
+            internvl2_1b]
+    return {m.CONFIG.name: m.CONFIG for m in mods}
+
+
+_REGISTRY: dict | None = None
+
+
+def all_archs() -> tuple[str, ...]:
+    global _REGISTRY
+    if _REGISTRY is None:
+        _REGISTRY = _load()
+    return tuple(_REGISTRY.keys())
+
+
+def get_config(name: str) -> ModelConfig:
+    global _REGISTRY
+    if _REGISTRY is None:
+        _REGISTRY = _load()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (arch_name, shape_name, applicable) for the 40 assigned cells."""
+    for arch in all_archs():
+        for shape in SHAPES:
+            ok = shape_applicable(arch, shape)
+            if ok or include_skipped:
+                yield arch, shape, ok

@@ -1,0 +1,25 @@
+"""The paper's primary contribution: Op/B analysis (C1 input), Op/B-driven
+dispatch (C1), expert co-processing partitioner (C2), dual-path MoE execution
+(C2 on TPU), and the shared device cost model. Attention co-processing (C3)
+lives in serving/engine.py (it is a property of the mixed-stage step
+function); expert tensor-parallelism (C4) lives in sharding/rules.py."""
+from repro.core.costmodel import (BANK_PIM, BANKGROUP_PIM, DUPLEX, DeviceSpec,
+                                  DuplexSpec, H100, LOGIC_PIM, TPU_V5E)
+from repro.core.dispatch import (BANDWIDTH, COMPUTE, OPB_THRESHOLD, StagePlan,
+                                 describe_plan, plan_stage, route_component)
+from repro.core.duplex_moe import (default_capacities, duplex_dispatch,
+                                   duplex_moe_apply)
+from repro.core.opb import (OpCost, StageMix, decoding_only, mixed,
+                            layer_stage_cost, stage_cost_breakdown)
+from repro.core.partition import (DuplexPlanner, ExpertLUT, Partition,
+                                  build_lut, build_luts, partition_experts)
+
+__all__ = [
+    "BANK_PIM", "BANKGROUP_PIM", "DUPLEX", "DeviceSpec", "DuplexSpec", "H100",
+    "LOGIC_PIM", "TPU_V5E", "BANDWIDTH", "COMPUTE", "OPB_THRESHOLD",
+    "StagePlan", "describe_plan", "plan_stage", "route_component",
+    "default_capacities", "duplex_dispatch", "duplex_moe_apply", "OpCost",
+    "StageMix", "decoding_only", "mixed", "layer_stage_cost",
+    "stage_cost_breakdown", "DuplexPlanner", "ExpertLUT", "Partition",
+    "build_lut", "build_luts", "partition_experts",
+]

@@ -1,0 +1,150 @@
+"""Device roofline + overhead cost model (paper §IV, §VI).
+
+One implementation shared by:
+  * ``core/partition.py``   — the expert co-processing latency LUTs,
+  * ``core/dispatch.py``    — Op/B-driven path selection,
+  * ``sim/``                — the cluster/serving simulator reproducing the
+                              paper's figures.
+
+Execution time of an operation = max(flops / peak_flops, bytes / bw) + t_launch
+(the classic roofline with a fixed launch overhead). Energy is modeled per
+paper §VI from DRAM access energy (activation + column read + transport) plus
+a per-FLOP compute term; Logic-PIM paths skip the off-chip I/O/PHY energy,
+which is where the paper's 28–42% energy saving comes from.
+
+Hardware constants:
+  * H100 (the paper's baseline xPU): 989.4 TFLOP/s FP16 tensor dense,
+    3.35 TB/s HBM3, 80 GB. (NVIDIA H100 SXM datasheet.)
+  * Logic-PIM (paper §VI): +4x internal bandwidth via extra TSVs, processing
+    units sized at 8 Op/B => 21.3 TFLOP/s per stack x 5 stacks.
+  * Bank-PIM: 16x internal bandwidth, 1 Op/B (2x HBM-PIM [29]).
+  * BankGroup-PIM: Logic-PIM's bw/compute but units on the DRAM die (worse
+    area => worse EDAP, Fig. 8).
+  * TPU v5e-class target (the JAX runtime's roofline constants): 197 TFLOP/s
+    bf16, 819 GB/s HBM, ~50 GB/s/link ICI (assignment constants).
+
+DRAM energy per bit (pJ/bit), after O'Connor et al. [37] (HBM2 measurements,
+used by the paper for activate/read/write/TSV energies):
+  activate 0.95, column read/write 1.25, off-chip I/O+PHY 1.28, TSV 0.35.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+# ---------------------------------------------------------------------------
+# Energy constants (pJ/bit, pJ/flop)
+# ---------------------------------------------------------------------------
+
+E_ACT = 0.95          # row activation, pJ/bit
+E_RD = 1.25           # column read, pJ/bit
+E_IO_EXT = 1.28       # off-chip I/O + PHY (interposer), pJ/bit
+E_TSV = 0.35          # through-silicon-via transport, pJ/bit
+E_FLOP_XPU = 0.65     # pJ/FLOP fp16 incl. SRAM movement (GPU-class, 7nm)
+E_FLOP_PIM = 0.45     # pJ/FLOP on the logic die (shorter datapath, 650 MHz)
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    """One execution resource (a whole device or one path inside Duplex)."""
+    name: str
+    peak_flops: float          # FLOP/s
+    mem_bw: float              # B/s usable by this path
+    mem_capacity: float        # bytes (device-level)
+    t_launch: float = 3e-6     # fixed per-op overhead, s
+    # energy model
+    e_bit_mem: float = E_ACT + E_RD + E_IO_EXT   # pJ per DRAM bit moved
+    e_flop: float = E_FLOP_XPU                   # pJ per FLOP
+    # EDAP area term (mm^2 of processing-unit area, Fig. 8)
+    pu_area_mm2: float = 0.0
+
+    @property
+    def knee_opb(self) -> float:
+        return self.peak_flops / self.mem_bw
+
+    def time(self, flops: float, bytes_: float) -> float:
+        if flops <= 0 and bytes_ <= 0:
+            return 0.0
+        return max(flops / self.peak_flops, bytes_ / self.mem_bw) + self.t_launch
+
+    def energy(self, flops: float, bytes_: float) -> float:
+        """Joules."""
+        return (flops * self.e_flop + bytes_ * 8.0 * self.e_bit_mem) * 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Paper devices (§VI)
+# ---------------------------------------------------------------------------
+
+HBM3_BW = 3.35e12           # H100 per-device HBM3 bandwidth
+HBM3_CAP = 80e9
+H100_FLOPS = 989.4e12       # FP16 tensor dense
+N_STACKS = 5                # HBM stacks per device
+
+H100 = DeviceSpec("h100", H100_FLOPS, HBM3_BW, HBM3_CAP,
+                  e_bit_mem=E_ACT + E_RD + E_IO_EXT, e_flop=E_FLOP_XPU,
+                  pu_area_mm2=814.0)  # H100 die
+
+# Logic-PIM: 4x internal bandwidth, compute sized at 8 Op/B
+# (8 x 4 x 0.67 TB/s per stack = 21.4 TFLOP/s per stack, 5 stacks)
+LOGIC_PIM = DeviceSpec("logic_pim", 8 * 4 * HBM3_BW, 4 * HBM3_BW, HBM3_CAP,
+                       t_launch=2e-6,
+                       e_bit_mem=E_ACT + E_RD + E_TSV, e_flop=E_FLOP_PIM,
+                       pu_area_mm2=N_STACKS * 17.80)  # §VII-E per-stack PUs
+assert abs(LOGIC_PIM.peak_flops - N_STACKS * 21.3e12) / LOGIC_PIM.peak_flops < 0.3
+
+# Bank-PIM: 16x internal bw, 1 Op/B peak (2x HBM-PIM [29])
+BANK_PIM = DeviceSpec("bank_pim", 1 * 16 * HBM3_BW, 16 * HBM3_BW, HBM3_CAP,
+                      t_launch=2e-6,
+                      e_bit_mem=E_ACT + E_RD, e_flop=E_FLOP_PIM * 1.4,
+                      pu_area_mm2=N_STACKS * 121.0 * 0.25)  # 25% of DRAM dies
+
+# BankGroup-PIM: Logic-PIM's ratios, units on the DRAM die (10x area penalty /7)
+BANKGROUP_PIM = dataclasses.replace(
+    LOGIC_PIM, name="bankgroup_pim", e_flop=E_FLOP_PIM * 1.2,
+    pu_area_mm2=N_STACKS * 17.80 * 2.5)
+
+# TPU v5e-class chip — the JAX runtime's roofline target (assignment constants)
+TPU_V5E = DeviceSpec("tpu_v5e", 197e12, 819e9, 16e9, t_launch=2e-6)
+ICI_BW = 50e9               # B/s per link
+NVLINK_BW = 900e9           # bidirectional, HGX (paper §VI)
+IB_BW = 400e9               # inter-node Infiniband (paper §VI)
+
+DEVICES: Dict[str, DeviceSpec] = {d.name: d for d in
+                                  (H100, LOGIC_PIM, BANK_PIM, BANKGROUP_PIM,
+                                   TPU_V5E)}
+
+
+# ---------------------------------------------------------------------------
+# Duplex device = xPU path + Logic-PIM path sharing one memory (paper §IV)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DuplexSpec:
+    name: str
+    xpu: DeviceSpec
+    pim: DeviceSpec
+    mem_capacity: float = HBM3_CAP
+
+    def path(self, which: str) -> DeviceSpec:
+        return self.xpu if which == "xpu" else self.pim
+
+
+DUPLEX = DuplexSpec("duplex", H100, LOGIC_PIM)
+DUPLEX_BANKPIM = DuplexSpec("duplex_bankpim", H100, BANK_PIM)
+
+
+def gemm_time(dev: DeviceSpec, m: int, k: int, n: int,
+              bytes_override: Optional[float] = None) -> float:
+    flops = 2.0 * m * k * n
+    bytes_ = bytes_override if bytes_override is not None else \
+        2.0 * (m * k + k * n + m * n)
+    return dev.time(flops, bytes_)
+
+
+def edap(dev: DeviceSpec, flops: float, bytes_: float) -> float:
+    """Energy-delay-area product for one op (Fig. 8)."""
+    t = dev.time(flops, bytes_)
+    e = dev.energy(flops, bytes_)
+    return e * t * dev.pu_area_mm2

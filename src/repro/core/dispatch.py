@@ -1,0 +1,126 @@
+"""Op/B-driven layer dispatch — the paper's C1 mechanism (§IV).
+
+For each layer component of each continuous-batching stage, compute its Op/B
+(``core/opb.py``) and select the execution path:
+
+  * ``bandwidth``  (the paper's Logic-PIM; our TPU bandwidth-streaming path)
+    for components whose Op/B falls in the Logic-PIM band (≤ OPB_THRESHOLD),
+  * ``compute``    (the paper's xPU; our MXU-aligned path) otherwise.
+
+The paper's routing policy specialized by stage type (§IV intro):
+  decoding-only stage : MoE layers and attention  -> Logic-PIM
+  mixed stage         : decode-sequence attention -> Logic-PIM,
+                        prefill attention + MoE(+FC) -> xPU
+                        (refined by C2/C3 co-processing)
+
+On TPU, "path" selects which kernel / execution strategy a component lowers
+to (see DESIGN.md §2 table): the decision logic and thresholds are the
+paper's; the execution substrate is TPU-native.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.configs.base import (ATTN_CROSS, DENSE, MAMBA, MOE, NONE,
+                                LayerKind, ModelConfig)
+from repro.core import opb as opb_mod
+from repro.core.costmodel import DuplexSpec, DUPLEX
+from repro.core.opb import LayerStageCost, OpCost, StageMix
+
+COMPUTE = "compute"      # xPU analogue
+BANDWIDTH = "bandwidth"  # Logic-PIM analogue
+
+# Logic-PIM's effective band (paper §I/§IV-B: "low-Op/B (1-32) operations").
+OPB_THRESHOLD = 32.0
+
+
+@dataclass(frozen=True)
+class ComponentRoute:
+    component: str     # opb.OpCost.name
+    opb: float
+    path: str          # COMPUTE | BANDWIDTH
+    flops: float
+    bytes: float
+
+
+@dataclass(frozen=True)
+class StagePlan:
+    """Routing decision for every layer component of one stage."""
+    mix: StageMix
+    routes: Tuple[Tuple[LayerKind, Tuple[ComponentRoute, ...]], ...]
+
+    def path_of(self, kind: LayerKind, component: str) -> str:
+        for k, comps in self.routes:
+            if k == kind:
+                for c in comps:
+                    if c.component == component:
+                        return c.path
+        raise KeyError((kind, component))
+
+    def bandwidth_fraction(self) -> float:
+        """Fraction of stage FLOPs routed to the bandwidth path."""
+        tot = bw = 0.0
+        for _, comps in self.routes:
+            for c in comps:
+                tot += c.flops
+                if c.path == BANDWIDTH:
+                    bw += c.flops
+        return bw / max(tot, 1.0)
+
+
+def route_component(cost: OpCost, *, threshold: float = OPB_THRESHOLD,
+                    duplex: Optional[DuplexSpec] = None) -> str:
+    """Op/B rule. With a DuplexSpec, refine the static threshold by comparing
+    modeled execution times on the two paths (equivalent at the knee)."""
+    if duplex is not None:
+        t_x = duplex.xpu.time(cost.flops, cost.bytes)
+        t_p = duplex.pim.time(cost.flops, cost.bytes)
+        return BANDWIDTH if t_p <= t_x else COMPUTE
+    return BANDWIDTH if cost.opb <= threshold else COMPUTE
+
+
+# Components that are *always* compute-path regardless of measured Op/B:
+# QKV/proj and dense FFN GEMMs batch over all tokens; the paper keeps them on
+# xPU in every stage type (their Op/B rises with tokens and they fuse with
+# surrounding high-Op/B work).
+_ALWAYS_COMPUTE = {"qkv+proj", "lm_head"}
+# Components the paper pins to the bandwidth unit in its stage policy even
+# when instantaneous Op/B is borderline:
+_DECODE_BOUND = {"attn_decode", "cross_attn", "mamba_decode"}
+
+
+def plan_stage(cfg: ModelConfig, mix: StageMix, *,
+               counts: Optional[Sequence[int]] = None,
+               threshold: float = OPB_THRESHOLD,
+               duplex: Optional[DuplexSpec] = None) -> StagePlan:
+    """C1: route every component of every (unique) layer kind."""
+    seen: Dict[LayerKind, Tuple[ComponentRoute, ...]] = {}
+    for kind in cfg.layer_kinds():
+        if kind in seen:
+            continue
+        lc = opb_mod.layer_stage_cost(cfg, kind, mix, counts)
+        routes = []
+        for c in lc.components:
+            if c.name in _ALWAYS_COMPUTE:
+                path = COMPUTE
+            elif c.name in _DECODE_BOUND:
+                path = BANDWIDTH
+            else:
+                path = route_component(c, threshold=threshold, duplex=duplex)
+            routes.append(ComponentRoute(c.name, c.opb, path, c.flops, c.bytes))
+        seen[kind] = tuple(routes)
+    return StagePlan(mix, tuple(seen.items()))
+
+
+def describe_plan(plan: StagePlan) -> str:
+    lines = [f"stage: {'mixed' if plan.mix.is_mixed else 'decoding-only'} "
+             f"(decode={len(plan.mix.decode_ctx)}, "
+             f"prefill={len(plan.mix.prefill_len)})"]
+    for kind, comps in plan.routes:
+        for c in comps:
+            lines.append(f"  {kind.mixer:>10s}/{kind.ffn:<5s} {c.component:<14s}"
+                         f" opb={c.opb:9.2f} -> {c.path}")
+    lines.append(f"  bandwidth-path FLOP fraction: "
+                 f"{plan.bandwidth_fraction():.3f}")
+    return "\n".join(lines)

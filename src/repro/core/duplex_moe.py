@@ -1,0 +1,218 @@
+"""Dual-path MoE execution — expert co-processing (paper §V-B) on TPU.
+
+The paper splits each MoE layer's experts between xPU (experts serving many
+tokens) and Logic-PIM (experts serving few), chosen by the greedy makespan
+partitioner over latency LUTs. On a TPU both "paths" share the chip, but the
+split still wins in roofline terms (DESIGN.md §2):
+
+  * hot experts  -> the *grouped-GEMM* path: capacity-padded (E_hot, C_hot, d)
+    buffers with MXU-aligned C_hot — compute-dense, weights read once;
+  * cold experts -> the *gather-GEMV* path (kernels/moe_gemv.py): a small
+    (k_cold, C_cold, d) buffer with C_cold sized for the tail. With the
+    baseline single-capacity dispatch, a 64-expert layer at decode batch 128
+    pads every expert to the same capacity C — the top-1 expert's token count
+    — so the padded-FLOP waste is O(E·C_max·d·f). Splitting removes it.
+
+jit constraint: shapes must be static, so the *cold count* ``k_cold`` and the
+two capacities are compile-time constants chosen by the host-side planner
+(`core/partition.py`, one-stage-stale router statistics). The *membership*
+(which experts are hot) is dynamic: experts are ranked by token count inside
+the jitted function and weights are gathered by rank permutation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.ffn import ffn_apply
+from repro.models.moe import RouterOut, route
+from repro.sharding.rules import logical_constraint
+
+
+def _align(x: int, a: int) -> int:
+    return max(a, -(-x // a) * a)
+
+
+def default_capacities(T: int, m: MoEConfig, k_cold: int,
+                       n_shards: int = 1) -> Tuple[int, int]:
+    """(C_hot, C_cold) per dispatch shard of T tokens. Hot capacity covers
+    skewed routing (factor on the uniform expectation); cold capacity covers
+    the tail experts only. MXU alignment (128) applies to the *merged*
+    (n_shards × C) token dim, so per-shard capacity aligns to 128/n."""
+    mean = T * m.top_k / m.num_experts
+    a_hot = max(8 // max(n_shards, 1), 4)
+    a_cold = max(8 // max(n_shards, 1), 2)
+    # hot capacity covers routing skew (~mean + 3 sigma of a multinomial);
+    # cold capacity covers the tail experts only. MXU padding to 128 is the
+    # kernel's own BlockSpec concern, NOT baked into the slot buffers.
+    sigma = (mean * (1.0 - m.top_k / m.num_experts)) ** 0.5
+    c_hot = _align(int(mean + 3.0 * sigma) + 1, a_hot)
+    c_cold = _align(int(mean) + 1, a_cold)
+    return c_hot, c_cold
+
+
+class DuplexDispatch(NamedTuple):
+    src_token: jnp.ndarray      # (n, n_slots) per-shard token per slot (Tl=none)
+    slot_gate: jnp.ndarray      # (n, n_slots) fp32
+    perm: jnp.ndarray           # (E,) expert id per rank (ascending count)
+    counts: jnp.ndarray         # (E,) tokens per expert
+    k_cold: int
+    c_hot: int                  # per-shard hot capacity
+    c_cold: int                 # per-shard cold capacity
+
+
+def duplex_dispatch(router: RouterOut, m: MoEConfig, T: int, *, k_cold: int,
+                    n_shards: int = 1, c_hot: Optional[int] = None,
+                    c_cold: Optional[int] = None) -> DuplexDispatch:
+    """Rank experts by token count; build per-shard slot buffers where rank
+    r < k_cold gets C_cold slots (GEMV path) and the rest get C_hot slots
+    (GEMM path). Capacities are per shard (hierarchical dispatch)."""
+    from repro.models.moe import group_positions, shard_dispatch
+    E, k = m.num_experts, m.top_k
+    n = n_shards
+    Tl = T // n
+    if c_hot is None or c_cold is None:
+        ch, cc = default_capacities(Tl, m, k_cold, n)
+        c_hot = c_hot or ch
+        c_cold = c_cold or cc
+    if k_cold == 0:
+        c_cold = 0
+    n_slots = k_cold * c_cold + (E - k_cold) * c_hot
+
+    counts = router.counts                                    # (E,) global
+    perm = jnp.argsort(counts, stable=True).astype(jnp.int32)  # rank -> expert
+    rank = jnp.zeros((E,), jnp.int32).at[perm].set(
+        jnp.arange(E, dtype=jnp.int32))                        # expert -> rank
+
+    # per-expert slot base + capacity in RANK order (cold ranks first)
+    ranks = jnp.arange(E, dtype=jnp.int32)
+    is_cold_rank = ranks < k_cold
+    base_of_rank = jnp.where(is_cold_rank, ranks * c_cold,
+                             k_cold * c_cold + (ranks - k_cold) * c_hot)
+    cap_of_rank = jnp.where(is_cold_rank, c_cold, c_hot)
+    caps = cap_of_rank[rank]                                   # per expert
+    bases = base_of_rank[rank]
+
+    fe = router.expert_idx.reshape(n, Tl * k)
+    fg = router.gates.reshape(n, Tl * k)
+    src, slot_gate = jax.vmap(
+        lambda e, g: shard_dispatch(e, g, Tl, E, caps, bases, n_slots))(fe, fg)
+    return DuplexDispatch(src, slot_gate, perm, counts,
+                          k_cold, c_hot, c_cold)
+
+
+def _gather_weights(params, perm):
+    """Permute expert weights into rank order (one gather; the Pallas kernels
+    instead index experts via BlockSpec index maps without materializing)."""
+    keys = [k for k in ("wi_gate", "wi_up", "wi", "wo") if k in params]
+    return {k: jnp.take(params[k], perm, axis=0) for k in keys}
+
+
+def _expert_ffn(w, x):
+    """x: (e, ..., d) grouped tokens; w leaves (e, d, f)/(e, f, d)."""
+    if "wi" in w:                # non-gated experts
+        h = jnp.einsum("e...d,edf->e...f", x, w["wi"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        return jnp.einsum("e...f,efd->e...d", h, w["wo"])
+    g = jnp.einsum("e...d,edf->e...f", x, w["wi_gate"])
+    u = jnp.einsum("e...d,edf->e...f", x, w["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("e...f,efd->e...d", h, w["wo"])
+
+
+def duplex_moe_apply(params, cfg: ModelConfig, x, *, k_cold: int,
+                     c_hot: Optional[int] = None, c_cold: Optional[int] = None,
+                     use_kernels: bool = False,
+                     return_stats: bool = False):
+    """Duplex MoE layer: hot experts through the grouped-GEMM path, cold
+    experts through the gather-GEMV path. ``k_cold`` is static (planner).
+
+    Semantics match ``models/moe.py::moe_apply`` for sufficient capacities
+    (tokens over capacity are dropped, standard capacity-MoE behaviour).
+    Dispatch is hierarchical (per batch shard) like the grouped path.
+    """
+    from repro.core.execution import shard_blocks
+    from repro.models.moe import combine_slots, gather_slots
+    m = cfg.moe
+    shape = x.shape
+    x3 = x if x.ndim == 3 else x[None]
+    xb, restore = shard_blocks(x3)                          # (n, Tl, d)
+    n, Tl, _ = xb.shape
+    T = n * Tl
+    x_flat = xb.reshape(T, shape[-1])
+    router = route(params, m, x_flat)
+    disp = duplex_dispatch(router, m, T, k_cold=k_cold, n_shards=n,
+                           c_hot=c_hot, c_cold=c_cold)
+    E = m.num_experts
+    n_cold = disp.k_cold * disp.c_cold          # per-shard cold slots
+
+    x_slots = gather_slots(xb, disp.src_token)              # (n, n_slots, d)
+    w_perm = _gather_weights(params, disp.perm)
+
+    # ---- cold path: (k_cold, n*C_cold, d) — bandwidth-streaming GEMV --------
+    if disp.k_cold > 0:
+        x_cold = x_slots[:, :n_cold].reshape(n, disp.k_cold, disp.c_cold, -1)
+        x_cold = x_cold.transpose(1, 0, 2, 3)   # (k_cold, n, Cc, d)
+        w_cold = {k: v[:disp.k_cold] for k, v in w_perm.items()}
+        if use_kernels:
+            from repro.kernels.ops import moe_gemv
+            y_cold = moe_gemv(w_cold, x_cold.reshape(disp.k_cold,
+                                                     n * disp.c_cold, -1))
+            y_cold = y_cold.reshape(disp.k_cold, n, disp.c_cold, -1)
+        else:
+            y_cold = _expert_ffn(w_cold, x_cold)
+        y_cold = y_cold.transpose(1, 0, 2, 3).reshape(n, n_cold, -1)
+    else:
+        y_cold = jnp.zeros((n, 0, shape[-1]), x_flat.dtype)
+
+    # ---- hot path: (E - k_cold, n, C_hot, d) — MXU grouped GEMM -------------
+    if disp.k_cold < E:
+        x_hot = x_slots[:, n_cold:].reshape(n, E - disp.k_cold, disp.c_hot, -1)
+        x_hot = x_hot.transpose(1, 0, 2, 3)
+        x_hot = logical_constraint(x_hot,
+                                   ("act_exp", "act_cap", None, "act_embed"))
+        w_hot = {k: v[disp.k_cold:] for k, v in w_perm.items()}
+        if use_kernels:
+            from repro.kernels.ops import moe_gemm
+            y_hot = moe_gemm(w_hot, x_hot.reshape(E - disp.k_cold,
+                                                  n * disp.c_hot, -1))
+            y_hot = y_hot.reshape(E - disp.k_cold, n, disp.c_hot, -1)
+        else:
+            y_hot = _expert_ffn(w_hot, x_hot)
+        y_hot = logical_constraint(y_hot,
+                                   ("act_exp", "act_cap", None, "act_embed"))
+        y_hot = y_hot.transpose(1, 0, 2, 3).reshape(
+            n, (E - disp.k_cold) * disp.c_hot, -1)
+    else:
+        y_hot = jnp.zeros((n, 0, shape[-1]), x_flat.dtype)
+
+    y_slots = jnp.concatenate([y_cold.astype(x_flat.dtype),
+                               y_hot.astype(x_flat.dtype)], axis=1)
+    y_slots = y_slots * disp.slot_gate[..., None].astype(y_slots.dtype)
+    y_flat = combine_slots(y_slots, disp.src_token, Tl)
+    if m.num_shared_experts:
+        y_flat = y_flat + ffn_apply(params["shared"], x_flat)
+    y = restore(y_flat).reshape(shape)
+    if return_stats:
+        return y, router
+    return y, router.aux_loss
+
+
+def padded_flops_saved(T: int, m: MoEConfig, k_cold: int, d_model: int,
+                       counts=None) -> float:
+    """Analytic estimate of the padding-FLOP reduction vs the single-capacity
+    grouped path (used by EXPERIMENTS.md §Perf napkin math)."""
+    import numpy as np
+    if counts is None:
+        counts = np.full(m.num_experts, T * m.top_k / m.num_experts)
+    counts = np.asarray(counts, dtype=np.float64)
+    c_single = _align(int(T * m.top_k * m.capacity_factor / m.num_experts) + 1, 8)
+    c_hot, c_cold = default_capacities(T, m, k_cold)
+    base = m.num_experts * c_single
+    order = np.sort(counts)
+    duplex_slots = k_cold * c_cold + (m.num_experts - k_cold) * c_hot
+    per_slot = 6.0 * d_model * m.d_ff_expert
+    return (base - duplex_slots) * per_slot

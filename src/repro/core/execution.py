@@ -1,0 +1,105 @@
+"""Execution-plan context: selects the execution path per layer family.
+
+The serving engine (and the dry-run/benchmarks) trace step functions under an
+``execution_plan(...)`` context; model code consults the active plan to pick:
+
+  * MoE implementation: ``grouped`` (paper-baseline xPU path) or ``duplex``
+    (expert co-processing, C2) with its static planner outputs (k_cold,
+    capacities);
+  * whether attention/MoE lower through the Pallas kernels (TPU) or the XLA
+    reference paths (CPU container, dry-run).
+
+This is the C1 dispatch decision made concrete: `core/dispatch.py` picks the
+paths from Op/B; the chosen StagePlan is rendered into an ExecutionPlan that
+the jitted stage function is traced under.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    moe_impl: str = "grouped"        # grouped | duplex
+    k_cold: int = 0                  # duplex: # cold (bandwidth-path) experts
+    c_hot: Optional[int] = None      # duplex: hot capacity (None = auto)
+    c_cold: Optional[int] = None     # duplex: cold capacity (None = auto)
+    moe_capacity: Optional[int] = None   # grouped: capacity override
+    use_kernels: bool = False        # Pallas kernels (TPU) vs XLA paths
+    decode_kv_block: int = 512
+    # hierarchical MoE dispatch: tokens dispatch into per-shard slot blocks so
+    # the token->slot gather/scatter stays shard-local (no global gather,
+    # which GSPMD lowers to full-buffer all-reduces). (batch-shard count,
+    # seq-shard count) of the activation layout; (1, 1) = single-device.
+    dispatch_grid: tuple = (1, 1)
+    # blockwise-attention tile shapes + score-chain precision (SPerf knobs)
+    attn_q_block: int = 512
+    attn_kv_block: int = 512
+    attn_score_bf16: bool = False
+
+
+DEFAULT_PLAN = ExecutionPlan()
+
+_PLAN: contextvars.ContextVar = contextvars.ContextVar("execution_plan",
+                                                       default=DEFAULT_PLAN)
+
+
+@contextlib.contextmanager
+def execution_plan(plan: ExecutionPlan):
+    token = _PLAN.set(plan)
+    try:
+        yield plan
+    finally:
+        _PLAN.reset(token)
+
+
+def current_plan() -> ExecutionPlan:
+    return _PLAN.get()
+
+
+def shard_blocks(x):
+    """(B, S, d) -> (n, Tl, d) where each row is one (batch-block, seq-block)
+    tile of the active plan's dispatch grid — aligned with the activation
+    sharding so downstream token gathers stay shard-local. Returns
+    (xb, restore) with ``restore`` undoing the blocking on a (T, d) array."""
+    import jax.numpy as jnp
+
+    grid = current_plan().dispatch_grid
+    B, S, d = x.shape
+
+    def divisor(dim, limit):
+        n = max(1, min(limit, dim))
+        while dim % n:
+            n -= 1
+        return n
+
+    nb, ns = divisor(B, grid[0]), divisor(S, grid[1])
+    if nb * ns == 1:
+        return x.reshape(1, B * S, d), lambda y: y.reshape(B, S, d)
+    xb = x.reshape(nb, B // nb, ns, S // ns, d)
+    xb = xb.transpose(0, 2, 1, 3, 4).reshape(nb * ns, -1, d)
+
+    def restore(y_flat):
+        y = y_flat.reshape(nb, ns, B // nb, S // ns, d)
+        return y.transpose(0, 2, 1, 3, 4).reshape(B, S, d)
+
+    return xb, restore
+
+
+def moe_execute(params, cfg: ModelConfig, x, *, return_stats: bool = False):
+    """Route the MoE layer through the path the active plan selects."""
+    plan = current_plan()
+    if plan.moe_impl == "duplex" and plan.k_cold > 0:
+        from repro.core.duplex_moe import duplex_moe_apply
+        return duplex_moe_apply(params, cfg, x, k_cold=plan.k_cold,
+                                c_hot=plan.c_hot, c_cold=plan.c_cold,
+                                use_kernels=plan.use_kernels,
+                                return_stats=return_stats)
+    from repro.models.moe import moe_apply
+    return moe_apply(params, cfg, x, capacity=plan.moe_capacity,
+                     return_stats=return_stats)

@@ -1,0 +1,303 @@
+"""Per-layer, per-stage arithmetic-intensity (Op/B) analysis — paper §III.
+
+The paper's C1 mechanism routes every layer of every continuous-batching stage
+to the processor whose roofline knee matches the layer's Op/B. This module is
+the analysis that drives it: given an architecture and a *stage composition*
+(which sequences are prefilling, which are decoding, and their lengths), it
+computes FLOPs, HBM bytes, and Op/B for every layer component.
+
+All byte counts assume 2-byte (bf16/fp16) weights and activations and count
+*off-chip* traffic of the operands (weights + streamed activations), matching
+the paper's roofline methodology (Fig. 4(b)).
+
+Key facts this reproduces (paper §III-A):
+  * decode attention under GQA: Op/B ≈ deg_grp (4–8 for deg_grp = 4–8);
+  * MoE decode: Op/B ≈ 2 · (tokens per selected expert) ≥ 1, fluctuating with
+    batch size and with prefill arrivals (mixed stages);
+  * FC/QKV/proj GEMMs: Op/B ≈ tokens in the stage (huge for prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import (ATTN, ATTN_BIDIR, ATTN_CROSS, ATTN_LOCAL,
+                                DENSE, MAMBA, MOE, NONE, LayerKind, ModelConfig)
+
+BYTES = 2  # bf16 / fp16
+
+
+# ---------------------------------------------------------------------------
+# Stage composition (continuous batching, paper §II-C)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StageMix:
+    """One continuous-batching stage.
+
+    ``decode_ctx``  — context length (KV entries attended) per decode sequence.
+    ``prefill_len`` — prompt length per prefill sequence (empty => decoding-only
+                      stage; non-empty => mixed stage).
+    """
+    decode_ctx: Tuple[int, ...] = ()
+    prefill_len: Tuple[int, ...] = ()
+
+    @property
+    def is_mixed(self) -> bool:
+        return len(self.prefill_len) > 0
+
+    @property
+    def num_tokens(self) -> int:
+        """Tokens passing through the FC/MoE layers this stage."""
+        return len(self.decode_ctx) + sum(self.prefill_len)
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.decode_ctx) + len(self.prefill_len)
+
+
+def decoding_only(batch: int, ctx: int) -> StageMix:
+    return StageMix(decode_ctx=(ctx,) * batch)
+
+
+def mixed(batch_decode: int, ctx: int, new_requests: int, l_in: int) -> StageMix:
+    return StageMix(decode_ctx=(ctx,) * batch_decode,
+                    prefill_len=(l_in,) * new_requests)
+
+
+# ---------------------------------------------------------------------------
+# Per-component cost records
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OpCost:
+    """FLOPs + off-chip bytes of one layer component in one stage."""
+    name: str
+    flops: float
+    weight_bytes: float
+    act_bytes: float
+
+    @property
+    def bytes(self) -> float:
+        return self.weight_bytes + self.act_bytes
+
+    @property
+    def opb(self) -> float:
+        return self.flops / max(self.bytes, 1.0)
+
+    def merged(self, other: "OpCost", name: Optional[str] = None) -> "OpCost":
+        return OpCost(name or self.name, self.flops + other.flops,
+                      self.weight_bytes + other.weight_bytes,
+                      self.act_bytes + other.act_bytes)
+
+
+def _gemm(name: str, tokens: int, d_in: int, d_out: int) -> OpCost:
+    """Batched tokens × weight GEMM: weights read once (batching effect)."""
+    flops = 2.0 * tokens * d_in * d_out
+    w = BYTES * d_in * d_out
+    a = BYTES * tokens * (d_in + d_out)
+    return OpCost(name, flops, w, a)
+
+
+# ---------------------------------------------------------------------------
+# Attention (paper §II-B, §III-A)
+# ---------------------------------------------------------------------------
+
+def attention_decode_cost(cfg: ModelConfig, ctx: int, *, window: int = 0) -> OpCost:
+    """One decode sequence: 1 query token against `ctx` cached KV entries.
+
+    GQA: per KV head, a (deg_grp × hd) Q slab hits (ctx × hd) K and V —
+    a skinny GEMM. KV bytes dominate => Op/B ≈ 2·deg_grp.
+    """
+    eff_ctx = min(ctx, window) if window > 0 else ctx
+    hd = cfg.resolved_head_dim
+    kv, qpk = cfg.num_kv_heads, cfg.q_per_kv
+    flops = 2.0 * kv * qpk * eff_ctx * hd * 2          # QK^T and PV
+    kv_bytes = BYTES * 2 * kv * eff_ctx * hd           # K and V read
+    act = BYTES * kv * qpk * hd * 2                    # q in, out
+    return OpCost("attn_decode", flops, 0.0, kv_bytes + act)
+
+
+def attention_prefill_cost(cfg: ModelConfig, s: int, *, window: int = 0,
+                           causal: bool = True) -> OpCost:
+    """One prefill sequence of length s (triangular / banded score work)."""
+    hd = cfg.resolved_head_dim
+    h = cfg.num_heads
+    if window > 0:
+        pairs = sum(min(i + 1, window) for i in range(s))
+    elif causal:
+        pairs = s * (s + 1) // 2
+    else:
+        pairs = s * s
+    flops = 2.0 * h * pairs * hd * 2
+    kv_bytes = BYTES * 2 * cfg.num_kv_heads * s * hd
+    act = BYTES * h * s * hd * 2
+    return OpCost("attn_prefill", flops, 0.0, kv_bytes + act)
+
+
+def qkv_proj_cost(cfg: ModelConfig, tokens: int) -> OpCost:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    qkv = _gemm("qkv", tokens, d, (cfg.num_heads + 2 * cfg.num_kv_heads) * hd)
+    proj = _gemm("proj", tokens, cfg.num_heads * hd, d)
+    return qkv.merged(proj, "qkv+proj")
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE (paper §III-A)
+# ---------------------------------------------------------------------------
+
+def ffn_cost(cfg: ModelConfig, tokens: int, d_ff: Optional[int] = None) -> OpCost:
+    f = d_ff if d_ff is not None else cfg.d_ff
+    d = cfg.d_model
+    mats = 3 if cfg.gated_ffn else 2
+    flops = 2.0 * tokens * d * f * mats
+    w = BYTES * mats * d * f
+    a = BYTES * tokens * (2 * d + mats * f)
+    return OpCost("ffn", flops, w, a)
+
+
+def expert_cost(cfg: ModelConfig, tokens: int) -> OpCost:
+    """One expert FFN processing `tokens` tokens. Op/B ≈ 2·tokens/3 for the
+    weight-dominated regime (paper: ≥ 1 since multiple requests share experts)."""
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    mats = 3 if cfg.gated_ffn else 2
+    flops = 2.0 * tokens * d * f * mats
+    w = BYTES * mats * d * f
+    a = BYTES * tokens * (2 * d + mats * f)
+    return OpCost("expert", flops, w, a)
+
+
+def expected_tokens_per_expert(cfg: ModelConfig, tokens: int) -> float:
+    """Uniform-routing expectation (paper's workload model, §VI)."""
+    m = cfg.moe
+    return tokens * m.top_k / m.num_experts
+
+
+def moe_cost(cfg: ModelConfig, tokens: int,
+             counts: Optional[Sequence[int]] = None) -> OpCost:
+    """Whole MoE layer. ``counts`` = per-expert token counts; default uniform.
+    Weights of every *selected* expert are read once."""
+    m = cfg.moe
+    if counts is None:
+        t_e = expected_tokens_per_expert(cfg, tokens)
+        counts = [t_e] * m.num_experts
+    total = OpCost("moe", 0.0, 0.0, 0.0)
+    for c in counts:
+        if c <= 0:
+            continue
+        total = total.merged(expert_cost(cfg, c), "moe")
+    # router
+    total = total.merged(_gemm("router", tokens, cfg.d_model, m.num_experts),
+                         "moe")
+    if m.num_shared_experts:
+        total = total.merged(ffn_cost(cfg, tokens, m.d_ff_shared), "moe")
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Mamba (SSD) — TPU-adaptation addition (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def mamba_decode_cost(cfg: ModelConfig, batch: int) -> OpCost:
+    """Single-token SSD state update per sequence: read+write (H,N,P) state.
+    Op/B ≈ 2 — exactly the paper's Logic-PIM band."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nheads = s.nheads(d)
+    state = nheads * s.d_state * s.headdim
+    flops = batch * (2.0 * 3 * state + 2 * d * (2 * d_in + 2 * s.d_state + nheads)
+                     + 2 * d_in * d)
+    proj_w = BYTES * (d * (2 * d_in + 2 * s.ngroups * s.d_state + nheads)
+                      + d_in * d)
+    state_bytes = BYTES * 2 * batch * 2 * state      # fp32 read + write
+    return OpCost("mamba_decode", flops, proj_w, state_bytes)
+
+
+def mamba_prefill_cost(cfg: ModelConfig, tokens: int) -> OpCost:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nheads = s.nheads(d)
+    proj = _gemm("ssm_proj", tokens, d,
+                 2 * d_in + 2 * s.ngroups * s.d_state + nheads)
+    out = _gemm("ssm_out", tokens, d_in, d)
+    # chunked SSD: intra-chunk (Q×Q per head) + state propagation
+    q = s.chunk_size
+    nchunks = max(tokens // q, 1)
+    intra = 2.0 * nchunks * nheads * q * q * s.headdim * 2
+    inter = 2.0 * tokens * nheads * s.d_state * s.headdim * 2
+    ssd = OpCost("ssd", intra + inter, 0.0,
+                 BYTES * tokens * d_in * 3)
+    return proj.merged(out, "mamba_prefill").merged(ssd, "mamba_prefill")
+
+
+# ---------------------------------------------------------------------------
+# Whole-stage analysis (drives dispatch + Fig. 4 reproduction)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayerStageCost:
+    """Costs of one layer kind in one stage, split by component so that
+    attention co-processing (C3) can route each part separately."""
+    kind: LayerKind
+    components: Tuple[OpCost, ...]
+
+    def total(self) -> OpCost:
+        t = OpCost("total", 0.0, 0.0, 0.0)
+        for c in self.components:
+            t = t.merged(c, "total")
+        return t
+
+
+def layer_stage_cost(cfg: ModelConfig, kind: LayerKind, mix: StageMix,
+                     counts: Optional[Sequence[int]] = None) -> LayerStageCost:
+    comps: List[OpCost] = []
+    T = mix.num_tokens
+    window = cfg.sliding_window if kind.mixer == ATTN_LOCAL else 0
+    if kind.mixer == MAMBA:
+        if mix.decode_ctx:
+            comps.append(mamba_decode_cost(cfg, len(mix.decode_ctx)))
+        if mix.prefill_len:
+            comps.append(mamba_prefill_cost(cfg, sum(mix.prefill_len)))
+    else:
+        comps.append(qkv_proj_cost(cfg, T))
+        dec = OpCost("attn_decode", 0.0, 0.0, 0.0)
+        for ctx in mix.decode_ctx:
+            dec = dec.merged(attention_decode_cost(cfg, ctx, window=window),
+                             "attn_decode")
+        if mix.decode_ctx:
+            comps.append(dec)
+        pre = OpCost("attn_prefill", 0.0, 0.0, 0.0)
+        for s in mix.prefill_len:
+            pre = pre.merged(attention_prefill_cost(cfg, s, window=window),
+                             "attn_prefill")
+        if mix.prefill_len:
+            comps.append(pre)
+        if kind.mixer == ATTN_CROSS:
+            # decoder cross-attention reads encoder KV: decode ≈ attn_decode
+            comps.append(dataclasses.replace(dec, name="cross_attn"))
+    if kind.ffn == DENSE:
+        comps.append(ffn_cost(cfg, T))
+    elif kind.ffn == MOE:
+        comps.append(moe_cost(cfg, T, counts))
+    return LayerStageCost(kind, tuple(comps))
+
+
+def stage_cost_breakdown(cfg: ModelConfig, mix: StageMix,
+                         counts: Optional[Sequence[int]] = None
+                         ) -> Dict[str, OpCost]:
+    """Aggregate component costs over all layers of the model (Fig. 4(a))."""
+    agg: Dict[str, OpCost] = {}
+    for kind in cfg.layer_kinds():
+        lc = layer_stage_cost(cfg, kind, mix, counts)
+        for c in lc.components:
+            key = c.name
+            agg[key] = agg[key].merged(c) if key in agg else c
+    # LM head (per generated token: decode seqs + 1 per prefill seq)
+    out_tokens = len(mix.decode_ctx) + len(mix.prefill_len)
+    agg["lm_head"] = _gemm("lm_head", out_tokens, cfg.d_model, cfg.vocab_size)
+    return agg

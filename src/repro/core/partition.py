@@ -1,0 +1,169 @@
+"""Expert co-processing partitioner — paper §V-B, reproduced unchanged.
+
+Duplex must decide which experts to run on the xPU and which on Logic-PIM.
+The paper's algorithm:
+
+  1. Pre-compute lookup tables (LUTs) of per-expert execution time on each
+     processor as a function of the number of tokens the expert serves.
+  2. At runtime, start from "all experts on xPU", then *progressively assign
+     the experts with the fewest tokens to Logic-PIM*, evaluating the makespan
+     max(sum of xPU expert times, sum of Logic-PIM expert times) at each step,
+     and keep the best split.
+
+Because each path executes its experts sequentially (each expert GEMM uses the
+whole unit), path time = sum over its experts; the two paths run concurrently,
+so stage time = max of the two sums.
+
+This module is shared verbatim by the serving runtime (`core/duplex_moe.py`
+feeds it the router's token counts; the chosen *cold count* selects the static
+GEMV-path width) and by the simulator (`sim/` uses it to model Duplex+PE).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import DeviceSpec, DuplexSpec
+
+
+# ---------------------------------------------------------------------------
+# Latency lookup tables (paper: "preliminarily estimates and stores the
+# processing times for experts in both xPU and Logic-PIM")
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ExpertLUT:
+    """times[t] = seconds to run one expert FFN over t tokens on this device."""
+    device: str
+    times: np.ndarray          # (max_tokens + 1,)
+
+    def __call__(self, tokens) -> np.ndarray:
+        t = np.clip(np.asarray(tokens, dtype=np.int64), 0, len(self.times) - 1)
+        return self.times[t]
+
+
+def build_lut(dev: DeviceSpec, d_model: int, d_ff: int,
+              max_tokens: int, mats: int = 3) -> ExpertLUT:
+    """Expert FFN = ``mats`` GEMMs (3 for SwiGLU, 2 classic): flops =
+    2·mats·t·d·f, bytes = weights (read once) + activations."""
+    t = np.arange(max_tokens + 1, dtype=np.float64)
+    flops = 2.0 * mats * t * d_model * d_ff
+    w_bytes = 2.0 * mats * d_model * d_ff
+    a_bytes = 2.0 * t * (2 * d_model + mats * d_ff)
+    bytes_ = np.where(t > 0, w_bytes + a_bytes, 0.0)
+    times = np.maximum(flops / dev.peak_flops, bytes_ / dev.mem_bw)
+    times = np.where(t > 0, times + dev.t_launch, 0.0)
+    return ExpertLUT(dev.name, times)
+
+
+def build_luts(duplex: DuplexSpec, d_model: int, d_ff: int,
+               max_tokens: int, mats: int = 3) -> Tuple[ExpertLUT, ExpertLUT]:
+    return (build_lut(duplex.xpu, d_model, d_ff, max_tokens, mats),
+            build_lut(duplex.pim, d_model, d_ff, max_tokens, mats))
+
+
+# ---------------------------------------------------------------------------
+# The greedy makespan partitioner (paper §V-B)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Partition:
+    """Result: experts in ``cold`` run on Logic-PIM, the rest on xPU."""
+    cold: Tuple[int, ...]          # expert ids, ascending token count
+    hot: Tuple[int, ...]
+    t_xpu: float                   # sum of xPU expert times
+    t_pim: float                   # sum of PIM expert times
+
+    @property
+    def makespan(self) -> float:
+        return max(self.t_xpu, self.t_pim)
+
+    @property
+    def k_cold(self) -> int:
+        return len(self.cold)
+
+
+def partition_experts(counts: Sequence[int], lut_xpu: ExpertLUT,
+                      lut_pim: ExpertLUT,
+                      max_cold: Optional[int] = None) -> Partition:
+    """Paper's algorithm: all-on-xPU start; move fewest-token experts to PIM
+    one at a time; keep the best makespan seen.
+
+    ``max_cold`` optionally caps the PIM set (runtime uses it to bound the
+    static cold-path width).
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    E = len(counts)
+    order = np.argsort(counts, kind="stable")          # ascending token count
+    tx = lut_xpu(counts)
+    tp = lut_pim(counts)
+
+    t_xpu = float(tx.sum())
+    t_pim = 0.0
+    best = Partition(cold=(), hot=tuple(int(e) for e in order),
+                     t_xpu=t_xpu, t_pim=0.0)
+    limit = E if max_cold is None else min(max_cold, E)
+    for k in range(1, limit + 1):
+        e = int(order[k - 1])
+        t_xpu -= float(tx[e])
+        t_pim += float(tp[e])
+        if max(t_xpu, t_pim) < best.makespan:
+            best = Partition(cold=tuple(int(x) for x in order[:k]),
+                             hot=tuple(int(x) for x in order[k:]),
+                             t_xpu=t_xpu, t_pim=t_pim)
+    return best
+
+
+def optimal_partition_bruteforce(counts: Sequence[int], lut_xpu: ExpertLUT,
+                                 lut_pim: ExpertLUT) -> float:
+    """Exhaustive best makespan over all 2^E subsets — test oracle only."""
+    counts = np.asarray(counts, dtype=np.int64)
+    E = len(counts)
+    assert E <= 16, "bruteforce oracle only for small E"
+    tx = lut_xpu(counts)
+    tp = lut_pim(counts)
+    best = float(tx.sum())
+    for mask in range(1, 1 << E):
+        t_pim = sum(float(tp[e]) for e in range(E) if mask >> e & 1)
+        t_xpu = sum(float(tx[e]) for e in range(E) if not mask >> e & 1)
+        best = min(best, max(t_xpu, t_pim))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Runtime planner: static cold-count selection (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DuplexPlanner:
+    """Serving-side wrapper: jit needs a *static* cold-expert count, so the
+    planner picks ``k_cold`` from the previous stage's router counts
+    (one-stage-stale statistics — standard serving practice) and snaps it to a
+    small set of bucket sizes to bound recompilation.
+    """
+    lut_xpu: ExpertLUT
+    lut_pim: ExpertLUT
+    num_experts: int
+    buckets: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not self.buckets:
+            E = self.num_experts
+            raw = sorted({0, E // 8, E // 4, E // 2, 3 * E // 4, E})
+            self.buckets = tuple(b for b in raw if 0 <= b <= E)
+        self._last_k = 0
+
+    def plan(self, counts: Sequence[int]) -> Partition:
+        return partition_experts(counts, self.lut_xpu, self.lut_pim)
+
+    def k_cold_static(self, counts: Optional[Sequence[int]]) -> int:
+        """Bucketized k_cold for the next jitted stage step."""
+        if counts is None:
+            return self._last_k
+        part = self.plan(counts)
+        k = part.k_cold
+        snapped = min(self.buckets, key=lambda b: (abs(b - k), b))
+        self._last_k = snapped
+        return snapped

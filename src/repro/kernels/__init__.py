@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's two execution paths + jnp oracles.
+
+compute path (xPU analogue):    flash_attn.py, moe_gemm.py
+bandwidth path (Logic-PIM):     decode_attn.py, moe_gemv.py
+wrappers / oracles:             ops.py, ref.py
+"""
+from repro.kernels.ops import (decode_attention, flash_attention, moe_gemm,
+                               moe_gemv)
+
+__all__ = ["decode_attention", "flash_attention", "moe_gemm", "moe_gemv"]

@@ -1,0 +1,112 @@
+"""Pallas TPU flash-decode GQA kernel (the Logic-PIM-analogue attention path).
+
+One new query token per sequence against a long KV cache: Op/B ≈ 2·deg_grp
+(paper §III-A) — bandwidth-bound. The kernel's job is therefore to *stream*
+K/V from HBM through VMEM exactly once at full bandwidth; the (qpk × bk)
+score GEMM rides along. Grid (B, KV, nk) with VMEM online-softmax
+accumulators across the kv-block dimension.
+
+Per-sequence valid lengths arrive as a (B, 1) int32 array (one scalar block
+per grid row) — the continuous-batching engine's sequences have different
+context lengths (paper §II-C) and the mask must honor each.
+
+Validated in interpret mode against ``ref.decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, window: int, softcap: float, scale: float, bk: int,
+                   nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    k_start = ki * bk
+    # skip kv blocks entirely past the valid region (or before the window)
+    needed = k_start < length
+    if window > 0:
+        needed = jnp.logical_and(needed, k_start + bk - 1 > length - 1 - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (qpk, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (qpk, bk)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        valid = kpos < length
+        if window > 0:
+            valid = jnp.logical_and(valid, kpos > length - 1 - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_old = m_ref[...]                              # (qpk, 1)
+        m_new = jnp.maximum(m_old, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new)                          # (qpk, bk)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (qpk, hd)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, lengths, *, window: int = 0,
+                            softcap: float = 0.0, kv_block: int = 512,
+                            interpret: bool = False):
+    """q: (B, KV, qpk, hd); k, v: (B, KV, S, hd) with S % kv_block == 0;
+    lengths: (B,) int32 valid KV entries. -> (B, KV, qpk, hd)."""
+    B, KV, qpk, hd = q.shape
+    S = k.shape[2]
+    assert S % kv_block == 0, (S, kv_block)
+    nk = S // kv_block
+    scale = 1.0 / math.sqrt(hd)
+    lengths2 = lengths.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, window=window, softcap=softcap,
+                               scale=scale, bk=kv_block, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, g, ki: (b, 0)),
+            pl.BlockSpec((1, 1, qpk, hd), lambda b, g, ki: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd), lambda b, g, ki: (b, g, ki, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd), lambda b, g, ki: (b, g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpk, hd), lambda b, g, ki: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qpk, hd), jnp.float32),   # acc
+            pltpu.VMEM((qpk, 1), jnp.float32),    # m
+            pltpu.VMEM((qpk, 1), jnp.float32),    # l
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths2, q, k, v)

@@ -1,0 +1,73 @@
+"""Pallas TPU grouped-expert GEMM kernel (the xPU-analogue MoE path).
+
+Hot experts serve many tokens, so their FFN is compute-bound: the kernel
+tiles (token-block × d_ff-block) MXU GEMMs per expert, fusing the SwiGLU
+gate/up/activation/down chain so the (C, f) hidden activation never leaves
+VMEM. Grid (E, nC, nF); the fp32 (bc, d) output accumulator is carried in
+VMEM across the f-block dimension and written once.
+
+Weight layout: (E, d, f)/(E, f, d) — the expert dim is the leading grid dim,
+so each expert's weights stream HBM->VMEM once per token-block pass
+(weights re-read nC times; hot-path C is chosen so nC is 1 or 2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_gemm_kernel(x_ref, wg_ref, wu_ref, wo_ref, o_ref, acc_ref, *,
+                     nf: int):
+    fi = pl.program_id(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                     # (bc, d)
+    wg = wg_ref[0]                                   # (d, bf)
+    wu = wu_ref[0]
+    wo = wo_ref[0]                                   # (bf, d)
+    g = jax.lax.dot(x, wg, preferred_element_type=jnp.float32)   # (bc, bf)
+    u = jax.lax.dot(x, wu, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    acc_ref[...] += jax.lax.dot(h, wo, preferred_element_type=jnp.float32)
+
+    @pl.when(fi == nf - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gemm_kernel(w, x, *, c_block: int = 256, f_block: int = 512,
+                    interpret: bool = False):
+    """w: dict wi_gate/wi_up (E, d, f), wo (E, f, d); x: (E, C, d).
+    C % c_block == 0 and f % f_block == 0 (ops.py pads). -> (E, C, d)."""
+    E, C, d = x.shape
+    f = w["wi_gate"].shape[2]
+    c_block = min(c_block, C)
+    f_block = min(f_block, f)
+    assert C % c_block == 0 and f % f_block == 0, (C, c_block, f, f_block)
+    nc, nf = C // c_block, f // f_block
+
+    kernel = functools.partial(_moe_gemm_kernel, nf=nf)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(E, nc, nf),
+        in_specs=[
+            pl.BlockSpec((1, c_block, d), lambda e, ci, fi: (e, ci, 0)),
+            pl.BlockSpec((1, d, f_block), lambda e, ci, fi: (e, 0, fi)),
+            pl.BlockSpec((1, d, f_block), lambda e, ci, fi: (e, 0, fi)),
+            pl.BlockSpec((1, f_block, d), lambda e, ci, fi: (e, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c_block, d), lambda e, ci, fi: (e, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((c_block, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w["wi_gate"], w["wi_up"], w["wo"])

@@ -1,0 +1,74 @@
+"""Pallas TPU cold-expert gather-GEMV kernel (the Logic-PIM-analogue MoE path).
+
+Cold experts serve only a handful of tokens (paper §V-B: "experts with
+relatively fewer tokens are processed in Logic-PIM"), so their FFN is
+bandwidth-bound: ~1-8 Op/B — weights dominate the traffic. This kernel is
+laid out to stream each cold expert's 3 weight matrices HBM->VMEM exactly
+once, with the tiny token slab (C_cold × d) resident in VMEM for the whole
+pass. Grid (E_cold, nF): no token-block dimension (the token slab is one
+block), f is streamed in lane-aligned tiles.
+
+Compared to running cold experts through the grouped-GEMM path, this removes
+the capacity padding: the padded-dense path pads every expert to C_hot rows,
+so a 2-token expert burns C_hot/2× its useful FLOPs; here it burns
+C_cold/2×, with C_cold sized to the tail (default 8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_gemv_kernel(x_ref, wg_ref, wu_ref, wo_ref, o_ref, acc_ref, *,
+                     nf: int):
+    fi = pl.program_id(1)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                     # (Cc, d) — stays in VMEM
+    wg = wg_ref[0]                                   # (d, bf) — streamed
+    wu = wu_ref[0]
+    wo = wo_ref[0]                                   # (bf, d) — streamed
+    g = jax.lax.dot(x, wg, preferred_element_type=jnp.float32)   # (Cc, bf)
+    u = jax.lax.dot(x, wu, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    acc_ref[...] += jax.lax.dot(h, wo, preferred_element_type=jnp.float32)
+
+    @pl.when(fi == nf - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gemv_kernel(w, x, *, f_block: int = 256, interpret: bool = False):
+    """w: dict wi_gate/wi_up (Ec, d, f), wo (Ec, f, d); x: (Ec, Cc, d) with a
+    small Cc. f % f_block == 0 (ops.py pads). -> (Ec, Cc, d)."""
+    Ec, Cc, d = x.shape
+    f = w["wi_gate"].shape[2]
+    f_block = min(f_block, f)
+    assert f % f_block == 0, (f, f_block)
+    nf = f // f_block
+
+    kernel = functools.partial(_moe_gemv_kernel, nf=nf)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(Ec, nf),
+        in_specs=[
+            pl.BlockSpec((1, Cc, d), lambda e, fi: (e, 0, 0)),
+            pl.BlockSpec((1, d, f_block), lambda e, fi: (e, 0, fi)),
+            pl.BlockSpec((1, d, f_block), lambda e, fi: (e, 0, fi)),
+            pl.BlockSpec((1, f_block, d), lambda e, fi: (e, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Cc, d), lambda e, fi: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Ec, Cc, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((Cc, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w["wi_gate"], w["wi_up"], w["wo"])

@@ -1,0 +1,140 @@
+"""jit-ready wrappers around the Pallas kernels.
+
+These adapt model-layer layouts to kernel layouts (GQA head grouping,
+block padding) and select the execution mode:
+
+  * on TPU backends: the Pallas kernels proper;
+  * on CPU (this container): ``interpret=True`` executes the kernel bodies in
+    Python for correctness validation against ``ref.py``.
+
+The XLA fallbacks in models/attention.py remain the lowering used by the
+dry-run (Pallas doesn't lower on the CPU backend); kernels are the TPU
+deployment path (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attention_kernel
+from repro.kernels.flash_attn import flash_attention_kernel
+from repro.kernels.moe_gemm import moe_gemm_kernel
+from repro.kernels.moe_gemv import moe_gemv_kernel
+from repro.kernels.ssd_decode import ssd_decode_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, multiple: int, axis: int):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_block: int = 256,
+                    kv_block: int = 256, interpret: bool | None = None):
+    """Model layout: q (B, S, H, hd); k, v (B, S, KV, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qpk = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    q_block = min(q_block, max(S, 8))
+    kv_block = min(kv_block, max(S, 8))
+    # (B, KV, qpk, S, hd) / (B, KV, S, hd)
+    qg = q.reshape(B, S, KV, qpk, hd).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    qg = _pad_to(_pad_to(qg, q_block, 3), kv_block, 3)
+    kg = _pad_to(_pad_to(kg, q_block, 2), kv_block, 2)
+    vg = _pad_to(_pad_to(vg, q_block, 2), kv_block, 2)
+    out = flash_attention_kernel(qg, kg, vg, causal=causal, window=window,
+                                 softcap=softcap, q_block=q_block,
+                                 kv_block=kv_block, seq_len=S,
+                                 interpret=interpret)
+    out = out[:, :, :, :S]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
+                     softcap: float = 0.0, kv_block: int = 512,
+                     interpret: bool | None = None):
+    """Model layout: q (B, 1, H, hd); caches (B, Smax, KV, hd); lengths (B,).
+    -> (B, 1, H, hd)."""
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    qpk = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    kv_block = min(kv_block, max(Smax, 8))
+    qg = q.reshape(B, KV, qpk, hd)
+    kg = _pad_to(k_cache.transpose(0, 2, 1, 3), kv_block, 2)
+    vg = _pad_to(v_cache.transpose(0, 2, 1, 3), kv_block, 2)
+    out = decode_attention_kernel(qg, kg, vg, lengths.astype(jnp.int32),
+                                  window=window, softcap=softcap,
+                                  kv_block=kv_block, interpret=interpret)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# MoE paths
+# ---------------------------------------------------------------------------
+
+def moe_gemm(w, x, *, c_block: int = 256, f_block: int = 512,
+             interpret: bool | None = None):
+    """Hot-expert grouped GEMM. x: (E, C, d) -> (E, C, d)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    E, C, d = x.shape
+    f = w["wi_gate"].shape[2]
+    c_block = min(c_block, C)
+    f_block = min(f_block, f)
+    xp = _pad_to(x, c_block, 1)
+    wg = _pad_to(w["wi_gate"], f_block, 2)
+    wu = _pad_to(w["wi_up"], f_block, 2)
+    wo = _pad_to(w["wo"], f_block, 1)
+    out = moe_gemm_kernel({"wi_gate": wg, "wi_up": wu, "wo": wo}, xp,
+                          c_block=c_block, f_block=f_block,
+                          interpret=interpret)
+    return out[:, :C]
+
+
+def moe_gemv(w, x, *, f_block: int = 256, interpret: bool | None = None):
+    """Cold-expert gather GEMV. x: (Ec, Cc, d) -> (Ec, Cc, d)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    f = w["wi_gate"].shape[2]
+    f_block = min(f_block, f)
+    wg = _pad_to(w["wi_gate"], f_block, 2)
+    wu = _pad_to(w["wi_up"], f_block, 2)
+    wo = _pad_to(w["wo"], f_block, 1)
+    return moe_gemv_kernel({"wi_gate": wg, "wi_up": wu, "wo": wo}, x,
+                           f_block=f_block, interpret=interpret)
+
+
+def ssd_decode(state, x, dt, a_log, b, c, d, *, h_block: int = 8,
+               interpret: bool | None = None):
+    """Mamba-2 decode state update (the SSM bandwidth-path kernel)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    H = state.shape[1]
+    hb = h_block
+    while H % hb:
+        hb -= 1
+    return ssd_decode_kernel(state, x, dt, a_log, b, c, d, h_block=hb,
+                             interpret=interpret)
+
+
+# re-exported oracles (tests import from one place)
+flash_attention_ref = ref.flash_attention_ref
+decode_attention_ref = ref.decode_attention_ref
+moe_ffn_ref = ref.moe_ffn_ref
+ssd_decode_ref = ref.ssd_decode_ref

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+Shapes follow the kernel calling conventions (grouped per KV head), not the
+model-layer conventions; ``ops.py`` adapts between them.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    """q: (B, KV, qpk, S, hd); k, v: (B, KV, S, hd) -> (B, KV, qpk, S, hd)."""
+    B, KV, qpk, S, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bgpqh,bgkh->bgpqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgpqk,bgkh->bgpqh", p.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, window: int = 0,
+                         softcap: float = 0.0):
+    """q: (B, KV, qpk, hd); k, v: (B, KV, S, hd); lengths: (B,) valid KV count.
+    Returns (B, KV, qpk, hd)."""
+    B, KV, qpk, hd = q.shape
+    S = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bgph,bgkh->bgpk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(S)[None]                       # (1, S)
+    valid = kpos < lengths[:, None]
+    if window > 0:
+        valid &= kpos > (lengths[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgpk,bgkh->bgph", p.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def moe_ffn_ref(w, x):
+    """Grouped expert SwiGLU FFN. x: (E, C, d); w: dict wi_gate/wi_up (E,d,f),
+    wo (E,f,d). Returns (E, C, d). Oracle for both moe_gemm and moe_gemv."""
+    g = jnp.einsum("ecd,edf->ecf", x, w["wi_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", x, w["wi_up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    out = jnp.einsum("ecf,efd->ecd", h, w["wo"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def ssd_decode_ref(state, x, dt, a_log, b, c, d):
+    """Mamba-2 single-token state update. state (B,H,N,P) fp32; x (B,H,P);
+    dt (B,H); a_log, d (H,); b, c (B,N). Returns (y, new_state)."""
+    dt = dt.astype(jnp.float32)
+    a = jnp.exp(dt * (-jnp.exp(a_log.astype(jnp.float32)))[None, :])
+    upd = jnp.einsum("bh,bN,bhp->bhNp", dt, b.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    new_state = state * a[:, :, None, None] + upd
+    y = jnp.einsum("bN,bhNp->bhp", c.astype(jnp.float32), new_state)
+    y = y + d.astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), new_state

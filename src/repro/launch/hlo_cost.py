@@ -1,0 +1,583 @@
+"""Trip-count-aware HLO cost walker — the dry-run's profiler.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scanned program (layers scan, microbatch scan, blockwise-attention scan)
+under-reports FLOPs/bytes — and collectives inside scan bodies (e.g. the
+per-layer FSDP all-gather) vanish from a naive HLO grep. This walker parses
+the post-optimization, SPMD-partitioned HLO text, multiplies every
+computation's cost by its call-site multiplier (while trip counts come from
+``backend_config={"known_trip_count":{"n":...}}``), and returns:
+
+  * flops            — dot-dominated analytic FLOPs (2·M·N·K + elementwise)
+  * bytes            — HBM-traffic proxy: operands+results of *top-level*
+                       (unfused) instructions; fusion internals are free
+  * collective_bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+                       (× loop multipliers), per kind
+  * top instructions — heaviest (flops × multiplier) sites with source
+                       metadata, for §Perf hillclimbing
+
+All quantities are per-device (the partitioned module is per-device).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# ops that move no data / do no work (layout & bookkeeping)
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "add-dependency", "partition-id", "replica-id",
+    "opt-barrier", "get-dimension-size", "domain",
+    # -done halves of async pairs (cost carried on -start)
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+    "async-done", "copy-done", "send-done", "recv-done",
+}
+
+# element-wise-ish ops: flops = elems(result), bytes = operands + result
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "remainder", "and", "or", "xor", "not", "negate", "abs", "sign",
+    "compare", "select", "clamp", "exponential", "exponential-minus-one",
+    "log", "log-plus-one", "tanh", "rsqrt", "sqrt", "cbrt", "sine", "cosine",
+    "tan", "atan2", "logistic", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "convert", "is-finite", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "popcnt", "clz",
+    "real", "imag", "complex", "erf", "map", "stochastic-convert",
+    "bitcast-convert",
+}
+
+# pure-data-movement ops: flops 0, bytes counted per-op below (slice-like
+# ops touch only the slice, not the full operand; DUS writes only the update
+# region under buffer aliasing; copies are CPU-backend artifacts TPU elides)
+_MOVEMENT = {
+    "copy", "slice", "dynamic-slice", "dynamic-update-slice", "broadcast",
+    "transpose", "concatenate", "pad", "reverse", "gather", "scatter",
+    "iota", "rng", "rng-bit-generator", "copy-start", "send", "recv",
+    "set-dimension-size", "sort",
+}
+
+_RESULT_ONLY = {"broadcast", "iota", "rng", "rng-bit-generator"}
+_SLICE_LIKE = {"slice", "dynamic-slice"}
+_ZERO_BYTES = {"copy", "copy-start", "send", "recv", "set-dimension-size"}
+
+
+@dataclass
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.elems * _DTYPE_BYTES.get(self.dtype, 0)
+
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def parse_shapes(type_str: str) -> List[Shape]:
+    """All array shapes inside a (possibly tuple) type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = tuple(int(d) for d in m.group(2).split(",")) \
+            if m.group(2) else ()
+        out.append(Shape(m.group(1), dims))
+    return out
+
+
+def type_bytes(type_str: str) -> int:
+    return sum(s.bytes for s in parse_shapes(type_str))
+
+
+def type_elems(type_str: str) -> int:
+    return sum(s.elems for s in parse_shapes(type_str))
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    args: List[str]
+    attrs: str
+    metadata_op: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    # symbol table: instruction name -> result type string
+    types: Dict[str, str] = field(default_factory=dict)
+
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_META_RE = re.compile(r'op_name="([^"]*)"')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _split_args_attrs(rest: str) -> Tuple[List[str], str]:
+    """rest = everything after 'op(' — split operand list from attrs at the
+    matching close paren."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args_str, attrs = rest[:i], rest[i + 1:]
+                break
+    else:
+        args_str, attrs = rest, ""
+    args = []
+    d = 0
+    cur = ""
+    for ch in args_str:
+        if ch in "([{":
+            d += 1
+        elif ch in ")]}":
+            d -= 1
+        if ch == "," and d == 0:
+            args.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        args.append(cur.strip())
+    return args, attrs
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            if ("->" in line and line.rstrip().endswith("{")
+                    and _COMP_HEAD_RE.match(line.strip())):
+                m = _COMP_HEAD_RE.match(line.strip())
+                cur = Computation(m.group(1))
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        args, attrs = _split_args_attrs(rest)
+        meta = _META_RE.search(attrs)
+        instr = Instr(name, type_str.strip(), op, args, attrs,
+                      meta.group(1) if meta else "")
+        cur.instrs.append(instr)
+        cur.types[name] = instr.type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective: Dict[str, float] = field(default_factory=dict)
+    transcendental: float = 0.0
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendental += other.transcendental * mult
+        for k, v in other.collective.items():
+            self.collective[k] = self.collective.get(k, 0.0) + v * mult
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
+
+    def tag(self, op: str) -> None:
+        if self.bytes:
+            self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + self.bytes
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective.values())
+
+
+@dataclass
+class Site:
+    """A heavy instruction site (for the §Perf profile)."""
+    op: str
+    flops: float
+    bytes: float
+    mult: float
+    metadata: str
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, Cost] = {}
+        self.sites: List[Site] = []
+        self.entry = self._find_entry(text)
+
+    @staticmethod
+    def _find_entry(text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+        return m.group(1) if m else ""
+
+    # ------------------------------------------------------------------
+    def _operand_bytes(self, comp: Computation, instr: Instr) -> int:
+        total = 0
+        for a in instr.args:
+            ref = a.lstrip("%")
+            t = comp.types.get(ref)
+            if t is None:
+                # inline-typed operand "f32[8] %x"
+                total += type_bytes(a)
+            else:
+                total += type_bytes(t)
+        return total
+
+    def _dot_flops(self, comp: Computation, instr: Instr) -> float:
+        out_elems = type_elems(instr.type_str)
+        contract = 1
+        m = _CONTRACT_RE.search(instr.attrs)
+        lhs_ref = instr.args[0].lstrip("%") if instr.args else ""
+        lhs_t = comp.types.get(lhs_ref, instr.args[0] if instr.args else "")
+        lhs_shapes = parse_shapes(lhs_t)
+        if m and lhs_shapes:
+            dims = [int(d) for d in m.group(1).split(",") if d]
+            for d in dims:
+                if d < len(lhs_shapes[0].dims):
+                    contract *= lhs_shapes[0].dims[d]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, comp: Computation, instr: Instr) -> float:
+        # flops ~= 2 * out_elems * (kernel spatial * in_channels)
+        out_elems = type_elems(instr.type_str)
+        if len(instr.args) < 2:
+            return 0.0
+        k_ref = instr.args[1].lstrip("%")
+        k_t = comp.types.get(k_ref, instr.args[1])
+        ks = parse_shapes(k_t)
+        if not ks:
+            return 0.0
+        k_elems = ks[0].elems
+        # kernel elems = spatial * in_ch * out_ch; out_ch is in out_elems
+        out_ch = ks[0].dims[-1] if ks[0].dims else 1
+        return 2.0 * out_elems * max(k_elems // max(out_ch, 1), 1)
+
+    # ------------------------------------------------------------------
+    def comp_cost(self, name: str, depth: int = 0) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        cost = Cost()
+        if comp is None or depth > 64:
+            self._memo[name] = cost
+            return cost
+        self._memo[name] = cost          # break cycles defensively
+        for ins in comp.instrs:
+            ic = self._instr_cost(comp, ins, depth)
+            if not ic.bytes_by_op:       # leaf op (not while/cond aggregate)
+                ic.tag(ins.op)
+            cost.add(ic)
+        return cost
+
+    def _instr_cost(self, comp: Computation, ins: Instr, depth: int) -> Cost:
+        op = ins.op
+        c = Cost()
+        if op in _FREE_OPS:
+            return c
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVE_KINDS:
+            ob = self._operand_bytes(comp, ins)
+            c.collective[base] = float(ob)
+            c.bytes = float(ob + type_bytes(ins.type_str))
+            return c
+        if op == "while":
+            m = _TRIP_RE.search(ins.attrs)
+            trip = int(m.group(1)) if m else 1
+            mcb = _COND_BODY_RE.search(ins.attrs)
+            if mcb:
+                cond, body = mcb.groups()
+                body_cost = self.comp_cost(body, depth + 1)
+                cond_cost = self.comp_cost(cond, depth + 1)
+                c.add(body_cost, trip)
+                c.add(cond_cost, trip)
+                self._record_site(ins, body_cost, trip)
+            return c
+        if op == "conditional":
+            mb = _BRANCHES_RE.search(ins.attrs)
+            if mb:
+                branch_costs = [self.comp_cost(b.strip().lstrip("%"),
+                                               depth + 1)
+                                for b in mb.group(1).split(",") if b.strip()]
+                if branch_costs:
+                    worst = max(branch_costs, key=lambda x: x.flops + x.bytes)
+                    c.add(worst)
+            return c
+        if op in ("fusion", "call", "async-start", "custom-call"):
+            m = _CALLS_RE.search(ins.attrs) or _APPLY_RE.search(ins.attrs)
+            called = m.group(1) if m else None
+            inner = self.comp_cost(called, depth + 1) if called else Cost()
+            c.flops = inner.flops
+            c.transcendental = inner.transcendental
+            for k, v in inner.collective.items():
+                c.collective[k] = v
+            if called and self._is_layout_fusion(called):
+                # convert/bitcast/copy-only fusion: fuses into its consumers
+                # on TPU; the consumers' operand accounting covers the reads
+                c.bytes = 0.0
+                return c
+            # fusion HBM traffic = operands touched + outputs written
+            # (internals stay in VREG/VMEM); slice-aware on both sides
+            c.bytes = float(self._fusion_operand_bytes(comp, ins, called)
+                            + self._fusion_output_bytes(ins, called))
+            self._record_site(ins, c, 1.0)
+            return c
+        if op == "dot":
+            c.flops = self._dot_flops(comp, ins)
+            c.bytes = float(self._operand_bytes(comp, ins)
+                            + type_bytes(ins.type_str))
+            self._record_site(ins, c, 1.0)
+            return c
+        if op == "convolution":
+            c.flops = self._conv_flops(comp, ins)
+            c.bytes = float(self._operand_bytes(comp, ins)
+                            + type_bytes(ins.type_str))
+            return c
+        if op in ("reduce", "reduce-window", "select-and-scatter"):
+            c.flops = float(sum(type_elems(comp.types.get(a.lstrip("%"), a))
+                                for a in ins.args[:1]))
+            c.bytes = float(self._operand_bytes(comp, ins)
+                            + type_bytes(ins.type_str))
+            return c
+        if op == "convert":
+            # dtype converts fuse into their consumers on TPU (and the
+            # bf16<->f32 ones are pure CPU-backend artifacts): no HBM traffic
+            return c
+        if op in _ELEMENTWISE:
+            c.flops = float(type_elems(ins.type_str))
+            c.bytes = float(self._operand_bytes(comp, ins)
+                            + type_bytes(ins.type_str))
+            if op in ("exponential", "tanh", "log", "logistic", "power",
+                      "sine", "cosine", "erf"):
+                c.transcendental = c.flops
+            return c
+        if op in _MOVEMENT:
+            c.bytes = self._movement_bytes(comp, ins)
+            return c
+        # unknown op: count data movement only
+        c.bytes = float(self._operand_bytes(comp, ins)
+                        + type_bytes(ins.type_str))
+        return c
+
+    def _movement_bytes(self, comp: Computation, ins: Instr) -> float:
+        op = ins.op
+        if op in _ZERO_BYTES:
+            # loop-carried copies are CPU-lowering artifacts (TPU aliases)
+            return 0.0
+        if op in _RESULT_ONLY:
+            return float(type_bytes(ins.type_str))
+        if op in _SLICE_LIKE:
+            # reads only the slice, writes the slice
+            return 2.0 * type_bytes(ins.type_str)
+        if op == "dynamic-update-slice":
+            # aliased in-place write: only the update region is touched
+            upd = ins.args[1].lstrip("%") if len(ins.args) > 1 else ""
+            t = comp.types.get(upd, ins.args[1] if len(ins.args) > 1 else "")
+            return 2.0 * type_bytes(t)
+        if op == "gather":
+            idx_t = comp.types.get(ins.args[1].lstrip("%"), "") \
+                if len(ins.args) > 1 else ""
+            return 2.0 * type_bytes(ins.type_str) + type_bytes(idx_t)
+        if op == "scatter":
+            upd_t = comp.types.get(ins.args[2].lstrip("%"), "") \
+                if len(ins.args) > 2 else ""
+            idx_t = comp.types.get(ins.args[1].lstrip("%"), "") \
+                if len(ins.args) > 1 else ""
+            return 3.0 * type_bytes(upd_t) + type_bytes(idx_t)
+        # transpose/concatenate/pad/reverse/sort genuinely stream operands
+        return float(self._operand_bytes(comp, ins)
+                     + type_bytes(ins.type_str))
+
+    def _is_layout_fusion(self, called: str) -> bool:
+        comp = self.comps.get(called)
+        if comp is None:
+            return False
+        ok = self._PASSTHRU | _FREE_OPS
+        return all(i.op in ok for i in comp.instrs)
+
+    @staticmethod
+    def _param_name(comp: Optional[Computation], idx: int) -> Optional[str]:
+        if comp is None:
+            return None
+        for pi in comp.instrs:
+            if pi.op == "parameter" and pi.args:
+                m = re.match(r"(\d+)", pi.args[0])
+                if m and int(m.group(1)) == idx:
+                    return pi.name
+        return None
+
+    def _param_uses(self, called: str) -> Dict[int, List[Instr]]:
+        """parameter index -> instructions consuming it inside a fused comp."""
+        comp = self.comps.get(called)
+        out: Dict[int, List[Instr]] = {}
+        if comp is None:
+            return out
+        pname_to_idx = {}
+        for ins in comp.instrs:
+            if ins.op == "parameter":
+                m = re.match(r"(\d+)", ins.args[0]) if ins.args else None
+                if m:
+                    pname_to_idx[ins.name] = int(m.group(1))
+        for ins in comp.instrs:
+            for a in ins.args:
+                ref = a.lstrip("%")
+                if ref in pname_to_idx:
+                    out.setdefault(pname_to_idx[ref], []).append(ins)
+        return out
+
+    def _fusion_operand_bytes(self, comp: Computation, ins: Instr,
+                              called: Optional[str]) -> float:
+        """Bytes actually READ from each fusion operand: if an operand only
+        feeds slice-like ops inside the fused computation (the scanned-layer
+        weight-slice pattern), only the slice is read, not the whole stack;
+        if it is only the BASE of in-place updates (scatter / DUS on the KV
+        cache), it is not read at all (aliased read-modify-write counted on
+        the output side)."""
+        if called is None:
+            return float(self._operand_bytes(comp, ins))
+        fused = self.comps.get(called)
+        total = 0.0
+        for i, a in enumerate(ins.args):
+            ref = a.lstrip("%")
+            full = float(type_bytes(comp.types.get(ref, a)))
+            pname = self._param_name(fused, i)
+            if pname is None:
+                total += full
+                continue
+            total += self._touched_bytes(fused, pname, full)
+        return total
+
+    def _touched_bytes(self, fused: Computation, pname: str,
+                       full: float) -> float:
+        """Transitive walk from a fused parameter through passthrough ops
+        (bitcast/reshape/convert/copy — all fused away on TPU) to its
+        terminal uses: slice-like uses touch only their result; being the
+        BASE of a scatter/DUS touches nothing on the read side (in-place);
+        any real compute use reads the whole operand."""
+        consumers: Dict[str, List[Instr]] = {}
+        for ins2 in fused.instrs:
+            for a2 in ins2.args:
+                consumers.setdefault(a2.lstrip("%"), []).append(ins2)
+        frontier = [pname]
+        seen = set()
+        touched = 0.0
+        while frontier:
+            nm = frontier.pop()
+            for use in consumers.get(nm, []):
+                key = (nm, use.name)
+                if key in seen:
+                    continue
+                seen.add(key)
+                if use.op in self._PASSTHRU or use.op == "convert":
+                    frontier.append(use.name)
+                elif use.op in _SLICE_LIKE or use.op == "gather":
+                    touched += type_bytes(use.type_str)
+                elif use.op in ("dynamic-update-slice", "scatter") and \
+                        use.args and use.args[0].lstrip("%") == nm:
+                    continue      # base of an in-place update
+                else:
+                    return full   # real compute reads it all
+        return min(touched, full)
+
+    _PASSTHRU = {"bitcast", "reshape", "transpose", "copy", "convert"}
+
+    def _fusion_output_bytes(self, ins: Instr, called: Optional[str]) -> float:
+        """Bytes actually WRITTEN. In-place update chains (the KV-cache
+        append pattern: param -> scatter -> dynamic-update-slice -> root)
+        write only their update regions — XLA aliases the base buffer
+        through scan, so counting the full stacked cache per layer inflates
+        decode-cell memory terms ~40x."""
+        full = float(type_bytes(ins.type_str))
+        comp = self.comps.get(called) if called else None
+        if comp is None or not comp.instrs:
+            return full
+        by_name = {i.name: i for i in comp.instrs}
+        cur = comp.instrs[-1]
+        touched = 0.0
+        for _ in range(32):
+            if cur.op in self._PASSTHRU and cur.args:
+                nxt = by_name.get(cur.args[0].lstrip("%"))
+                if nxt is None:
+                    return full
+                cur = nxt
+                continue
+            if cur.op == "dynamic-update-slice" and len(cur.args) > 1:
+                upd = by_name.get(cur.args[1].lstrip("%"))
+                if upd is not None and upd.op in ("scatter",
+                                                  "dynamic-update-slice"):
+                    # nested update chain: recurse into the produced update
+                    cur = upd
+                    continue
+                t = comp.types.get(cur.args[1].lstrip("%"), "")
+                touched += 2.0 * type_bytes(t) if t else full
+                cur = by_name.get(cur.args[0].lstrip("%"))
+                if cur is None or cur.op == "parameter":
+                    return touched if touched else full
+                continue
+            if cur.op == "scatter" and len(cur.args) > 2:
+                t = comp.types.get(cur.args[2].lstrip("%"), "")
+                touched += 2.0 * type_bytes(t) if t else full
+                cur = by_name.get(cur.args[0].lstrip("%"))
+                if cur is None or cur.op == "parameter":
+                    return touched if touched else full
+                continue
+            return full if not touched else touched + full * 0.0
+        return full
+
+    def _record_site(self, ins: Instr, cost: Cost, mult: float) -> None:
+        if cost.flops * mult > 0:
+            self.sites.append(Site(ins.op, cost.flops * mult,
+                                   cost.bytes * mult, mult, ins.metadata_op))
+
+    # ------------------------------------------------------------------
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+    def top_sites(self, n: int = 20) -> List[Site]:
+        return sorted(self.sites, key=lambda s: -s.flops)[:n]
+
+
+def analyze(text: str) -> Tuple[Cost, List[Site]]:
+    m = HloCostModel(text)
+    return m.total(), m.top_sites()

@@ -1,0 +1,386 @@
+"""Step-function builders shared by train.py / serve.py / dryrun.py.
+
+Each builder returns ``(fn, in_shardings, out_shardings)`` ready for
+``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*specs)``:
+
+  * ``make_train_step``   — microbatched grad-accumulation AdamW step
+    (remat per RunConfig, fp32 accumulation, optional int8-EF cross-pod
+    gradient compression);
+  * ``make_prefill_step`` — full-prompt forward populating the decode cache
+    (the serving mixed-stage compute path);
+  * ``make_serve_step``   — one-token decode against the cache (the
+    bandwidth path; Duplex MoE when the plan says so).
+
+Everything is traced under a ``sharding_context`` so the models' logical
+constraints resolve against the cell's rules.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.execution import ExecutionPlan, execution_plan
+from repro.launch.specs import (batch_axes, batch_specs, cache_axes,
+                                cell_input_axes, cell_input_specs,
+                                decode_max_len)
+from repro.models.model import (abstract_model, decode_step, loss_fn,
+                                model_specs, prefill)
+from repro.models.param import abstract_params, logical_axes
+from repro.sharding.rules import (ShardingContext, fit_pspec_to_shape,
+                                  resolve_pspec, rules_for, sharding_context)
+from repro.training.optimizer import OptConfig, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Rules per cell
+# ---------------------------------------------------------------------------
+
+def build_rules(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                run: RunConfig) -> Dict[str, Any]:
+    multi_pod = "pod" in mesh.axis_names
+    model_ways = mesh.shape["model"]
+    rules = rules_for(shape.kind, shape.global_batch, multi_pod=multi_pod,
+                      moe_sharding=(run.moe_sharding if run.moe_sharding
+                                    != "auto" else
+                                    ("auto" if multi_pod else "tp")))
+    batch_axes_ = ("pod", "data") if multi_pod else ("data",)
+    if shape.kind == "decode":
+        if shape.global_batch == 1:
+            # long-context decode: context parallelism — shard the KV sequence
+            # over every available axis (batch cannot be sharded).
+            rules["act_batch"] = None
+            rules["act_kv_seq"] = batch_axes_ + ("model",)
+            rules["act_kv_heads"] = None
+        else:
+            rules["act_batch"] = batch_axes_ if len(batch_axes_) > 1 \
+                else batch_axes_[0]
+            if cfg.num_kv_heads % model_ways == 0:
+                # TP attention: KV heads shard cleanly — no cross-shard softmax
+                rules["act_kv_heads"] = "model"
+                rules["act_kv_seq"] = None
+            else:
+                # context-parallel fallback: shard the cache sequence instead
+                rules["act_kv_heads"] = None
+                rules["act_kv_seq"] = "model"
+    else:
+        rules["act_batch"] = batch_axes_ if len(batch_axes_) > 1 \
+            else batch_axes_[0]
+        if run.seq_shard_activations:
+            # sequence parallelism: residuals/saved activations shard their
+            # seq dim over `model` (bounds remat memory for the big archs)
+            rules["act_seq"] = "model"
+    return rules
+
+
+def dispatch_grid(mesh: Mesh, rules) -> tuple:
+    """(batch-shard, seq-shard) tile counts for hierarchical MoE dispatch,
+    mirroring the activation layout the rules produce."""
+    def ways(rule):
+        if rule is None:
+            return 1
+        axes = (rule,) if isinstance(rule, str) else rule
+        w = 1
+        for a in axes:
+            w *= mesh.shape[a]
+        return w
+    return (ways(rules.get("act_batch")), ways(rules.get("act_seq")))
+
+
+def tree_shardings(mesh: Mesh, rules, axes_tree, spec_tree):
+    """NamedSharding tree from (logical axes, abstract shapes)."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+    def leaf(a, s):
+        spec = resolve_pspec(a, rules)
+        spec = fit_pspec_to_shape(spec, s.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(leaf, axes_tree, spec_tree, is_leaf=is_axes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def constrain_tree(tree, axes_tree, mesh: Mesh, rules):
+    """with_sharding_constraint over a pytree of traced values (e.g. the
+    fp32 grad accumulator — without this XLA materializes it replicated)."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+    def leaf(a, x):
+        spec = resolve_pspec(a, rules)
+        spec = fit_pspec_to_shape(spec, x.shape, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(leaf, axes_tree, tree, is_leaf=is_axes)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def auto_num_micro(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   run: RunConfig, *, target_bytes: float = 1.2e9) -> int:
+    """Pick the microbatch count: smallest n (dividing GB, with GB/n still
+    divisible by the data ways when possible) whose per-chip saved residual
+    estimate fits the target."""
+    if run.microbatch_size:
+        return max(1, shape.global_batch // run.microbatch_size)
+    dp = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    mp = mesh.shape["model"] if run.seq_shard_activations else 1
+    S = shape.seq_len if not cfg.is_encoder_decoder else shape.seq_len // 2
+    per_seq = cfg.num_layers * S * cfg.d_model * 2 / mp
+    # MoE dispatch transient (one layer at a time): (E,C,d) in + out buffers,
+    # capacity sharded over data alongside the batch
+    moe_per_seq = 0.0
+    if cfg.moe is not None:
+        m = cfg.moe
+        moe_per_seq = S * m.top_k * m.capacity_factor * cfg.d_model * 2 * 2
+
+    n = 1
+    while n < shape.global_batch:
+        mb = shape.global_batch // n
+        if mb % dp == 0 and (mb / dp) * (per_seq + moe_per_seq) <= target_bytes:
+            break
+        n *= 2
+    return min(n, max(shape.global_batch // dp, 1))
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    run: RunConfig, opt: OptConfig):
+    """Returns (fn(state, batch) -> (state, metrics), in_shardings,
+    out_shardings, state_axes)."""
+    rules = build_rules(cfg, shape, mesh, run)
+    n_micro = auto_num_micro(cfg, shape, mesh, run)
+    use_compression = run.grad_compression == "int8_ef" and \
+        "pod" in mesh.axis_names
+
+    paxes = logical_axes(model_specs(cfg))
+    state_axes = {"params": paxes,
+                  "opt": {"mu": paxes, "nu": paxes, "count": ()},
+                  "step": ()}
+    plan = ExecutionPlan(moe_impl="grouped", use_kernels=False,
+                         dispatch_grid=dispatch_grid(mesh, rules),
+                         attn_q_block=run.attn_q_block,
+                         attn_kv_block=run.attn_kv_block,
+                         attn_score_bf16=run.attn_score_bf16)
+
+    def train_step(state, batch):
+        with sharding_context(mesh, rules), execution_plan(plan):
+            params = state["params"]
+
+            def micro_loss(p, mb):
+                loss, metrics = loss_fn(p, cfg, mb, remat=run.remat_policy)
+                return loss, metrics
+
+            grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+            if n_micro == 1:
+                (loss, metrics), grads = grad_fn(params, batch)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.float32), grads)
+                grads = constrain_tree(grads, paxes, mesh, rules)
+            else:
+                def split(x):
+                    return x.reshape((n_micro, x.shape[0] // n_micro)
+                                     + x.shape[1:])
+
+                mbs = jax.tree_util.tree_map(split, batch)
+
+                def body(acc, mb):
+                    (l, m), g = grad_fn(params, mb)
+                    acc_g, acc_l = acc
+                    acc_g = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                    acc_g = constrain_tree(acc_g, paxes, mesh, rules)
+                    return (acc_g, acc_l + l), None
+
+                zeros = constrain_tree(
+                    jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                    paxes, mesh, rules)
+                (grads, loss_sum), _ = jax.lax.scan(
+                    body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+                grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+                loss = loss_sum / n_micro
+                metrics = {}
+            if use_compression:
+                from repro.training.compression import cross_pod_mean_int8
+                err = state.get("ef_err")
+                grads, new_err = cross_pod_mean_int8(grads, err, mesh,
+                                                     axis="pod")
+            new_params, new_opt, opt_metrics = adamw_update(
+                params, grads, state["opt"], opt, step=state["step"])
+            new_state = {"params": new_params, "opt": new_opt,
+                         "step": state["step"] + 1}
+            if use_compression:
+                new_state["ef_err"] = new_err
+            out_metrics = {"loss": loss, **opt_metrics}
+            return new_state, out_metrics
+
+    ab_params = abstract_params(model_specs(cfg))
+    ab_state = {
+        "params": ab_params,
+        "opt": {"mu": jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                    ab_params),
+                "nu": jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                    ab_params),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)},
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if use_compression:
+        ab_state["ef_err"] = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), ab_params)
+        state_axes = dict(state_axes, ef_err=paxes)
+
+    b_specs = batch_specs(cfg, shape)
+    state_sh = tree_shardings(mesh, rules, state_axes_expand(state_axes),
+                              ab_state)
+    batch_sh = tree_shardings(mesh, rules, batch_axes(cfg, shape), b_specs)
+    metric_sh = replicated(mesh)
+    in_sh = (state_sh, batch_sh)
+    out_sh = (state_sh, {"loss": metric_sh, "grad_norm": metric_sh,
+                         "lr": metric_sh})
+    in_specs = (ab_state, b_specs)
+    return train_step, in_specs, in_sh, out_sh, n_micro, rules
+
+
+def state_axes_expand(state_axes):
+    """Replace scalar () markers with axis tuples usable by tree_shardings."""
+    def fix(x):
+        return x if x != () else ()
+    # () is already a valid "all-replicated" axes tuple for 0-d leaves
+    return state_axes
+
+
+# ---------------------------------------------------------------------------
+# Prefill step (serving compute path; prefill_32k cells)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      run: RunConfig):
+    rules = build_rules(cfg, shape, mesh, run)
+    plan = ExecutionPlan(moe_impl="grouped", use_kernels=False,
+                         dispatch_grid=dispatch_grid(mesh, rules),
+                         attn_q_block=run.attn_q_block,
+                         attn_kv_block=run.attn_kv_block,
+                         attn_score_bf16=run.attn_score_bf16)
+    max_len = decode_max_len(cfg, shape)
+
+    def prefill_step(params, batch):
+        with sharding_context(mesh, rules), execution_plan(plan):
+            from repro.models.model import init_cache
+            cache = init_cache(cfg, shape.global_batch, max_len)
+            true_len = batch.get("true_len")
+            if true_len is None:
+                key = "dec_tokens" if cfg.is_encoder_decoder else "tokens"
+                true_len = jnp.full((shape.global_batch,),
+                                    batch[key].shape[1], jnp.int32)
+            logits, new_cache = prefill(params, cfg, batch, cache, true_len)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok, new_cache
+
+    ab_params = abstract_params(model_specs(cfg))
+    paxes = logical_axes(model_specs(cfg))
+    b_specs = batch_specs(cfg, shape)
+    params_sh = tree_shardings(mesh, rules, paxes, ab_params)
+    batch_sh = tree_shardings(mesh, rules, batch_axes(cfg, shape), b_specs)
+    # outputs: next tokens (B,) batch-sharded; cache per cache_axes
+    from repro.models.model import abstract_cache
+    ab_cache = abstract_cache(cfg, shape.global_batch, max_len)
+    cache_sh = tree_shardings(mesh, rules, cache_axes(cfg), ab_cache)
+    tok_sh = tree_shardings(mesh, rules, ("act_batch",),
+                            jax.ShapeDtypeStruct((shape.global_batch,),
+                                                 jnp.int32))
+    in_specs = (ab_params, b_specs)
+    return prefill_step, in_specs, (params_sh, batch_sh), \
+        (tok_sh, cache_sh), rules
+
+
+# ---------------------------------------------------------------------------
+# Serve (decode) step — the bandwidth path; decode_32k / long_500k cells
+# ---------------------------------------------------------------------------
+
+def duplex_k_cold(cfg: ModelConfig, num_tokens: int) -> int:
+    """Planner-chosen static cold-expert count for a decode stage of
+    ``num_tokens`` (uniform expected routing, paper §VI)."""
+    if cfg.moe is None:
+        return 0
+    import numpy as np
+    from repro.core.costmodel import DUPLEX
+    from repro.core.partition import DuplexPlanner, build_luts
+    m = cfg.moe
+    lut_x, lut_p = build_luts(DUPLEX, cfg.d_model, m.d_ff_expert,
+                              max_tokens=max(num_tokens * m.top_k, 64))
+    planner = DuplexPlanner(lut_x, lut_p, m.num_experts)
+    rng = np.random.default_rng(0)
+    counts = rng.multinomial(num_tokens * m.top_k,
+                             np.full(m.num_experts, 1.0 / m.num_experts))
+    return planner.k_cold_static(counts)
+
+
+def make_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    run: RunConfig, *, moe_impl: str = "duplex"):
+    rules = build_rules(cfg, shape, mesh, run)
+    k_cold = duplex_k_cold(cfg, shape.global_batch) \
+        if moe_impl == "duplex" else 0
+    plan = ExecutionPlan(
+        moe_impl="duplex" if k_cold > 0 else "grouped",
+        k_cold=k_cold, use_kernels=False,
+        dispatch_grid=dispatch_grid(mesh, rules))
+    kv_quant = run.kv_quant
+
+    def serve_step(params, batch, cache):
+        with sharding_context(mesh, rules), execution_plan(plan):
+            logits, new_cache = decode_step(params, cfg, batch["tokens"],
+                                            cache)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok, new_cache
+
+    ab_params = abstract_params(model_specs(cfg))
+    paxes = logical_axes(model_specs(cfg))
+    cell = cell_input_specs(cfg, shape, kv_quant=kv_quant)
+    cell_ax = cell_input_axes(cfg, shape, kv_quant=kv_quant)
+    params_sh = tree_shardings(mesh, rules, paxes, ab_params)
+    batch_sh = tree_shardings(mesh, rules, cell_ax["batch"], cell["batch"])
+    cache_sh = tree_shardings(mesh, rules, cell_ax["cache"], cell["cache"])
+    tok_sh = tree_shardings(mesh, rules, ("act_batch",),
+                            jax.ShapeDtypeStruct((shape.global_batch,),
+                                                 jnp.int32))
+    in_specs = (ab_params, cell["batch"], cell["cache"])
+    return serve_step, in_specs, (params_sh, batch_sh, cache_sh), \
+        (tok_sh, cache_sh), plan, rules
+
+
+# ---------------------------------------------------------------------------
+# Cell dispatcher
+# ---------------------------------------------------------------------------
+
+def make_cell_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   run: RunConfig, opt: Optional[OptConfig] = None,
+                   *, moe_impl: str = "duplex"):
+    """One entry point for the dry-run: returns (fn, in_specs, in_sh, out_sh,
+    meta)."""
+    if shape.kind == "train":
+        fn, specs, in_sh, out_sh, n_micro, rules = make_train_step(
+            cfg, shape, mesh, run, opt or OptConfig())
+        return fn, specs, in_sh, out_sh, {"kind": "train",
+                                          "n_micro": n_micro}
+    if shape.kind == "prefill":
+        fn, specs, in_sh, out_sh, rules = make_prefill_step(
+            cfg, shape, mesh, run)
+        return fn, specs, in_sh, out_sh, {"kind": "prefill"}
+    fn, specs, in_sh, out_sh, plan, rules = make_serve_step(
+        cfg, shape, mesh, run, moe_impl=moe_impl)
+    return fn, specs, in_sh, out_sh, {"kind": "decode",
+                                      "k_cold": plan.k_cold,
+                                      "moe_impl": plan.moe_impl}

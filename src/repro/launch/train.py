@@ -1,0 +1,130 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tiny-moe --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --reduced \
+      --steps 20 --ckpt-dir /tmp/ckpt
+
+Real archs run at a REDUCED width on this CPU container (--reduced scales
+layers/width down); the full configs are exercised via launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ModelConfig, MoEConfig, RunConfig, Segment,
+                                small_test_config)
+from repro.core.execution import ExecutionPlan, execution_plan
+from repro.models.model import loss_fn, model_specs
+from repro.models.param import init_params
+from repro.training.data import DataConfig, SyntheticLMData
+from repro.training.loop import LoopConfig, train_loop
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def reduced_config(cfg: ModelConfig, *, layers: int = 2, d_model: int = 128,
+                   d_ff: int = 256, vocab: int = 512) -> ModelConfig:
+    """Scale an assigned arch down to CPU size, keeping its structure."""
+    scale = d_model / cfg.d_model
+    heads = max(2, int(cfg.num_heads * scale))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, d_ff_expert=max(
+            32, int(moe.d_ff_expert * scale)))
+    segs = []
+    need = layers
+    for seg in cfg.segments:
+        if need <= 0:
+            break
+        reps = max(1, min(seg.repeats, need // max(len(seg.pattern), 1) or 1))
+        segs.append(Segment(seg.pattern, reps))
+        need -= reps * len(seg.pattern)
+    total = sum(s.num_layers for s in segs)
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-reduced", num_layers=total, d_model=d_model,
+        num_heads=heads, num_kv_heads=kv, head_dim=max(16, d_model // heads),
+        d_ff=d_ff, vocab_size=vocab, segments=tuple(segs), moe=moe,
+        dtype="float32", param_dtype="float32").validate()
+
+
+def resolve_config(name: str, reduced: bool) -> ModelConfig:
+    if name == "tiny-dense":
+        return small_test_config("tiny-dense")
+    if name == "tiny-moe":
+        return small_test_config(
+            "tiny-moe", family="moe",
+            moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=128))
+    from repro.configs.registry import get_config
+    cfg = get_config(name)
+    return reduced_config(cfg) if reduced else cfg
+
+
+def make_step(cfg: ModelConfig, opt: OptConfig, run: RunConfig):
+    plan = ExecutionPlan(moe_impl="grouped")
+
+    @jax.jit
+    def step(state, batch):
+        with execution_plan(plan):
+            def lf(p):
+                loss, m = loss_fn(p, cfg, batch, remat=run.remat_policy)
+                return loss, m
+
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+                state["params"])
+            new_p, new_o, om = adamw_update(state["params"], grads,
+                                            state["opt"], opt,
+                                            step=state["step"])
+            return ({"params": new_p, "opt": new_o,
+                     "step": state["step"] + 1},
+                    {"loss": loss, **om})
+
+    return step
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="tiny-moe")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=25)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = resolve_config(args.arch, args.reduced)
+    opt = OptConfig(learning_rate=args.lr, total_steps=args.steps,
+                    warmup_steps=max(args.steps // 10, 1))
+    params = init_params(jax.random.PRNGKey(args.seed), model_specs(cfg))
+    state = {"params": params, "opt": init_opt_state(params, opt),
+             "step": jnp.zeros((), jnp.int32)}
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, args.seq, args.batch,
+                                      seed=args.seed))
+
+    def batch_fn(step):
+        b = data.batch_at(step)
+        return {"tokens": jnp.asarray(b["tokens"])}
+
+    step_fn = make_step(cfg, opt, RunConfig(remat_policy="none"))
+    loop = train_loop(state, step_fn, batch_fn,
+                      LoopConfig(total_steps=args.steps,
+                                 ckpt_dir=args.ckpt_dir,
+                                 ckpt_every=args.ckpt_every))
+    first = np.mean(loop.losses[:5]) if loop.losses else float("nan")
+    last = np.mean(loop.losses[-5:]) if loop.losses else float("nan")
+    print(f"[train] {cfg.name}: steps={loop.step} loss {first:.3f} -> "
+          f"{last:.3f} stragglers={loop.stragglers}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,6 @@
+from repro.models.model import (abstract_cache, abstract_model, decode_step,
+                                forward, init_cache, init_model, loss_fn,
+                                model_specs, prefill)
+
+__all__ = ["abstract_cache", "abstract_model", "decode_step", "forward",
+           "init_cache", "init_model", "loss_fn", "model_specs", "prefill"]

@@ -1,0 +1,674 @@
+"""Attention: GQA with blockwise (flash-style) XLA reference path + decode path.
+
+Design notes (see DESIGN.md §2):
+  * The train/prefill path is a *triangular blockwise* attention: we scan over
+    the statically-enumerated (q_block, kv_block) pairs that intersect the
+    mask, with online-softmax accumulators carried across the scan. This keeps
+    HLO FLOPs exactly triangular for causal masks (no 2x masked waste) and
+    peak memory at O(q_block * kv_block) — the same schedule the Pallas TPU
+    kernel (kernels/flash_attn.py) uses, so the XLA path doubles as its oracle
+    at scale.
+  * GQA is computed natively as a deg_grp-wide GEMM per KV head (paper §II-B):
+    q is shaped (B, KV, qpk, S, hd) so scores are (B, KV, qpk, bq, bk).
+  * Decode path: single-token GQA against a (ring- or full-) KV cache; this is
+    the paper's "low-Op/B attention" — the thing Duplex routes to Logic-PIM
+    and we route to the bandwidth-optimized decode kernel on TPU.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_specs, rmsnorm, rmsnorm_specs
+from repro.models.param import ParamSpec
+from repro.sharding.rules import logical_constraint
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    pdtype = cfg.param_dtype
+    specs = {
+        "wq": dense_specs(d, cfg.num_heads * hd, pdtype, ("embed", "heads"),
+                          bias=cfg.attn_bias),
+        "wk": dense_specs(d, cfg.num_kv_heads * hd, pdtype, ("embed", "kv_heads"),
+                          bias=cfg.attn_bias),
+        "wv": dense_specs(d, cfg.num_kv_heads * hd, pdtype, ("embed", "kv_heads"),
+                          bias=cfg.attn_bias),
+        "wo": dense_specs(cfg.num_heads * hd, d, pdtype, ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = rmsnorm_specs(hd, pdtype)
+        specs["k_norm"] = rmsnorm_specs(hd, pdtype)
+    return specs
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions, *, rope: bool = True):
+    """x (B,S,D) -> q (B,S,H,hd), k,v (B,S,KV,hd); rope + qk-norm applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]["kernel"])
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]["kernel"])
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]["kernel"])
+    if cfg.attn_bias:
+        q = q + params["wq"]["bias"].astype(q.dtype)
+        k = k + params["wk"]["bias"].astype(k.dtype)
+        v = v + params["wv"]["bias"].astype(v.dtype)
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention core (shared by train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_pairs(n_q: int, n_kv: int, *, causal: bool,
+                 window_blocks: int) -> np.ndarray:
+    """Static (qi, ki) schedule of mask-intersecting blocks."""
+    pairs = []
+    for qi in range(n_q):
+        for ki in range(n_kv):
+            if causal and ki > qi:
+                continue
+            if window_blocks > 0 and ki < qi - window_blocks:
+                continue
+            pairs.append((qi, ki))
+    return np.asarray(pairs, dtype=np.int32)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        softcap: float = 0.0, q_block: int = 512,
+                        kv_block: int = 512, score_bf16: bool = False,
+                        segment_ids: Optional[jnp.ndarray] = None):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd). Returns (B, S, H, hd).
+
+    Online-softmax over a static triangular/banded block schedule.
+
+    Differentiation note: when ``segment_ids is None`` this routes through a
+    ``jax.custom_vjp`` core whose backward *recomputes* per-pair scores
+    (flash-attention backward). Without it, the scan transpose saves every
+    pair's (q_block × kv_block) probability block — O(S²/blk) fp32 per layer
+    — which is exactly the memory blow-up flash attention exists to avoid,
+    and the HLO-roofline bytes term shows it at 10x.
+    """
+    if segment_ids is None:
+        return _flash_core(q, k, v, causal, window, softcap, q_block,
+                           kv_block, score_bf16)
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qpk = H // KV
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    pad_q = (-S) % q_block
+    pad_kv = (-S) % kv_block
+    Sq, Skv = S + pad_q, S + pad_kv
+    nq, nkv = Sq // q_block, Skv // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    # (B, KV, qpk, nq, q_block, hd)
+    qb = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    qb = qb.reshape(B, nq, q_block, KV, qpk, hd).transpose(0, 3, 4, 1, 2, 5)
+    kb = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    kb = kb.reshape(B, nkv, kv_block, KV, hd).transpose(0, 3, 1, 2, 4)
+    vb = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vb = vb.reshape(B, nkv, kv_block, KV, hd).transpose(0, 3, 1, 2, 4)
+
+    seg_q = seg_kv = None
+    if segment_ids is not None:
+        seg_q = jnp.pad(segment_ids, ((0, 0), (0, pad_q)), constant_values=-1)
+        seg_q = seg_q.reshape(B, nq, q_block)
+        seg_kv = jnp.pad(segment_ids, ((0, 0), (0, pad_kv)), constant_values=-2)
+        seg_kv = seg_kv.reshape(B, nkv, kv_block)
+
+    window_blocks = 0
+    if window > 0:
+        # number of whole kv blocks a q block can reach back; boundary masked finely
+        window_blocks = (window + q_block - 1) // kv_block + 1
+    pairs = _block_pairs(nq, nkv, causal=causal,
+                         window_blocks=window_blocks if window > 0 else 0)
+
+    acc0 = jnp.zeros((B, KV, qpk, nq, q_block, hd), jnp.float32)
+    m0 = jnp.full((B, KV, qpk, nq, q_block), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, qpk, nq, q_block), jnp.float32)
+
+    q_pos_base = jnp.arange(q_block)
+    kv_pos_base = jnp.arange(kv_block)
+
+    def step(carry, pair):
+        acc, m, l = carry
+        qi, ki = pair[0], pair[1]
+        qt = jax.lax.dynamic_index_in_dim(qb, qi, axis=3, keepdims=False)
+        kt = jax.lax.dynamic_index_in_dim(kb, ki, axis=2, keepdims=False)
+        vt = jax.lax.dynamic_index_in_dim(vb, ki, axis=2, keepdims=False)
+        # scores: (B, KV, qpk, q_block, kv_block) in fp32
+        s = jnp.einsum("bgpqh,bgkh->bgpqk", qt, kt,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = qi * q_block + q_pos_base            # (q_block,)
+        kpos = ki * kv_block + kv_pos_base          # (kv_block,)
+        mask = jnp.ones((q_block, kv_block), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        mask &= (kpos < S)[None, :] & (qpos < S)[:, None]
+        mask_b = mask[None, None, None]
+        if seg_q is not None:
+            sq = jax.lax.dynamic_index_in_dim(seg_q, qi, axis=1, keepdims=False)
+            sk = jax.lax.dynamic_index_in_dim(seg_kv, ki, axis=1, keepdims=False)
+            segm = (sq[:, :, None] == sk[:, None, :])   # (B, q_block, kv_block)
+            mask_b = mask_b & segm[:, None, None]
+        s = jnp.where(mask_b, s, NEG_INF)
+        # online softmax update for q block qi
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, axis=3, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, axis=3, keepdims=False)
+        acc_old = jax.lax.dynamic_index_in_dim(acc, qi, axis=3, keepdims=False)
+        m_new = jnp.maximum(m_old, s.max(axis=-1))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_old * alpha + p.sum(axis=-1)
+        acc_new = acc_old * alpha[..., None] + jnp.einsum(
+            "bgpqk,bgkh->bgpqh", p.astype(vt.dtype), vt,
+            preferred_element_type=jnp.float32)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, acc_new, qi, axis=3)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, axis=3)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, axis=3)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.asarray(pairs))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    # (B, KV, qpk, nq, q_block, hd) -> (B, S, H, hd)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(B, Sq, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   softcap: float = 0.0,
+                   segment_ids: Optional[jnp.ndarray] = None,
+                   kv_segment_ids: Optional[jnp.ndarray] = None):
+    """Unblocked reference (materializes scores) — oracle for tests and the
+    cheapest path for short sequences."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qpk = H // KV
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KV, qpk, hd)
+    s = jnp.einsum("bqgph,bkgh->bgpqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask_b = mask[None, None, None]
+    if segment_ids is not None:
+        ks = kv_segment_ids if kv_segment_ids is not None else segment_ids
+        segm = segment_ids[:, :, None] == ks[:, None, :]
+        mask_b = mask_b & segm[:, None, None]
+    s = jnp.where(mask_b, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgpqk,bkgh->bqgph", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Flash custom-vjp core (segment_ids=None path)
+# ---------------------------------------------------------------------------
+
+def _block_layout(q, k, v, q_block: int, kv_block: int):
+    """(B,S,H,hd)-layout -> blocked (B,KV,qpk,nq,qb,hd) / (B,KV,nkv,kb,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qpk = H // KV
+    pad_q = (-S) % q_block
+    pad_kv = (-S) % kv_block
+    nq, nkv = (S + pad_q) // q_block, (S + pad_kv) // kv_block
+    qb = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    qb = qb.reshape(B, nq, q_block, KV, qpk, hd).transpose(0, 3, 4, 1, 2, 5)
+    kb = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    kb = kb.reshape(B, nkv, kv_block, KV, hd).transpose(0, 3, 1, 2, 4)
+    vb = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vb = vb.reshape(B, nkv, kv_block, KV, hd).transpose(0, 3, 1, 2, 4)
+    return qb, kb, vb, nq, nkv
+
+
+def _pair_mask(qi, ki, q_block, kv_block, S, causal, window):
+    qpos = qi * q_block + jnp.arange(q_block)
+    kpos = ki * kv_block + jnp.arange(kv_block)
+    mask = jnp.ones((q_block, kv_block), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask &= (kpos < S)[None, :] & (qpos < S)[:, None]
+    return mask
+
+
+def _flash_fwd_blocked(qb, kb, vb, pairs, *, causal, window, softcap,
+                       q_block, kv_block, S, scale, score_bf16=False):
+    B, KV, qpk, nq = qb.shape[:4]
+    acc0 = jnp.zeros(qb.shape[:5] + (qb.shape[5],), jnp.float32)
+    m0 = jnp.full(qb.shape[:5], NEG_INF, jnp.float32)
+    l0 = jnp.zeros(qb.shape[:5], jnp.float32)
+
+    def step(carry, pair):
+        acc, m, l = carry
+        qi, ki = pair[0], pair[1]
+        qt = jax.lax.dynamic_index_in_dim(qb, qi, axis=3, keepdims=False)
+        kt = jax.lax.dynamic_index_in_dim(kb, ki, axis=2, keepdims=False)
+        vt = jax.lax.dynamic_index_in_dim(vb, ki, axis=2, keepdims=False)
+        # score_bf16: emit the QK scores in bf16 (MXU still accumulates
+        # fp32 internally) — halves every score-sized tensor in the chain.
+        # Softmax stats (m, l) stay fp32.
+        score_t = jnp.bfloat16 if score_bf16 else jnp.float32
+        s = jnp.einsum("bgpqh,bgkh->bgpqk", qt, kt,
+                       preferred_element_type=score_t) * jnp.asarray(
+                           scale, score_t)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _pair_mask(qi, ki, q_block, kv_block, S, causal, window)
+        s = jnp.where(mask[None, None, None], s,
+                      jnp.asarray(NEG_INF, score_t))
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, axis=3, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, axis=3, keepdims=False)
+        acc_old = jax.lax.dynamic_index_in_dim(acc, qi, axis=3, keepdims=False)
+        m_new = jnp.maximum(m_old, s.max(axis=-1).astype(jnp.float32))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new[..., None].astype(score_t))
+        l_new = l_old * alpha + p.astype(jnp.float32).sum(axis=-1)
+        acc_new = acc_old * alpha[..., None] + jnp.einsum(
+            "bgpqk,bgkh->bgpqh", p.astype(vt.dtype), vt,
+            preferred_element_type=jnp.float32)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, acc_new, qi, axis=3)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, axis=3)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, axis=3)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), pairs)
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-37)), 0.0)
+    return out, lse
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_core(q, k, v, causal, window, softcap, q_block, kv_block,
+                score_bf16=False):
+    out, _ = _flash_core_fwd(q, k, v, causal, window, softcap, q_block,
+                             kv_block, score_bf16)
+    return out
+
+
+def _flash_core_fwd(q, k, v, causal, window, softcap, q_block, kv_block,
+                    score_bf16=False):
+    B, S, H, hd = q.shape
+    q_block = min(q_block, S + (-S) % 8)
+    kv_block = min(kv_block, S + (-S) % 8)
+    scale = 1.0 / math.sqrt(hd)
+    qb, kb, vb, nq, nkv = _block_layout(q, k, v, q_block, kv_block)
+    window_blocks = (window + q_block - 1) // kv_block + 1 if window > 0 else 0
+    pairs = jnp.asarray(_block_pairs(nq, nkv, causal=causal,
+                                     window_blocks=window_blocks))
+    out_b, lse = _flash_fwd_blocked(qb, kb, vb, pairs, causal=causal,
+                                    window=window, softcap=softcap,
+                                    q_block=q_block, kv_block=kv_block, S=S,
+                                    scale=scale, score_bf16=score_bf16)
+    KV, qpk = kb.shape[1], qb.shape[2]
+    out = out_b.transpose(0, 3, 4, 1, 2, 5).reshape(
+        B, nq * q_block, H, hd)[:, :S].astype(q.dtype)
+    return out, (qb, kb, vb, out_b, lse, pairs)
+
+
+def _flash_core_bwd(causal, window, softcap, q_block, kv_block, score_bf16,
+                    res, dout):
+    """Flash backward: recompute per-pair scores from saved (q, k, v, lse);
+    accumulate dq/dk/dv block-wise. Saves O(S) residuals instead of O(S^2)."""
+    qb, kb, vb, out_b, lse, pairs = res
+    B, KV, qpk, nq, qbs, hd = qb.shape
+    nkv = kb.shape[2]
+    S, in_dtype = dout.shape[1], dout.dtype
+    q_block, kv_block = qbs, kb.shape[3]   # actual block sizes used by fwd
+    scale = 1.0 / math.sqrt(hd)
+    pad_q = nq * q_block - S
+    dout_b = jnp.pad(dout.astype(jnp.float32),
+                     ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    dout_b = dout_b.reshape(B, nq, q_block, KV, qpk, hd) \
+        .transpose(0, 3, 4, 1, 2, 5)                  # (B,KV,qpk,nq,qb,hd)
+    # D_i = sum(dout * out) per query position
+    D = jnp.sum(dout_b * out_b, axis=-1)              # (B,KV,qpk,nq,qb)
+
+    dq0 = jnp.zeros_like(qb, jnp.float32)
+    dk0 = jnp.zeros_like(kb, jnp.float32)
+    dv0 = jnp.zeros_like(vb, jnp.float32)
+
+    def step(carry, pair):
+        dq, dk, dv = carry
+        qi, ki = pair[0], pair[1]
+        qt = jax.lax.dynamic_index_in_dim(qb, qi, axis=3, keepdims=False)
+        kt = jax.lax.dynamic_index_in_dim(kb, ki, axis=2, keepdims=False)
+        vt = jax.lax.dynamic_index_in_dim(vb, ki, axis=2, keepdims=False)
+        do = jax.lax.dynamic_index_in_dim(dout_b, qi, axis=3, keepdims=False)
+        lse_i = jax.lax.dynamic_index_in_dim(lse, qi, axis=3, keepdims=False)
+        D_i = jax.lax.dynamic_index_in_dim(D, qi, axis=3, keepdims=False)
+        s_raw = jnp.einsum("bgpqh,bgkh->bgpqk", qt, kt,
+                           preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            t = jnp.tanh(s_raw / softcap)
+            s = softcap * t
+        else:
+            s = s_raw
+        mask = _pair_mask(qi, ki, q_block, kv_block, S, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse_i[..., None])             # (B,KV,qpk,qb,kb)
+        dv_blk = jnp.einsum("bgpqk,bgpqh->bgkh", p, do,
+                            preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bgpqh,bgkh->bgpqk", do, vt.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - D_i[..., None])
+        if softcap > 0.0:
+            ds = ds * (1.0 - t * t)
+        ds = jnp.where(mask[None, None, None], ds, 0.0)
+        dq_blk = jnp.einsum("bgpqk,bgkh->bgpqh", ds, kt.astype(jnp.float32),
+                            preferred_element_type=jnp.float32) * scale
+        dk_blk = jnp.einsum("bgpqk,bgpqh->bgkh", ds, qt.astype(jnp.float32),
+                            preferred_element_type=jnp.float32) * scale
+        dq = dq.at[:, :, :, qi].add(dq_blk)
+        dk = dk.at[:, :, ki].add(dk_blk)
+        dv = dv.at[:, :, ki].add(dv_blk)
+        return (dq, dk, dv), None
+
+    (dq_b, dk_b, dv_b), _ = jax.lax.scan(step, (dq0, dk0, dv0), pairs)
+    H = KV * qpk
+    dq = dq_b.transpose(0, 3, 4, 1, 2, 5).reshape(B, nq * q_block, H, hd)
+    dq = dq[:, :S].astype(in_dtype)
+    dk = dk_b.transpose(0, 2, 3, 1, 4).reshape(B, nkv * kv_block, KV, hd)
+    dk = dk[:, :S].astype(in_dtype)
+    dv = dv_b.transpose(0, 2, 3, 1, 4).reshape(B, nkv * kv_block, KV, hd)
+    dv = dv[:, :S].astype(in_dtype)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public layer entry points
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AttnCall:
+    causal: bool = True
+    window: int = 0          # >0 for ATTN_LOCAL
+    use_blockwise: bool = True
+    q_block: int = 512
+    kv_block: int = 512
+    score_bf16: bool = False   # bf16 exp/p chain (halves score traffic)
+
+
+def attention_forward(params, cfg: ModelConfig, x, positions, call: AttnCall,
+                      segment_ids=None, return_kv: bool = False):
+    """Train/prefill attention over full sequences. x: (B,S,D)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = logical_constraint(q, ("act_batch", "act_seq", "act_heads", None))
+    k = logical_constraint(k, ("act_batch", "act_seq", "act_kv_heads", None))
+    v = logical_constraint(v, ("act_batch", "act_seq", "act_kv_heads", None))
+    if call.use_blockwise and S > call.q_block:
+        out = blockwise_attention(q, k, v, causal=call.causal,
+                                  window=call.window,
+                                  softcap=cfg.attn_logit_softcap,
+                                  q_block=call.q_block, kv_block=call.kv_block,
+                                  score_bf16=call.score_bf16,
+                                  segment_ids=segment_ids)
+    else:
+        out = full_attention(q, k, v, causal=call.causal, window=call.window,
+                             softcap=cfg.attn_logit_softcap,
+                             segment_ids=segment_ids)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), params["wo"]["kernel"])
+    y = logical_constraint(y, ("act_batch", "act_seq", "act_embed"))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cross_attention_forward(params, cfg: ModelConfig, x, kv: Tuple,
+                            segment_ids=None, kv_segment_ids=None):
+    """Decoder cross-attention; kv = (k, v) precomputed from encoder output
+    (already rope-free)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]["kernel"])
+    if cfg.attn_bias:
+        q = q + params["wq"]["bias"].astype(q.dtype)
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    k, v = kv
+    out = full_attention(q, k, v, causal=False, segment_ids=segment_ids,
+                         kv_segment_ids=kv_segment_ids)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), params["wo"]["kernel"])
+    return y
+
+
+def cross_kv(params, cfg: ModelConfig, enc_out):
+    """Project encoder output to cross-attention K/V once per request."""
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,dh->bsh", enc_out, params["wk"]["kernel"])
+    v = jnp.einsum("bsd,dh->bsh", enc_out, params["wv"]["kernel"])
+    if cfg.attn_bias:
+        k = k + params["wk"]["bias"].astype(k.dtype)
+        v = v + params["wv"]["bias"].astype(v.dtype)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (beyond-paper optimization, EXPERIMENTS.md §Perf)
+#
+# Decode is memory-bound on KV reads (paper §III-A); int8 storage halves the
+# dominant traffic. Scales are per (token, kv-head); BOTH dots run on int8
+# operands with int32 accumulation, scales applied OUTSIDE the dots:
+#   QK^T: (q_int8 · k_int8) * q_scale * k_scale_t   (exact fold: scale_t is
+#         constant along the contracted hd dim)
+#   PV:   quantize (p * v_scale_t) row-wise, then (pv_int8 · v_int8)
+# so the dequantized fp cache never materializes.
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x, axis: int = -1):
+    """x (..., hd) -> (int8 values, fp32 scale over `axis`)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention_int8(q, k_q, k_scale, v_q, v_scale, cache_len, *,
+                          window: int = 0, softcap: float = 0.0,
+                          kv_positions=None):
+    """q: (B, 1, H, hd) fp; k_q/v_q: (B, Smax, KV, hd) int8;
+    k_scale/v_scale: (B, Smax, KV) fp32. Returns (B, 1, H, hd)."""
+    B, _, H, hd = q.shape
+    Smax, KV = k_q.shape[1], k_q.shape[2]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, qpk, hd)
+    q8, q_sc = quantize_kv(qg)                          # (B,KV,qpk,.)
+    s_i32 = jnp.einsum("bgph,bkgh->bgpk", q8.astype(jnp.int32),
+                       k_q.astype(jnp.int32))           # int32 accum
+    s = (s_i32.astype(jnp.float32) * q_sc[..., None]
+         * k_scale.transpose(0, 2, 1)[:, :, None, :]) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = kv_positions if kv_positions is not None else \
+        jnp.broadcast_to(jnp.arange(Smax)[None], (B, Smax))
+    valid = pos < cache_len[:, None]
+    if window > 0:
+        valid &= pos > (cache_len[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)                      # (B,KV,qpk,Smax)
+    pv = p * v_scale.transpose(0, 2, 1)[:, :, None, :]  # fold v scales
+    pv8, pv_sc = quantize_kv(pv)                        # rowwise over Smax
+    out_i32 = jnp.einsum("bgpk,bkgh->bgph", pv8.astype(jnp.int32),
+                         v_q.astype(jnp.int32))
+    out = out_i32.astype(jnp.float32) * pv_sc[..., None]
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (the paper's low-Op/B attention)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     softcap: float = 0.0, kv_positions=None):
+    """q: (B, 1, H, hd); caches: (B, Smax, KV, hd); cache_len: (B,) number of
+    valid entries *including* the current token (already written).
+
+    Returns (B, 1, H, hd). Op/B ~ 2·deg_grp (paper §III-A) — bandwidth-bound;
+    the TPU deployment path is kernels/decode_attn.py with identical math.
+    """
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, qpk, hd)
+    s = jnp.einsum("bgph,bkgh->bgpk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = kv_positions if kv_positions is not None else \
+        jnp.broadcast_to(jnp.arange(Smax)[None], (B, Smax))
+    valid = pos < cache_len[:, None]
+    if window > 0:
+        valid &= pos > (cache_len[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgpk,bkgh->bgph", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def attention_decode_step(params, cfg: ModelConfig, x, cache, *, window: int = 0):
+    """One-token decode. x: (B,1,D); cache dict with k/v (B,Smax,KV,hd),
+    ``len`` (B,) valid count, ``pos`` (B,Smax) absolute positions (ring-aware).
+    Returns (y, new_cache). An int8-quantized cache (``k_scale`` present)
+    routes through the int8-dot decode path."""
+    B = x.shape[0]
+    positions = cache["len"]  # (B,) absolute position of the new token
+    q, k, v = _project_qkv(params, cfg, x, positions[:, None])
+    Smax = cache["k"].shape[1]
+    # ring writes for windowed layers (buffer = window + 1 slots, slot
+    # `window` is the masked-write dump slot); append writes otherwise.
+    # `window` always drives the attention *mask*; the ring layout is used
+    # only when the buffer was allocated at window+1 (< max_len).
+    is_ring = window > 0 and Smax == window + 1
+    if is_ring:
+        write_idx = (positions % window).astype(jnp.int32)
+    else:
+        write_idx = jnp.minimum(positions, Smax - 1).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    pos = cache["pos"].at[bidx, write_idx].set(positions)
+    new_len = positions + 1
+    from repro.core.execution import current_plan
+    plan = current_plan()
+    if "k_scale" in cache:                       # int8 KV path
+        k8, ks = quantize_kv(k[:, 0])
+        v8, vs = quantize_kv(v[:, 0])
+        k_cache = cache["k"].at[bidx, write_idx].set(k8)
+        v_cache = cache["v"].at[bidx, write_idx].set(v8)
+        ks_cache = cache["k_scale"].at[bidx, write_idx].set(ks)
+        vs_cache = cache["v_scale"].at[bidx, write_idx].set(vs)
+        out = decode_attention_int8(q, k_cache, ks_cache, v_cache, vs_cache,
+                                    new_len, window=window,
+                                    softcap=cfg.attn_logit_softcap,
+                                    kv_positions=pos)
+        new_cache = {"k": k_cache, "v": v_cache, "k_scale": ks_cache,
+                     "v_scale": vs_cache, "len": new_len, "pos": pos}
+        y = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1),
+                       params["wo"]["kernel"])
+        return y, new_cache
+    # cast to the cache dtype BEFORE the write: rope returns fp32 and a
+    # mixed-dtype .set() promotes the WHOLE cache to fp32 — the compiled
+    # decode step then converts the full stacked KV cache bf16<->fp32 every
+    # layer (4.3 GB/layer of pure dtype traffic on a 32k x 128 cache).
+    k_cache = cache["k"].at[bidx, write_idx].set(
+        k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, write_idx].set(
+        v[:, 0].astype(cache["v"].dtype))
+    if plan.use_kernels and not is_ring:
+        # bandwidth-path Pallas kernel (kernels/decode_attn.py); ring-buffer
+        # caches need position-based masking and stay on the XLA path.
+        from repro.kernels.ops import decode_attention as decode_attn_kernel
+        out = decode_attn_kernel(q, k_cache, v_cache, new_len, window=window,
+                                 softcap=cfg.attn_logit_softcap,
+                                 kv_block=plan.decode_kv_block)
+    else:
+        out = decode_attention(q, k_cache, v_cache, new_len, window=window,
+                               softcap=cfg.attn_logit_softcap, kv_positions=pos)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1), params["wo"]["kernel"])
+    new_cache = {"k": k_cache, "v": v_cache, "len": new_len, "pos": pos}
+    return y, new_cache
+
+
+def write_prefill_cache(cache, k, v, true_len, *, window: int = 0):
+    """Write prefill K/V (B,S,KV,hd) into a decode cache.
+
+    Full caches: write token t at slot t (padding writes are harmless — a slot
+    becomes valid only after decode has rewritten it). Ring caches (buffer
+    window+1): only the last `window` valid tokens are written; masked writes
+    go to the dump slot `window` to avoid duplicate-index nondeterminism.
+    int8 caches (``k_scale`` present) quantize per (token, kv-head).
+    """
+    B, S = k.shape[0], k.shape[1]
+    size = cache["k"].shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if window > 0 and size == window + 1:
+        valid = (pos < true_len[:, None]) & (pos >= true_len[:, None] - window)
+        idx = jnp.where(valid, pos % window, window)
+    else:
+        valid = pos < true_len[:, None]
+        idx = jnp.minimum(pos, size - 1)
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    pos_arr = cache["pos"].at[bidx, idx].set(
+        jnp.where(valid, pos, jnp.iinfo(jnp.int32).max))
+    if "k_scale" in cache:                      # int8 KV path
+        k8, ks = quantize_kv(k)
+        v8, vs = quantize_kv(v)
+        return {"k": cache["k"].at[bidx, idx].set(k8),
+                "v": cache["v"].at[bidx, idx].set(v8),
+                "k_scale": cache["k_scale"].at[bidx, idx].set(ks),
+                "v_scale": cache["v_scale"].at[bidx, idx].set(vs),
+                "pos": pos_arr, "len": true_len}
+    k_cache = cache["k"].at[bidx, idx].set(k.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, idx].set(v.astype(cache["v"].dtype))
+    return {"k": k_cache, "v": v_cache, "pos": pos_arr, "len": true_len}

@@ -1,0 +1,289 @@
+"""Decoder-block composition per LayerKind + scan-able segment stacking."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, ATTN_BIDIR, ATTN_CROSS, ATTN_LOCAL,
+                                DENSE, MAMBA, MOE, NONE, LayerKind, ModelConfig,
+                                Segment)
+from repro.models import attention as attn_mod
+from repro.models.attention import (AttnCall, attention_decode_step,
+                                    attention_forward, attention_specs,
+                                    cross_attention_forward, cross_kv)
+from repro.models.ffn import ffn_apply, ffn_specs
+from repro.models.layers import rmsnorm, rmsnorm_specs
+from repro.core.execution import moe_execute
+from repro.models.moe import moe_specs
+from repro.models.param import stack_specs
+from repro.models.ssm import (mamba_decode_step, mamba_forward,
+                              mamba_init_cache, mamba_specs)
+
+
+def block_specs(cfg: ModelConfig, kind: LayerKind) -> dict:
+    d = cfg.d_model
+    pdtype = cfg.param_dtype
+    specs: Dict[str, Any] = {"norm1": rmsnorm_specs(d, pdtype)}
+    if kind.mixer == MAMBA:
+        specs["mixer"] = mamba_specs(cfg)
+    else:
+        specs["mixer"] = attention_specs(cfg)
+    if kind.mixer == ATTN_CROSS:
+        specs["cross"] = attention_specs(cfg)
+        specs["norm_cross"] = rmsnorm_specs(d, pdtype)
+    if kind.ffn != NONE and not cfg.parallel_block:
+        specs["norm2"] = rmsnorm_specs(d, pdtype)
+    if kind.ffn == DENSE:
+        specs["ffn"] = ffn_specs(cfg)
+    elif kind.ffn == MOE:
+        specs["ffn"] = moe_specs(cfg)
+    return specs
+
+
+def _attn_call(cfg: ModelConfig, kind: LayerKind) -> AttnCall:
+    from repro.core.execution import current_plan
+    plan = current_plan()
+    kw = dict(q_block=plan.attn_q_block, kv_block=plan.attn_kv_block,
+              score_bf16=plan.attn_score_bf16)
+    if kind.mixer == ATTN_LOCAL:
+        return AttnCall(causal=True, window=cfg.sliding_window, **kw)
+    if kind.mixer == ATTN_BIDIR:
+        return AttnCall(causal=False, **kw)
+    return AttnCall(causal=True, **kw)
+
+
+def block_forward(params, cfg: ModelConfig, kind: LayerKind, x, positions,
+                  *, segment_ids=None, enc_out=None,
+                  enc_segment_ids=None):
+    """Train/prefill path. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind.mixer == MAMBA:
+        mixer_out = mamba_forward(params["mixer"], cfg, h)
+    else:
+        mixer_out = attention_forward(params["mixer"], cfg, h, positions,
+                                      _attn_call(cfg, kind),
+                                      segment_ids=segment_ids)
+    if cfg.parallel_block and kind.ffn != NONE:
+        # command-r style: attn and ffn share the pre-norm input
+        if kind.ffn == MOE:
+            ffn_out, aux = moe_execute(params["ffn"], cfg, h)
+        else:
+            ffn_out = ffn_apply(params["ffn"], h)
+        return x + mixer_out + ffn_out, aux
+    x = x + mixer_out
+    if kind.mixer == ATTN_CROSS:
+        h = rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        kv = cross_kv(params["cross"], cfg, enc_out)
+        x = x + cross_attention_forward(params["cross"], cfg, h, kv,
+                                        segment_ids=segment_ids,
+                                        kv_segment_ids=enc_segment_ids)
+    if kind.ffn == NONE:
+        return x, aux
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if kind.ffn == MOE:
+        ffn_out, aux = moe_execute(params["ffn"], cfg, h)
+    else:
+        ffn_out = ffn_apply(params["ffn"], h)
+    return x + ffn_out, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+def block_init_cache(cfg: ModelConfig, kind: LayerKind, batch: int,
+                     max_len: int, dtype, kv_quant: bool = False) -> dict:
+    if kind.mixer == MAMBA:
+        return {"mamba": mamba_init_cache(cfg, batch, dtype)}
+    window = cfg.sliding_window if kind.mixer == ATTN_LOCAL else 0
+    # ring buffer (window + 1 dump slot) for local layers — bounds long-context
+    # KV memory at O(window) instead of O(seq_len)
+    size = min(max_len, window) + 1 if window > 0 else max_len
+    kv = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    kv_dtype = jnp.int8 if kv_quant else dtype
+    cache = {
+        "k": jnp.zeros((batch, size, kv, hd), kv_dtype),
+        "v": jnp.zeros((batch, size, kv, hd), kv_dtype),
+        "pos": jnp.full((batch, size), jnp.iinfo(jnp.int32).max, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if kv_quant:
+        cache["k_scale"] = jnp.zeros((batch, size, kv), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, size, kv), jnp.float32)
+    if kind.mixer == ATTN_CROSS:
+        # cross-attention KV stays full-precision (written once per request)
+        cache["cross_k"] = jnp.zeros((batch, max_len, kv, hd), dtype)
+        cache["cross_v"] = jnp.zeros((batch, max_len, kv, hd), dtype)
+        cache["cross_len"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def block_decode_step(params, cfg: ModelConfig, kind: LayerKind, x, cache):
+    """Single-token decode. Returns (x, new_cache)."""
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind.mixer == MAMBA:
+        mixer_out, new_mamba = mamba_decode_step(params["mixer"], cfg, h,
+                                                 cache["mamba"])
+        new_cache = {"mamba": new_mamba}
+    else:
+        window = cfg.sliding_window if kind.mixer == ATTN_LOCAL else 0
+        mixer_out, new_attn = attention_decode_step(params["mixer"], cfg, h,
+                                                    cache, window=window)
+        new_cache = dict(cache)
+        new_cache.update(new_attn)
+    if cfg.parallel_block and kind.ffn != NONE:
+        if kind.ffn == MOE:
+            ffn_out, _ = moe_execute(params["ffn"], cfg, h)
+        else:
+            ffn_out = ffn_apply(params["ffn"], h)
+        return x + mixer_out + ffn_out, new_cache
+    x = x + mixer_out
+    if kind.mixer == ATTN_CROSS:
+        h = rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        from repro.models.attention import decode_attention
+        B = x.shape[0]
+        hd = cfg.resolved_head_dim
+        q = jnp.einsum("bsd,dh->bsh", h, params["cross"]["wq"]["kernel"])
+        q = q.reshape(B, 1, cfg.num_heads, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(params["cross"]["q_norm"], q, cfg.norm_eps)
+        out = decode_attention(q, cache["cross_k"], cache["cross_v"],
+                               cache["cross_len"])
+        x = x + jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1),
+                           params["cross"]["wo"]["kernel"])
+    if kind.ffn == NONE:
+        return x, new_cache
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if kind.ffn == MOE:
+        ffn_out, _ = moe_execute(params["ffn"], cfg, h)
+    else:
+        ffn_out = ffn_apply(params["ffn"], h)
+    return x + ffn_out, new_cache
+
+
+def block_prefill(params, cfg: ModelConfig, kind: LayerKind, x, positions,
+                  true_len, cache, *, segment_ids=None, enc_out=None):
+    """Prefill path: like block_forward but also populates the decode cache.
+    x: (B, S, d); true_len: (B,) valid prompt lengths. Returns (x, new_cache)."""
+    from repro.models.attention import (write_prefill_cache, _project_qkv)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if kind.mixer == MAMBA:
+        mixer_out, mcache = mamba_forward(params["mixer"], cfg, h,
+                                          return_state=True)
+        new_cache = {"mamba": mcache}
+    else:
+        window = cfg.sliding_window if kind.mixer == ATTN_LOCAL else 0
+        call = _attn_call(cfg, kind)
+        mixer_out, (k, v) = attention_forward(params["mixer"], cfg, h,
+                                              positions, call,
+                                              segment_ids=segment_ids,
+                                              return_kv=True)
+        new_cache.update(write_prefill_cache(cache, k, v, true_len,
+                                             window=window))
+    if cfg.parallel_block and kind.ffn != NONE:
+        # must match block_forward exactly: attn and ffn share pre-norm input
+        if kind.ffn == MOE:
+            ffn_out, _ = moe_execute(params["ffn"], cfg, h)
+        else:
+            ffn_out = ffn_apply(params["ffn"], h)
+        return x + mixer_out + ffn_out, new_cache
+    x = x + mixer_out
+    if kind.mixer == ATTN_CROSS:
+        h = rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        ck, cv = cross_kv(params["cross"], cfg, enc_out)
+        x = x + cross_attention_forward(params["cross"], cfg, h, (ck, cv),
+                                        segment_ids=segment_ids)
+        new_cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+        new_cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        new_cache["cross_len"] = jnp.full_like(true_len, ck.shape[1])
+    if kind.ffn == NONE:
+        return x, new_cache
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if kind.ffn == MOE:
+        ffn_out, _ = moe_execute(params["ffn"], cfg, h)
+    else:
+        ffn_out = ffn_apply(params["ffn"], h)
+    return x + ffn_out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Segments (scan over stacked super-blocks)
+# ---------------------------------------------------------------------------
+
+def segment_specs(cfg: ModelConfig, seg: Segment) -> dict:
+    one = {"blocks": tuple(block_specs(cfg, k) for k in seg.pattern)}
+    return stack_specs(one, seg.repeats)
+
+
+def segment_forward(params, cfg: ModelConfig, seg: Segment, x, positions, *,
+                    segment_ids=None, enc_out=None, enc_segment_ids=None,
+                    remat: str = "full"):
+    """scan over the segment's stacked super-blocks; returns (x, aux_sum)."""
+
+    def super_block(x, blk_params):
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(seg.pattern):
+            x, aux = block_forward(blk_params["blocks"][i], cfg, kind, x,
+                                   positions, segment_ids=segment_ids,
+                                   enc_out=enc_out,
+                                   enc_segment_ids=enc_segment_ids)
+            aux_total = aux_total + aux
+        return x, aux_total
+
+    if remat == "full":
+        super_block = jax.checkpoint(super_block,
+                                     policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        super_block = jax.checkpoint(
+            super_block,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def body(x, blk_params):
+        return super_block(x, blk_params)
+
+    x, auxs = jax.lax.scan(body, x, params)
+    return x, auxs.sum()
+
+
+def segment_init_cache(cfg: ModelConfig, seg: Segment, batch: int,
+                       max_len: int, dtype, kv_quant: bool = False):
+    one = {"blocks": tuple(block_init_cache(cfg, k, batch, max_len, dtype,
+                                            kv_quant)
+                           for k in seg.pattern)}
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (seg.repeats,) + a.shape).copy(), one)
+
+
+def segment_decode_step(params, cfg: ModelConfig, seg: Segment, x, cache):
+    def body(x, inp):
+        blk_params, blk_cache = inp
+        new_caches = []
+        for i, kind in enumerate(seg.pattern):
+            x, nc = block_decode_step(blk_params["blocks"][i], cfg, kind, x,
+                                      blk_cache["blocks"][i])
+            new_caches.append(nc)
+        return x, {"blocks": tuple(new_caches)}
+
+    x, new_cache = jax.lax.scan(body, x, (params, cache))
+    return x, new_cache
+
+
+def segment_prefill(params, cfg: ModelConfig, seg: Segment, x, positions,
+                    true_len, cache, *, segment_ids=None, enc_out=None):
+    def body(x, inp):
+        blk_params, blk_cache = inp
+        new_caches = []
+        for i, kind in enumerate(seg.pattern):
+            x, nc = block_prefill(blk_params["blocks"][i], cfg, kind, x,
+                                  positions, true_len, blk_cache["blocks"][i],
+                                  segment_ids=segment_ids, enc_out=enc_out)
+            new_caches.append(nc)
+        return x, {"blocks": tuple(new_caches)}
+
+    x, new_cache = jax.lax.scan(body, x, (params, cache))
+    return x, new_cache

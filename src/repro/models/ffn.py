@@ -1,0 +1,45 @@
+"""Dense gated FFN (SwiGLU family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+from repro.sharding.rules import logical_constraint
+
+
+def ffn_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    pdtype = cfg.param_dtype
+    if not cfg.gated_ffn:        # classic 2-matrix FFN (GLaM/OPT style)
+        return {
+            "wi": ParamSpec((d, f), pdtype, ("embed", "mlp")),
+            "wo": ParamSpec((f, d), pdtype, ("mlp", "embed")),
+        }
+    return {
+        "wi_gate": ParamSpec((d, f), pdtype, ("embed", "mlp")),
+        "wi_up": ParamSpec((d, f), pdtype, ("embed", "mlp")),
+        "wo": ParamSpec((f, d), pdtype, ("mlp", "embed")),
+    }
+
+
+def ffn_apply(params, x):
+    if "wi" in params:           # non-gated
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        h = logical_constraint(h, ("act_batch", "act_seq", "act_mlp"))
+        y = jnp.einsum("...f,fd->...d", h, params["wo"])
+    else:
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["wi_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        h = logical_constraint(h, ("act_batch", "act_seq", "act_mlp"))
+        y = jnp.einsum("...f,fd->...d", h, params["wo"])
+    # constrain the down-proj output: its TP partial-sum all-reduce must
+    # land batch-sharded, not replicated (shows up as a full-token-buffer
+    # all-reduce per layer otherwise)
+    if y.ndim == 3:
+        y = logical_constraint(y, ("act_batch", "act_seq", "act_embed"))
+    return y

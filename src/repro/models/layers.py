@@ -1,0 +1,89 @@
+"""Basic layers: RMSNorm, rotary embeddings, dense projections."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(dim: int, pdtype) -> dict:
+    return {"scale": ParamSpec((dim,), pdtype, (None,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_gated(params, x, z, eps: float = 1e-6):
+    """Mamba-2 gated RMSNorm: norm(x * silu(z))."""
+    return rmsnorm(params, x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                        # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_specs(d_in: int, d_out: int, pdtype, axes: Tuple[Optional[str], ...],
+                bias: bool = False, init: str = "normal", scale: float = 1.0) -> dict:
+    out = {"kernel": ParamSpec((d_in, d_out), pdtype, axes, init=init, scale=scale)}
+    if bias:
+        out["bias"] = ParamSpec((d_out,), pdtype, (axes[1],), init="zeros")
+    return out
+
+
+def dense(params, x):
+    y = jnp.einsum("...d,df->...f", x, params["kernel"])
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    pdtype = cfg.param_dtype
+    return {"table": ParamSpec((cfg.vocab_size, cfg.d_model), pdtype,
+                               ("vocab", "embed"), init="small_normal")}
+
+
+def embed_lookup(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Tied or untied LM head: x (..., d) @ table.T -> logits fp32."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      params["table"].astype(jnp.float32))

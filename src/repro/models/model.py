@@ -1,0 +1,248 @@
+"""Model assembly: embeddings -> segments -> final norm -> LM head.
+
+Entry points:
+  * ``forward``       — full-sequence logits (train / eval)
+  * ``loss_fn``       — next-token CE (+ MoE aux), vocab-sharding-friendly
+  * ``prefill``       — forward + decode-cache population (serving)
+  * ``decode_step``   — one-token step against the cache (serving)
+  * ``init_cache`` / ``abstract_cache`` — concrete / ShapeDtypeStruct caches
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, Segment
+from repro.models.blocks import (segment_decode_step, segment_forward,
+                                 segment_init_cache, segment_prefill,
+                                 segment_specs)
+from repro.models.layers import embed_specs, embed_lookup, rmsnorm, rmsnorm_specs
+from repro.models.param import ParamSpec, abstract_params, init_params
+from repro.sharding.rules import logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# Specs / init
+# ---------------------------------------------------------------------------
+
+def model_specs(cfg: ModelConfig) -> dict:
+    specs: Dict[str, Any] = {
+        "embed": embed_specs(cfg),
+        "segments": tuple(segment_specs(cfg, s) for s in cfg.segments),
+        "final_norm": rmsnorm_specs(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {
+            "table": ParamSpec((cfg.vocab_size, cfg.d_model), cfg.param_dtype,
+                               ("vocab", "embed"), init="small_normal")}
+    if cfg.is_encoder_decoder:
+        specs["encoder"] = {
+            "segments": tuple(segment_specs(cfg, s) for s in cfg.enc_segments),
+            "final_norm": rmsnorm_specs(cfg.d_model, cfg.param_dtype),
+        }
+    return specs
+
+
+def init_model(key, cfg: ModelConfig):
+    return init_params(key, model_specs(cfg))
+
+
+def abstract_model(cfg: ModelConfig):
+    return abstract_params(model_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """Token / stub-frontend embedding. Returns (x, positions)."""
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        tok = embed_lookup(params["embed"], batch["tokens"])
+        x = jnp.concatenate([batch["patch_embeds"].astype(tok.dtype), tok],
+                            axis=1)
+    else:
+        x = embed_lookup(params["embed"], batch["tokens"])
+    x = x.astype(cfg.dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    x = logical_constraint(x, ("act_batch", "act_seq", "act_embed"))
+    return x, positions
+
+
+def _lm_head(params, cfg: ModelConfig, x):
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"]["table"])
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    return logical_constraint(logits, ("act_batch", "act_seq", "act_vocab"))
+
+
+def encode(params, cfg: ModelConfig, batch, *, remat: str = "none"):
+    """Encoder forward (whisper): frames (B, Se, d) -> enc_out."""
+    x = batch["frames"].astype(cfg.dtype)
+    B, Se = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+    enc = params["encoder"]
+    for seg, seg_params in zip(cfg.enc_segments, enc["segments"]):
+        x, _ = segment_forward(seg_params, cfg, seg, x, positions, remat=remat)
+    return rmsnorm(enc["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            remat: str = "none", segment_ids=None):
+    """Full-sequence logits. batch keys: tokens (B,S) [+ frames/patch_embeds,
+    dec_tokens for enc-dec]."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch, remat=remat)
+        x, positions = _embed_inputs(params, cfg,
+                                     {"tokens": batch["dec_tokens"]})
+    else:
+        x, positions = _embed_inputs(params, cfg, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg, seg_params in zip(cfg.segments, params["segments"]):
+        x, aux = segment_forward(seg_params, cfg, seg, x, positions,
+                                 segment_ids=segment_ids, enc_out=enc_out,
+                                 remat=remat)
+        aux_total = aux_total + aux
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(params, cfg, x)
+    return logits, aux_total
+
+
+def _chunked_ce(logits_fn, x, labels, mask, vocab_size: int,
+                chunk: int = 1024):
+    """Cross-entropy computed in seq chunks with one-hot einsum (keeps the
+    (S, V) fp32 logits bounded and vocab-sharding friendly)."""
+    B, S, _ = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nch = (S + pad) // chunk
+    x = x.reshape(B, nch, chunk, -1).transpose(1, 0, 2, 3)
+    labels = labels.reshape(B, nch, chunk).transpose(1, 0, 2)
+    mask = mask.reshape(B, nch, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        xs, ls, ms = inp
+        logits = logits_fn(xs)                       # (B, chunk, V) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(ls, vocab_size, dtype=logits.dtype)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - gold) * ms
+        return (carry[0] + nll.sum(), carry[1] + ms.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (x, labels, mask))
+    return total / jnp.maximum(count, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            remat: str = "none"):
+    """Next-token CE loss + aux. batch: tokens (B,S) (+labels optional,
+    default shifted tokens; label -100 = ignore)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch, remat=remat)
+        tokens = batch["dec_tokens"]
+        x, positions = _embed_inputs(params, cfg, {"tokens": tokens})
+    else:
+        tokens = batch["tokens"]
+        x, positions = _embed_inputs(params, cfg, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg, seg_params in zip(cfg.segments, params["segments"]):
+        x, aux = segment_forward(seg_params, cfg, seg, x, positions,
+                                 enc_out=enc_out, remat=remat)
+        aux_total = aux_total + aux
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)), constant_values=-100)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # hidden x covers patch+text positions; labels only text positions
+        n_patch = batch["patch_embeds"].shape[1]
+        labels = jnp.pad(labels, ((0, 0), (n_patch, 0)), constant_values=-100)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"]["table"])
+
+    def logits_fn(xs):
+        lo = jnp.einsum("bsd,vd->bsv", xs.astype(jnp.float32),
+                        table.astype(jnp.float32))
+        return logical_constraint(lo, ("act_batch", "act_seq", "act_vocab"))
+
+    ce = _chunked_ce(logits_fn, x, labels_safe, mask, cfg.vocab_size)
+    return ce + aux_total, {"ce": ce, "aux": aux_total}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None, kv_quant: bool = False) -> list:
+    dtype = dtype or cfg.dtype
+    return [segment_init_cache(cfg, seg, batch, max_len, dtype, kv_quant)
+            for seg in cfg.segments]
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+                   kv_quant: bool = False):
+    dtype = dtype or cfg.dtype
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype, kv_quant))
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], cache,
+            true_len, *, segment_ids=None):
+    """Process prompts, fill the cache, return last-valid-position logits.
+    batch: tokens (B,S) [+frames/patch_embeds]."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch)
+        x, positions = _embed_inputs(params, cfg, {"tokens": batch["dec_tokens"]})
+    else:
+        x, positions = _embed_inputs(params, cfg, batch)
+    new_cache = []
+    for seg, seg_params, seg_cache in zip(cfg.segments, params["segments"],
+                                          cache):
+        x, nc = segment_prefill(seg_params, cfg, seg, x, positions, true_len,
+                                seg_cache, segment_ids=segment_ids,
+                                enc_out=enc_out)
+        new_cache.append(nc)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    # gather hidden state at the last valid position of each sequence
+    B = x.shape[0]
+    last = jnp.maximum(true_len - 1, 0)
+    x_last = x[jnp.arange(B), last][:, None, :]      # (B, 1, d)
+    logits = _lm_head(params, cfg, x_last)
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    """tokens: (B, 1) int32 -> (logits (B,1,V), new_cache)."""
+    x = embed_lookup(params["embed"], tokens).astype(cfg.dtype)
+    x = logical_constraint(x, ("act_batch", None, "act_embed"))
+    new_cache = []
+    for seg, seg_params, seg_cache in zip(cfg.segments, params["segments"],
+                                          cache):
+        x, nc = segment_decode_step(seg_params, cfg, seg, x, seg_cache)
+        new_cache.append(nc)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(params, cfg, x)
+    return logits, new_cache

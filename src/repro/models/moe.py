@@ -1,0 +1,221 @@
+"""Mixture-of-Experts layer: top-k router + sort-based grouped dispatch.
+
+Two execution paths are provided (DESIGN.md §2):
+  * ``grouped`` (the xPU/high-Op/B path): sort-based capacity dispatch into an
+    (E, C, d) buffer and MXU-aligned grouped GEMMs — the padded-dense path.
+  * ``duplex`` (core/duplex_moe.py): splits experts into hot/cold by token
+    count using the paper's greedy partitioner and runs the cold tail through
+    a bandwidth-optimized GEMV path, eliminating capacity-padding waste.
+
+The router also returns per-expert token counts: the serving scheduler feeds
+them to the Duplex planner (one-stage-stale statistics, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.ffn import ffn_specs, ffn_apply
+from repro.models.param import ParamSpec
+from repro.sharding.rules import logical_constraint
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    m = cfg.moe
+    pdtype = cfg.param_dtype
+    specs = {
+        "router": ParamSpec((d, m.num_experts), "float32", ("embed", None),
+                            init="small_normal"),
+        "wo": ParamSpec((m.num_experts, m.d_ff_expert, d), pdtype,
+                        ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.gated_ffn:
+        specs["wi_gate"] = ParamSpec((m.num_experts, d, m.d_ff_expert),
+                                     pdtype, ("experts", "embed",
+                                              "expert_mlp"))
+        specs["wi_up"] = ParamSpec((m.num_experts, d, m.d_ff_expert), pdtype,
+                                   ("experts", "embed", "expert_mlp"))
+    else:
+        specs["wi"] = ParamSpec((m.num_experts, d, m.d_ff_expert), pdtype,
+                                ("experts", "embed", "expert_mlp"))
+    if m.num_shared_experts:
+        specs["shared"] = ffn_specs(cfg, d_ff=m.d_ff_shared)
+    return specs
+
+
+class RouterOut(NamedTuple):
+    expert_idx: jnp.ndarray    # (T, top_k) int32
+    gates: jnp.ndarray         # (T, top_k) fp32
+    counts: jnp.ndarray        # (E,) int32 tokens per expert
+    aux_loss: jnp.ndarray      # scalar load-balance loss
+
+
+def route(params, m: MoEConfig, x_flat: jnp.ndarray) -> RouterOut:
+    T = x_flat.shape[0]
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        params["router"])               # (T, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, m.top_k)   # (T, k)
+    if m.norm_topk_probs:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    one_hot = jax.nn.one_hot(expert_idx, m.num_experts, dtype=jnp.float32)
+    counts = one_hot.sum(axis=(0, 1)).astype(jnp.int32)  # (E,)
+    # Switch-style load-balance aux loss
+    density = one_hot.mean(axis=(0, 1)) * m.num_experts
+    density_proxy = probs.mean(axis=0) * m.num_experts
+    aux = m.aux_loss_coef * jnp.mean(density * density_proxy)
+    return RouterOut(expert_idx.astype(jnp.int32), gates, counts, aux)
+
+
+def _capacity(T: int, m: MoEConfig, align: int = 8) -> int:
+    c = int(T * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return max(align, -(-c // align) * align)
+
+
+class DispatchPlan(NamedTuple):
+    """Cumsum-based dispatch of (T*top_k) assignments into (E, C) slots."""
+    src_token: jnp.ndarray    # (E*C,) int32 token index feeding each slot (or T)
+    slot_gate: jnp.ndarray    # (E*C,) fp32 gate for each slot (0 if empty)
+    pos_in_group: jnp.ndarray  # (T*k,) position of each assignment in its expert
+    capacity: int
+
+
+def group_positions(flat_expert: jnp.ndarray, E: int) -> jnp.ndarray:
+    """pos_in_group[i] = #{j < i : expert[j] == expert[i]} without a sort.
+
+    An argsort here would be a *global distributed sort* over T·k elements —
+    at train scale (1M tokens × top-k) XLA lowers that to an all-gather-heavy
+    mega-collective. The exclusive cumsum of the one-hot mask is the GSPMD
+    MoE dispatch: per-shard cumsum + a tiny (dp × E) offset exchange.
+    """
+    onehot = (flat_expert[:, None]
+              == jnp.arange(E, dtype=flat_expert.dtype)[None]).astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                   # inclusive - 1
+    return jnp.take_along_axis(pos, flat_expert[:, None].astype(jnp.int32),
+                               axis=1)[:, 0]
+
+
+def make_dispatch(router: RouterOut, m: MoEConfig, T: int,
+                  capacity: Optional[int] = None) -> DispatchPlan:
+    k, E = m.top_k, m.num_experts
+    C = capacity or _capacity(T, m)
+    flat_expert = router.expert_idx.reshape(-1)            # (T*k,)
+    flat_gate = router.gates.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    pos_in_group = group_positions(flat_expert, E)
+    keep = pos_in_group < C                                 # capacity drop
+    slot = jnp.where(keep, flat_expert * C + pos_in_group, E * C)
+    src_token = jnp.full((E * C + 1,), T, dtype=jnp.int32)
+    src_token = src_token.at[slot].set(jnp.where(keep, flat_token, T))[:-1]
+    slot_gate = jnp.zeros((E * C + 1,), jnp.float32)
+    slot_gate = slot_gate.at[slot].set(jnp.where(keep, flat_gate, 0.0))[:-1]
+    return DispatchPlan(src_token, slot_gate, pos_in_group, C)
+
+
+def grouped_expert_ffn(params, x_grouped):
+    """x_grouped: (E, ..., d) -> (E, ..., d); the high-Op/B grouped path."""
+    if "wi" in params:           # non-gated experts (GLaM/OPT style)
+        h = jnp.einsum("e...d,edf->e...f", x_grouped, params["wi"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x_grouped.dtype)
+        if h.ndim == 4:
+            h = logical_constraint(h, ("act_exp", "act_cap", None,
+                                       "act_mlp"))
+        return jnp.einsum("e...f,efd->e...d", h, params["wo"])
+    g = jnp.einsum("e...d,edf->e...f", x_grouped, params["wi_gate"])
+    u = jnp.einsum("e...d,edf->e...f", x_grouped, params["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x_grouped.dtype) * u
+    if h.ndim == 4:
+        h = logical_constraint(h, ("act_exp", "act_cap", None, "act_mlp"))
+    return jnp.einsum("e...f,efd->e...d", h, params["wo"])
+
+
+
+
+def shard_dispatch(expert_idx, gates, Tl: int, E: int, caps, bases,
+                   n_slots: int):
+    """Per-shard slot assignment (vmapped over the shard dim).
+
+    expert_idx/gates: (Tl*k,) one shard's flattened assignments; ``caps`` and
+    ``bases`` are (E,) per-expert slot capacities / base offsets. Returns
+    (src_token (n_slots,), slot_gate (n_slots,)).
+    """
+    k = expert_idx.shape[0] // Tl
+    pos = group_positions(expert_idx, E)
+    keep = pos < caps[expert_idx]
+    slot = jnp.where(keep, bases[expert_idx] + pos, n_slots)
+    ft = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), k)
+    src = jnp.full((n_slots + 1,), Tl, dtype=jnp.int32)
+    src = src.at[slot].set(jnp.where(keep, ft, Tl))[:-1]
+    gate = jnp.zeros((n_slots + 1,), jnp.float32)
+    gate = gate.at[slot].set(jnp.where(keep, gates, 0.0))[:-1]
+    return src, gate
+
+
+def gather_slots(xb, src):
+    """Shard-local token->slot gather. xb (n, Tl, d); src (n, n_slots).
+    Returns (n, n_slots, d). take_along_axis over the per-shard token dim
+    keeps the gather local to each shard tile — a global jnp.take here
+    lowers to a full-buffer all-reduce under GSPMD."""
+    xs_pad = jnp.concatenate([xb, jnp.zeros_like(xb[:, :1])], axis=1)
+    return jnp.take_along_axis(xs_pad, src[..., None], axis=1)
+
+
+def combine_slots(y_slots, src, Tl: int):
+    """Shard-local slot->token scatter-add. y_slots (n, n_slots, d) ->
+    flattened (n*Tl, d)."""
+    n, _, d = y_slots.shape
+
+    def one(ys, s):
+        out = jnp.zeros((Tl + 1, d), ys.dtype)
+        return out.at[s].add(ys)[:-1]
+
+    return jax.vmap(one)(y_slots, src).reshape(n * Tl, d)
+
+
+def moe_apply(params, cfg: ModelConfig, x, *, capacity: Optional[int] = None,
+              return_stats: bool = False):
+    """x: (B, S, d) (or (T, d)). Grouped (paper-baseline xPU) path with
+    hierarchical (per-shard-tile) dispatch."""
+    from repro.core.execution import shard_blocks
+    m = cfg.moe
+    E = m.num_experts
+    shape = x.shape
+    x3 = x if x.ndim == 3 else x[None]
+    xb, restore = shard_blocks(x3)                        # (n, Tl, d)
+    n, Tl, d = xb.shape
+    T = n * Tl
+    x_flat = xb.reshape(T, d)
+    router = route(params, m, x_flat)
+    C = (max(1, -(-capacity // n)) if capacity is not None
+         else _capacity(Tl, m))
+    caps = jnp.full((E,), C, jnp.int32)
+    bases = (jnp.arange(E, dtype=jnp.int32) * C)
+    fe = router.expert_idx.reshape(n, Tl * m.top_k)
+    fg = router.gates.reshape(n, Tl * m.top_k)
+    src, slot_gate = jax.vmap(
+        lambda e, g: shard_dispatch(e, g, Tl, E, caps, bases, E * C))(fe, fg)
+    x_slots = gather_slots(xb, src)                       # (n, E*C, d)
+    # keep the gather output (and therefore its transpose-gradient) sharded
+    # with the token tiles: the bwd scatter-add otherwise all-reduces a
+    # replicated full slot buffer per layer
+    x_slots = logical_constraint(x_slots, ("act_cap", None, "act_embed"))
+    x_grouped = x_slots.reshape(n, E, C, d).transpose(1, 0, 2, 3)
+    x_grouped = logical_constraint(x_grouped,
+                                   ("act_exp", "act_cap", None, "act_embed"))
+    y_grouped = grouped_expert_ffn(params, x_grouped)     # (E, n, C, d)
+    y_grouped = logical_constraint(y_grouped,
+                                   ("act_exp", "act_cap", None, "act_embed"))
+    y_slots = y_grouped.transpose(1, 0, 2, 3).reshape(n, E * C, d)
+    y_slots = y_slots * slot_gate[..., None].astype(y_slots.dtype)
+    y_flat = combine_slots(y_slots, src, Tl)              # (T, d)
+    if m.num_shared_experts:
+        y_flat = y_flat + ffn_apply(params["shared"], x_flat)
+    y = restore(y_flat)
+    y = y.reshape(shape)
+    if return_stats:
+        return y, router
+    return y, router.aux_loss

@@ -1,0 +1,97 @@
+"""Lightweight parameter system: specs with logical sharding axes.
+
+Modules declare parameters as ParamSpec trees; ``init_params`` materializes
+them, ``abstract_params`` gives ShapeDtypeStructs (dry-run, no allocation),
+``logical_axes`` gives the parallel tree of logical-axis tuples consumed by
+``sharding/rules.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any
+    # one logical axis name (or None) per dim; resolved by sharding rules
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones | small_normal | ssm_a | ssm_dt
+    scale: float = 1.0       # stddev multiplier for normal inits
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def abstract_params(tree):
+    """ShapeDtypeStruct tree — used by the dry-run (no device allocation)."""
+    return _tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def logical_axes(tree):
+    return _tree_map_specs(lambda s: s.axes, tree)
+
+
+def param_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def _materialize(key, spec: ParamSpec):
+    shape, dtype = spec.shape, spec.dtype
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "ssm_a":
+        # A_log init: log of uniform [1, 16] (mamba2 convention)
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "ssm_dt":
+        # dt_bias: inverse-softplus of uniform-log dt in [1e-3, 1e-1]
+        dt = jnp.exp(jax.random.uniform(key, shape, jnp.float32)
+                     * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+        inv = dt + jnp.log(-jnp.expm1(-dt))
+        return inv.astype(dtype)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = spec.scale / np.sqrt(max(fan_in, 1))
+    if spec.init == "small_normal":
+        std = 0.02 * spec.scale
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(key, tree):
+    """Materialize a ParamSpec tree into actual arrays (deterministic per-leaf
+    keys derived by fold_in over the flattened leaf index)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        out.append(_materialize(jax.random.fold_in(key, i), spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stack_specs(tree, n: int, axis_name: Optional[str] = "layers"):
+    """Add a leading stacked dim of size n to every spec (for scan segments)."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, s.dtype, (axis_name,) + s.axes,
+                         s.init, s.scale)
+    return _tree_map_specs(f, tree)

@@ -1,0 +1,214 @@
+"""Mamba-2 (SSD, state-space duality) mixer — chunked train/prefill + decode.
+
+TPU adaptation note (DESIGN.md): we implement the SSD *chunked block
+decomposition* — intra-chunk work is dense (Q x Q) GEMM-shaped (MXU friendly),
+inter-chunk work is a short scan over per-chunk states — rather than the
+GPU-kernel scan of the original. ngroups is fixed to 1 (both assigned SSM
+archs use a single B/C group), which keeps einsums simple.
+
+The single-token decode step is a ~2 Op/B state update: it reads state
+(H, P, N) + writes it back per token — exactly the low-Op/B band the paper
+routes to Logic-PIM; dispatch (core/dispatch.py) routes it to the bandwidth
+path on TPU.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import rmsnorm, rmsnorm_specs
+from repro.models.param import ParamSpec
+from repro.sharding.rules import logical_constraint
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nheads = s.nheads(cfg.d_model)
+    conv_dim = d_in + 2 * s.ngroups * s.d_state
+    return s, d_in, nheads, conv_dim
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    pdtype = cfg.param_dtype
+    d_proj = 2 * d_in + 2 * s.ngroups * s.d_state + nheads
+    return {
+        "in_proj": ParamSpec((d, d_proj), pdtype, ("embed", "mlp")),
+        "conv_w": ParamSpec((s.d_conv, conv_dim), pdtype, ("conv", "mlp")),
+        "conv_b": ParamSpec((conv_dim,), pdtype, ("mlp",), init="zeros"),
+        "A_log": ParamSpec((nheads,), "float32", (None,), init="ssm_a"),
+        "D": ParamSpec((nheads,), "float32", (None,), init="ones"),
+        "dt_bias": ParamSpec((nheads,), "float32", (None,), init="ssm_dt"),
+        "norm": rmsnorm_specs(d_in, pdtype),
+        "out_proj": ParamSpec((d_in, d), pdtype, ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xBC, dt
+
+
+def _causal_conv(params, xBC):
+    """Depthwise causal conv over seq. xBC: (B, S, conv_dim)."""
+    w = params["conv_w"]                       # (K, conv_dim)
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + params["conv_b"][None, None, :]
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """SSD chunked algorithm (ngroups=1).
+
+    x: (Bt, S, H, P); dt: (Bt, S, H) (post-softplus); A: (H,) negative;
+    B, C: (Bt, S, N). Returns (y (Bt,S,H,P), final_state (Bt,H,N,P)).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    xc = x.reshape(Bt, nc, chunk, H, P)
+    dtc = dt.reshape(Bt, nc, chunk, H).astype(jnp.float32)
+    Bc = B.reshape(Bt, nc, chunk, N).astype(jnp.float32)
+    Cc = C.reshape(Bt, nc, chunk, N).astype(jnp.float32)
+
+    la = dtc * A[None, None, None, :]                  # log-decay, (Bt,nc,Q,H)
+    cum = jnp.cumsum(la, axis=2)                       # inclusive cumsum
+    ii = jnp.arange(chunk)
+    tri = (ii[:, None] >= ii[None, :])
+
+    state0 = (initial_state.astype(jnp.float32) if initial_state is not None
+              else jnp.zeros((Bt, H, N, P), jnp.float32))
+
+    def scan_body(state, inp):
+        # one chunk at a time: the (Q x Q x H) intra-chunk block would be
+        # ~nc x larger materialized across all chunks at once (54 GB/chip
+        # peak on jamba train before this change)
+        x_c, dt_c, cum_c, B_c, C_c = inp
+        CB = jnp.einsum("biN,bjN->bij", C_c, B_c)
+        diff = cum_c[:, :, None, :] - cum_c[:, None, :, :]   # (Bt,i,j,H)
+        diff = jnp.where(tri[None, :, :, None], diff, -jnp.inf)
+        W = CB[..., None] * jnp.exp(diff) * dt_c[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, x_c.astype(jnp.float32))
+        # inter-chunk output using the state entering this chunk
+        y_int = jnp.einsum("bih,biN,bhNp->bihp", jnp.exp(cum_c), C_c, state)
+        # state update: decay to chunk end + this chunk's contribution
+        dec_end = jnp.exp(cum_c[:, -1:, :] - cum_c)          # (Bt,Q,H)
+        s_c = jnp.einsum("bjh,bjN,bjhp->bhNp", dec_end * dt_c, B_c,
+                         x_c.astype(jnp.float32))
+        state = state * jnp.exp(cum_c[:, -1, :])[:, :, None, None] + s_c
+        return state, y_intra + y_int
+
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          cum.transpose(1, 0, 2, 3), Bc.transpose(1, 0, 2, 3),
+          Cc.transpose(1, 0, 2, 3))
+    # remat per chunk: the scan transpose would otherwise save every chunk's
+    # (Q x Q x H) intra block — the backward recomputes it from the carries
+    body = jax.checkpoint(scan_body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    final_state, y_all = jax.lax.scan(body, state0, xs)
+    y = y_all.transpose(1, 0, 2, 3, 4).reshape(Bt, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final_state
+
+
+def mamba_forward(params, cfg: ModelConfig, x, *, return_state: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model). Optionally returns decode cache."""
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    Bt, S, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(params, xBC)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs = xBC[..., :d_in].reshape(Bt, S, nheads, s.headdim)
+    Bmat = xBC[..., d_in:d_in + s.d_state]
+    Cmat = xBC[..., d_in + s.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    y, final_state = ssd_chunked(xs, dt, A, Bmat, Cmat, s.chunk_size)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(Bt, S, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    out = logical_constraint(out, ("act_batch", "act_seq", "act_embed"))
+    if return_state:
+        # decode cache: last (d_conv-1) pre-conv xBC inputs + final ssm state
+        zx = jnp.einsum("bsd,dk->bsk", x[:, max(0, S - (s.d_conv - 1)):],
+                        params["in_proj"])
+        _, xBC_tail, _ = _split_proj(cfg, zx)
+        if xBC_tail.shape[1] < s.d_conv - 1:
+            xBC_tail = jnp.pad(xBC_tail,
+                               ((0, 0), (s.d_conv - 1 - xBC_tail.shape[1], 0),
+                                (0, 0)))
+        cache = {"conv": xBC_tail.astype(x.dtype),
+                 "ssm": final_state.astype(jnp.float32)}
+        return out, cache
+    return out
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nheads, s.d_state, s.headdim), jnp.float32),
+    }
+
+
+def mamba_decode_step(params, cfg: ModelConfig, x, cache):
+    """x: (B, 1, d_model). Single-token recurrence (the ~2 Op/B update)."""
+    s, d_in, nheads, conv_dim = _dims(cfg)
+    Bt = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])[:, 0]  # (B, k)
+    z, xBC_new, dt = _split_proj(cfg, zxbcdt)
+    # conv over (tail ++ new)
+    w = params["conv_w"]                                   # (K, conv_dim)
+    buf = jnp.concatenate([cache["conv"], xBC_new[:, None, :]], axis=1)  # (B,K,cd)
+    conv_out = jnp.einsum("bkc,kc->bc", buf, w) + params["conv_b"][None]
+    xBC = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xh = xBC[..., :d_in].reshape(Bt, nheads, s.headdim)
+    Bmat = xBC[..., d_in:d_in + s.d_state].astype(jnp.float32)     # (B, N)
+    Cmat = xBC[..., d_in + s.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])
+    state = cache["ssm"]                                           # (B,H,N,P)
+    from repro.core.execution import current_plan
+    if current_plan().use_kernels:
+        # the SSM bandwidth-path kernel (kernels/ssd_decode.py): streams the
+        # fp32 state HBM->VMEM->HBM once — the ~2 Op/B op C1 routes to the
+        # bandwidth unit (DESIGN.md §4)
+        from repro.kernels.ops import ssd_decode
+        y, state = ssd_decode(state, xh, dt, params["A_log"], Bmat, Cmat,
+                              params["D"])
+        y = y.astype(x.dtype)
+    else:
+        A = -jnp.exp(params["A_log"])                              # (H,)
+        a = jnp.exp(dt * A[None, :])                               # (B, H)
+        upd = jnp.einsum("bh,bN,bhp->bhNp", dt, Bmat,
+                         xh.astype(jnp.float32))
+        state = state * a[:, :, None, None] + upd
+        y = jnp.einsum("bN,bhNp->bhp", Cmat, state)                # (B,H,P)
+        y = y.astype(x.dtype) \
+            + params["D"][None, :, None].astype(x.dtype) * xh
+    y = y.reshape(Bt, d_in)
+    y = rmsnorm(params["norm"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"])[:, None, :]
+    new_cache = {"conv": buf[:, 1:], "ssm": state}
+    return out, new_cache

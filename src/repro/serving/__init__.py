@@ -1,0 +1,9 @@
+from repro.serving.engine import ServingEngine, StageReport
+from repro.serving.kvmanager import KVManager
+from repro.serving.request import Request, RequestState
+from repro.serving.sampling import SamplingParams, sample
+from repro.serving.scheduler import ContinuousBatchingScheduler, StageDecision
+
+__all__ = ["ServingEngine", "StageReport", "KVManager", "Request",
+           "RequestState", "SamplingParams", "sample",
+           "ContinuousBatchingScheduler", "StageDecision"]

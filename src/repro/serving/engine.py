@@ -1,0 +1,289 @@
+"""Continuous-batching serving engine with Duplex dispatch (C1–C3).
+
+Stage loop (paper §II-C / §V):
+
+  * The scheduler forms a stage: decode sequences + (possibly) admitted
+    prefill sequences (mixed stage).
+  * C1: ``core/dispatch.plan_stage`` computes each component's Op/B and
+    selects its execution path; the engine renders that into ExecutionPlans
+    the jitted step functions are traced under.
+  * C2: MoE layers in decoding-heavy stages run the *duplex* implementation —
+    the partitioner's statically-bucketed ``k_cold`` picks how many experts go
+    through the bandwidth (gather-GEMV) path; which experts is decided
+    dynamically per layer from the actual router counts inside the step.
+  * C3: the mixed stage runs decode-sequence attention through the
+    bandwidth-path decode kernel and prefill attention through the
+    compute-path blockwise kernel. On Duplex hardware the two run
+    concurrently on Logic-PIM/xPU; on a TPU they time-share the chip — the
+    routing (which kernel, which layout) is the paper's mechanism, the
+    concurrency benefit is modeled in ``sim/`` (DESIGN.md §2).
+
+jit discipline: step functions are cached per static key (k_cold bucket,
+prefill shape bucket) so continuous batching never recompiles in steady
+state.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import DUPLEX
+from repro.core.dispatch import plan_stage
+from repro.core.execution import ExecutionPlan, execution_plan
+from repro.core.partition import DuplexPlanner, build_luts
+from repro.models.model import decode_step, init_cache, prefill
+from repro.serving.kvmanager import KVManager
+from repro.serving.request import Request, RequestState
+from repro.serving.sampling import SamplingParams, sample
+from repro.serving.scheduler import ContinuousBatchingScheduler, StageDecision
+
+
+def _bucket(n: int, buckets) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclass
+class StageReport:
+    stage_index: int
+    is_mixed: bool
+    num_decode: int
+    num_prefill: int
+    k_cold: int
+    bandwidth_flop_fraction: float
+    wall_time: float
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
+                 max_len: int, use_duplex: bool = True,
+                 use_kernels: bool = False, kv_quant: bool = False,
+                 preemption: str = "none",
+                 sampling: SamplingParams = SamplingParams(),
+                 max_prefill_seqs: int = 4, max_prefill_tokens: int = 8192,
+                 prefill_len_buckets: Tuple[int, ...] = (64, 128, 256, 512,
+                                                         1024, 2048, 4096),
+                 seed: int = 0):
+        assert not cfg.is_encoder_decoder, \
+            "engine serves decoder-only LMs; enc-dec is exercised via serve_step"
+        assert preemption in ("none", "migrate", "recompute")
+        self.preemption = preemption
+        self.preemptions = 0
+        self.cfg = cfg
+        self.params = params
+        self.kv = KVManager(cfg, max_slots, max_len, kv_quant=kv_quant)
+        self.scheduler = ContinuousBatchingScheduler(
+            max_prefill_seqs=max_prefill_seqs,
+            max_prefill_tokens=max_prefill_tokens)
+        self.sampling = sampling
+        self.use_duplex = use_duplex and cfg.moe is not None
+        self.use_kernels = use_kernels
+        self.prefill_len_buckets = tuple(
+            b for b in prefill_len_buckets if b <= max_len) or (max_len,)
+        self.seq_buckets = tuple(sorted({1, 2, max_prefill_seqs}))
+        self.planner: Optional[DuplexPlanner] = None
+        if self.use_duplex:
+            lut_x, lut_p = build_luts(DUPLEX, cfg.d_model,
+                                      cfg.moe.d_ff_expert,
+                                      max_tokens=max(4 * max_slots, 512))
+            self.planner = DuplexPlanner(lut_x, lut_p, cfg.moe.num_experts)
+        self._key = jax.random.PRNGKey(seed)
+        self._tokens = np.zeros((max_slots,), np.int32)   # last token per slot
+        self._slot_req: Dict[int, Request] = {}
+        self._decode_fns: Dict[int, callable] = {}
+        self._prefill_fns: Dict[Tuple[int, int], callable] = {}
+        self._stage_idx = 0
+        self.reports: List[StageReport] = []
+
+    # ------------------------------------------------------------------ jits
+    def _decode_fn(self, k_cold: int):
+        if k_cold not in self._decode_fns:
+            cfg = self.cfg
+            plan = ExecutionPlan(
+                moe_impl="duplex" if k_cold > 0 else "grouped",
+                k_cold=k_cold, use_kernels=self.use_kernels)
+
+            @jax.jit
+            def fn(params, tokens, cache, key):
+                with execution_plan(plan):
+                    logits, new_cache = decode_step(params, cfg, tokens, cache)
+                nxt = sample(logits, key, self.sampling)
+                return nxt, new_cache
+
+            self._decode_fns[k_cold] = fn
+        return self._decode_fns[k_cold]
+
+    def _prefill_fn(self, n_seqs: int, seq_len: int):
+        key = (n_seqs, seq_len)
+        if key not in self._prefill_fns:
+            cfg = self.cfg
+            max_len = self.kv.max_len
+            # mixed-stage prefill is the high-Op/B side: grouped MoE +
+            # blockwise (compute-path) attention, per C1/C3.
+            plan = ExecutionPlan(moe_impl="grouped",
+                                 use_kernels=self.use_kernels)
+
+            kv_quant = self.kv.kv_quant
+
+            @jax.jit
+            def fn(params, tokens, true_len, skey):
+                with execution_plan(plan):
+                    cache = init_cache(cfg, n_seqs, max_len,
+                                       kv_quant=kv_quant)
+                    logits, new_cache = prefill(params, cfg,
+                                                {"tokens": tokens}, cache,
+                                                true_len)
+                nxt = sample(logits, skey, self.sampling)
+                return nxt, new_cache
+
+            self._prefill_fns[key] = fn
+        return self._prefill_fns[key]
+
+    # ------------------------------------------------------------------ api
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _maybe_preempt(self) -> None:
+        """SVIII-C: if a fresh request is starving with zero free slots,
+        evict a running request (migrate its KV to host, or drop it for
+        later recomputation) to reclaim capacity."""
+        from repro.serving import preemption as pre
+        if self.preemption == "none" or self.kv.free_slots > 0:
+            return
+        q = self.scheduler.queue
+        if not q or q[0].was_preempted:
+            return                      # nothing starving / avoid thrash
+        victim = pre.pick_victim(self.scheduler.running)
+        if victim is None:
+            return
+        self._slot_req.pop(victim.slot, None)
+        if self.preemption == "migrate":
+            pre.migrate_out(self.kv, victim)
+        else:
+            pre.recompute_out(self.kv, victim)
+        self.scheduler.resubmit_preempted(victim)
+        self.preemptions += 1
+
+    def _admit_restored(self, req, tnow: float) -> None:
+        """Re-admit a migrated request: scatter its host-saved KV back into
+        a fresh slot and resume decoding (no recompute)."""
+        from repro.serving import preemption as pre
+        slot = self.kv.allocate()
+        pre.restore_slot(self.kv, slot, req.saved_cache)
+        req.saved_cache = None
+        req.slot = slot
+        self._slot_req[slot] = req
+        self._tokens[slot] = req.output[-1]
+        req.state = RequestState.DECODE
+
+    def step(self, now: Optional[float] = None) -> Optional[StageReport]:
+        """Run one continuous-batching stage. Returns None when idle."""
+        t0 = time.monotonic()
+        self._maybe_preempt()
+        decision = self.scheduler.next_stage(self.kv.free_slots)
+        if decision is None:
+            return None
+        mix = decision.mix()
+        k_cold = 0
+        if self.use_duplex and mix.num_tokens > 0:
+            # planner input: expected per-expert counts for this stage's token
+            # count (uniform routing, paper §VI); the jitted step re-ranks
+            # experts from *actual* counts — only the width is static.
+            m = self.cfg.moe
+            rng = np.random.default_rng(self._stage_idx)
+            counts = rng.multinomial(mix.num_tokens * m.top_k,
+                                     np.full(m.num_experts,
+                                             1.0 / m.num_experts))
+            k_cold = self.planner.k_cold_static(counts)
+        splan = plan_stage(self.cfg, mix) if mix.num_tokens else None
+
+        # ---- decode half (bandwidth path) — runs over all slots; outputs of
+        # inactive slots are discarded, their cache is overwritten on reuse.
+        if decision.decoding:
+            fn = self._decode_fn(k_cold)
+            toks = jnp.asarray(self._tokens)[:, None]
+            nxt, self.kv.cache = fn(self.params, toks, self.kv.cache,
+                                    self._next_key())
+            nxt = np.asarray(nxt)
+            tnow = now if now is not None else time.monotonic()
+            for r in decision.decoding:
+                tok = int(nxt[r.slot])
+                self._tokens[r.slot] = tok
+                r.record_token(tok, tnow)
+
+        # ---- prefill half (compute path), mixed stages only
+        tnow0 = now if now is not None else time.monotonic()
+        restored = [r for r in decision.admitted
+                    if r.saved_cache is not None]
+        fresh = [r for r in decision.admitted if r.saved_cache is None]
+        for r in restored:                       # migrated-back requests
+            self._admit_restored(r, tnow0)
+        if fresh:
+            n_b = _bucket(len(fresh), self.seq_buckets)
+            # recompute-preempted requests re-prefill prompt + generated
+            seqs = [list(r.prompt) + list(r.output) for r in fresh]
+            max_l = max(len(sq) for sq in seqs)
+            l_b = _bucket(max_l, self.prefill_len_buckets)
+            tokens = np.zeros((n_b, l_b), np.int32)
+            true_len = np.zeros((n_b,), np.int32)
+            for i, sq in enumerate(seqs):
+                tokens[i, :len(sq)] = sq[:l_b]
+                true_len[i] = min(len(sq), l_b)
+            fn = self._prefill_fn(n_b, l_b)
+            nxt, local_cache = fn(self.params, jnp.asarray(tokens),
+                                  jnp.asarray(true_len), self._next_key())
+            nxt = np.asarray(nxt)
+            slots = [self.kv.allocate() for _ in fresh]
+            take = jnp.asarray(range(len(slots)), dtype=jnp.int32)
+            local = [jax.tree_util.tree_map(lambda a: a[:, take], seg)
+                     for seg in local_cache]
+            self.kv.scatter(local, slots)
+            tnow = now if now is not None else time.monotonic()
+            for i, (r, s) in enumerate(zip(fresh, slots)):
+                r.slot = s
+                self._slot_req[s] = r
+                tok = int(nxt[i])
+                self._tokens[s] = tok
+                r.record_token(tok, tnow)
+
+        # ---- retire
+        for r in decision.admitted + decision.decoding:
+            if r.done and r.slot >= 0:
+                self.kv.free(r.slot)
+                self._slot_req.pop(r.slot, None)
+        self.scheduler.commit_stage(decision)
+
+        report = StageReport(
+            stage_index=self._stage_idx, is_mixed=decision.is_mixed,
+            num_decode=len(decision.decoding),
+            num_prefill=len(decision.admitted), k_cold=k_cold,
+            bandwidth_flop_fraction=(splan.bandwidth_fraction()
+                                     if splan else 0.0),
+            wall_time=time.monotonic() - t0)
+        self.reports.append(report)
+        self._stage_idx += 1
+        return report
+
+    def run(self, requests: List[Request], *, max_stages: int = 10_000
+            ) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        stages = 0
+        while self.scheduler.has_work and stages < max_stages:
+            if self.step() is None:
+                break
+            stages += 1
+        return requests

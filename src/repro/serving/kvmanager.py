@@ -1,0 +1,78 @@
+"""Slot-based KV-cache manager.
+
+The engine owns one global cache (all model layers) sized for ``max_slots``
+sequences × ``max_len`` positions; this manager tracks slot occupancy and
+performs the slot-indexed scatter of freshly prefilled per-request caches
+into the global cache. Freeing is O(1) bookkeeping — a slot's stale contents
+are fully overwritten by the next prefill (the prefill path builds its local
+cache from a fresh init, so no stale positions can leak).
+
+Memory note (paper §III-B/Fig. 5(c)): the global KV cache is the capacity
+item that limits batch size. ``bytes_per_slot`` reports it so deployments can
+size max_slots against device HBM; the Duplex single-device design wins over
+hetero systems precisely because it does not duplicate MoE weights and can
+spend that capacity on KV slots.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import init_cache
+
+
+class KVManager:
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int,
+                 dtype=None, kv_quant: bool = False):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.kv_quant = kv_quant
+        self.cache = init_cache(cfg, max_slots, max_len, dtype, kv_quant)
+        self._free: List[int] = list(range(max_slots))
+        self._active: set = set()
+
+    # ---- occupancy ----------------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self._active)
+
+    def allocate(self) -> int:
+        slot = self._free.pop(0)
+        self._active.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        self._active.discard(slot)
+        self._free.append(slot)
+        self._free.sort()
+
+    # ---- cache ops -----------------------------------------------------------
+    def scatter(self, local_cache, slots: Sequence[int]) -> None:
+        """Insert per-request caches (batch = len(slots)) at slot indices.
+        Every cache leaf is laid out (stacked_layers, batch, ...)."""
+        idx = jnp.asarray(list(slots), dtype=jnp.int32)
+
+        def leaf(g, l):
+            return g.at[:, idx].set(l.astype(g.dtype))
+
+        self.cache = [jax.tree_util.tree_map(leaf, g, l)
+                      for g, l in zip(self.cache, local_cache)]
+
+    def bytes_per_slot(self) -> int:
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        total = sum(l.size * l.dtype.itemsize for l in leaves)
+        return total // self.max_slots
+
+    def stats(self) -> dict:
+        return {"max_slots": self.max_slots, "free": self.free_slots,
+                "active": len(self._active),
+                "bytes_per_slot": self.bytes_per_slot()}

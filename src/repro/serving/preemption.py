@@ -1,0 +1,68 @@
+"""KV-cache preemption: migration and recomputation (paper §VIII-C).
+
+When the KV capacity is exhausted and new requests are starving, the engine
+evicts a running request and reclaims its slot. Two policies, per the
+paper's discussion of PagedAttention:
+
+  * ``migrate``   — the request's per-slot KV cache is copied to host
+    memory; when a slot frees up, the cache is scattered back and decoding
+    resumes where it left off (no recompute).
+  * ``recompute`` — the cache is simply dropped; the request re-enters the
+    queue with prompt = original prompt + generated-so-far and is
+    re-prefilled later (trades compute for host memory/PCIe).
+
+The mechanics here are exactly the cache-slot gather/scatter the paper's
+Duplex device would do against CPU memory.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.serving.kvmanager import KVManager
+from repro.serving.request import Request, RequestState
+
+
+def gather_slot(kv: KVManager, slot: int):
+    """Pull one slot's cache (all layers) to host memory."""
+    return [jax.tree_util.tree_map(lambda a: np.asarray(a[:, slot]), seg)
+            for seg in kv.cache]
+
+
+def restore_slot(kv: KVManager, slot: int, saved) -> None:
+    """Scatter a host-saved cache back into a (new) slot."""
+    def leaf(g, l):
+        return g.at[:, slot].set(jax.numpy.asarray(l).astype(g.dtype))
+
+    kv.cache = [jax.tree_util.tree_map(leaf, g, l)
+                for g, l in zip(kv.cache, saved)]
+
+
+def migrate_out(kv: KVManager, req: Request) -> None:
+    """Evict `req`: save its cache to host, free the slot."""
+    assert req.slot >= 0
+    req.saved_cache = gather_slot(kv, req.slot)
+    kv.free(req.slot)
+    req.slot = -1
+    req.state = RequestState.QUEUED
+
+
+def recompute_out(kv: KVManager, req: Request) -> None:
+    """Evict `req` dropping its cache; it will re-prefill prompt+output."""
+    assert req.slot >= 0
+    req.saved_cache = None
+    kv.free(req.slot)
+    req.slot = -1
+    req.state = RequestState.QUEUED
+
+
+def pick_victim(running: List[Request]) -> Optional[Request]:
+    """Evict the request with the fewest generated tokens (least sunk work;
+    vLLM evicts latest-arrived — equivalent under FCFS admission)."""
+    decoding = [r for r in running if r.state == RequestState.DECODE
+                and r.slot >= 0]
+    if not decoding:
+        return None
+    return min(decoding, key=lambda r: len(r.output))

@@ -1,0 +1,64 @@
+"""Inference request lifecycle (paper §II-C, Fig. 2)."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"     # scheduled for the next mixed stage
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    eos_id: Optional[int] = None
+    state: RequestState = RequestState.QUEUED
+    slot: int = -1
+    output: List[int] = field(default_factory=list)
+    # preemption (paper SVIII-C): host-saved KV (migrate) / retry marker
+    saved_cache: Optional[list] = None
+    was_preempted: bool = False
+    # latency bookkeeping (T2FT / TBT / E2E, paper Fig. 2)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+
+    @property
+    def l_in(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.state == RequestState.DONE
+
+    def record_token(self, token: int, now: float) -> None:
+        self.output.append(token)
+        self.token_times.append(now)
+        if self.first_token_time is None:
+            self.first_token_time = now
+        if (len(self.output) >= self.max_new_tokens
+                or (self.eos_id is not None and token == self.eos_id)):
+            self.state = RequestState.DONE
+            self.finish_time = now
+
+    # ---- metrics ----
+    def t2ft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def e2e(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    def tbts(self) -> List[float]:
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]

@@ -1,0 +1,38 @@
+"""Token sampling: greedy / temperature / top-k (jit-friendly)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => full distribution
+    top_p: float = 1.0           # nucleus sampling threshold
+
+
+def sample(logits, key, params: SamplingParams):
+    """logits: (B, 1, V) -> (B,) int32 next tokens."""
+    logits = logits[:, -1, :].astype(jnp.float32)
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / params.temperature
+    if params.top_k > 0:
+        top, _ = jax.lax.top_k(logits, params.top_k)
+        thresh = top[:, -1:]
+        logits = jnp.where(logits < thresh, -jnp.inf, logits)
+    if params.top_p < 1.0:
+        # nucleus: keep the smallest prefix of the sorted distribution whose
+        # cumulative mass reaches top_p (always keep the argmax)
+        sort_idx = jnp.argsort(-logits, axis=-1)
+        sorted_logits = jnp.take_along_axis(logits, sort_idx, axis=-1)
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep_sorted = (cum - probs) < params.top_p   # prefix incl. first
+        keep = jnp.zeros_like(keep_sorted).at[
+            jnp.arange(logits.shape[0])[:, None], sort_idx].set(keep_sorted)
+        logits = jnp.where(keep, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,104 @@
+"""Stage-level continuous-batching scheduler (ORCA [56] / paper §II-C).
+
+Each call to ``next_stage`` decides the composition of the next stage:
+
+  * admit queued requests into free KV slots (bounded by ``max_prefill_seqs``
+    and ``max_prefill_tokens`` per stage — the usual SLO guard against mixed
+    stages starving decode TBT);
+  * every active request contributes one decode token.
+
+A stage with admissions is a **mixed stage**; otherwise it is a
+**decoding-only stage** (the dominant kind, paper Fig. 5(a) — the scheduler
+exposes counters so benchmarks can reproduce that ratio).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+from repro.core.opb import StageMix
+from repro.serving.request import Request, RequestState
+
+
+@dataclass
+class StageDecision:
+    admitted: List[Request]
+    decoding: List[Request]
+
+    @property
+    def is_mixed(self) -> bool:
+        return len(self.admitted) > 0
+
+    def mix(self) -> StageMix:
+        return StageMix(
+            decode_ctx=tuple(r.l_in + len(r.output) for r in self.decoding),
+            prefill_len=tuple(r.l_in for r in self.admitted))
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, *, max_prefill_seqs: int = 4,
+                 max_prefill_tokens: int = 8192):
+        self.queue: Deque[Request] = deque()
+        self.running: List[Request] = []
+        self.max_prefill_seqs = max_prefill_seqs
+        self.max_prefill_tokens = max_prefill_tokens
+        self.stage_counts = {"mixed": 0, "decode_only": 0}
+
+    # ---- request intake ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def resubmit_preempted(self, req: Request) -> None:
+        """A preempted request re-enters behind the starving head (it keeps
+        priority over everything newer)."""
+        req.was_preempted = True
+        if req in self.running:
+            self.running.remove(req)
+        if self.queue:
+            head = self.queue.popleft()
+            self.queue.appendleft(req)
+            self.queue.appendleft(head)
+        else:
+            self.queue.appendleft(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.running)
+
+    # ---- stage formation -----------------------------------------------------
+    def next_stage(self, free_slots: int) -> Optional[StageDecision]:
+        admitted: List[Request] = []
+        tokens = 0
+        while (self.queue and free_slots > len(admitted)
+               and len(admitted) < self.max_prefill_seqs
+               and tokens + self.queue[0].l_in <= self.max_prefill_tokens):
+            r = self.queue.popleft()
+            r.state = RequestState.PREFILL
+            tokens += r.l_in
+            admitted.append(r)
+        decoding = [r for r in self.running if r.state == RequestState.DECODE]
+        if not admitted and not decoding:
+            return None
+        self.stage_counts["mixed" if admitted else "decode_only"] += 1
+        return StageDecision(admitted, decoding)
+
+    def commit_stage(self, decision: StageDecision) -> None:
+        """After the engine executes the stage: promote admissions, retire
+        completed requests."""
+        for r in decision.admitted:
+            if not r.done:
+                r.state = RequestState.DECODE
+            self.running.append(r)
+        finished = [r for r in self.running if r.done]
+        self.running = [r for r in self.running if not r.done]
+        self._finished = getattr(self, "_finished", [])
+        self._finished.extend(finished)
+
+    @property
+    def finished(self) -> List[Request]:
+        return getattr(self, "_finished", [])

@@ -1,0 +1,6 @@
+from repro.sharding.rules import (base_rules, rules_for, resolve_pspec,
+                                  sharding_context, current_context,
+                                  logical_constraint, ShardingContext)
+
+__all__ = ["base_rules", "rules_for", "resolve_pspec", "sharding_context",
+           "current_context", "logical_constraint", "ShardingContext"]

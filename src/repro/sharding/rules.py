@@ -1,0 +1,207 @@
+"""Logical-axis sharding rules (MaxText-style), resolved per mesh/shape-kind.
+
+Every ParamSpec / activation names its dims with *logical* axes; rules map a
+logical axis to mesh axis name(s). Conflicting duplicate mesh axes within one
+PartitionSpec resolve first-wins -> None (documented behaviour: e.g. with
+``experts -> model`` the per-expert ``mlp`` dim falls back to replicated).
+
+A context manager installs the active (mesh, rules) so model code can write
+``logical_constraint(x, ("act_batch", "act_seq", "act_embed"))`` without
+threading mesh state everywhere; outside a context it is the identity.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# Weight logical axes:
+#   embed      : d_model dim of weights           -> FSDP over data
+#   heads      : q-heads*head_dim dim             -> TP over model
+#   kv_heads   : kv-heads*head_dim dim            -> TP over model
+#   mlp        : FFN hidden dim                   -> TP over model
+#   vocab      : embedding/vocab dim              -> TP over model
+#   experts    : expert dim of MoE weights        -> EP over model (or None for TP)
+#   expert_mlp : per-expert FFN hidden            -> TP over model in TP/C4 mode
+#   layers     : stacked-scan dim                 -> never sharded
+#   conv/state : ssm small dims                   -> never sharded
+# Activation logical axes:
+#   act_batch, act_seq, act_embed, act_heads, act_kv_seq, act_vocab, act_exp
+
+def base_rules(*, multi_pod: bool, shape_kind: str,
+               moe_sharding: str = "tp") -> Dict[str, MeshAxes]:
+    """The paper-faithful layout: TP within a pod (incl. experts, C4), DP/FSDP
+    over data, EP across pods when multi-pod and moe_sharding='auto'."""
+    data: MeshAxes = "data"
+    batch: MeshAxes = ("pod", "data") if multi_pod else "data"
+    rules: Dict[str, MeshAxes] = {
+        "embed": data,           # FSDP
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "act_batch": batch,
+        "act_seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_kv_seq": None,
+        "act_vocab": "model",
+        "act_mlp": "model",
+        # MoE dispatch-buffer capacity dim (tokens-per-expert): shard over
+        # data — the (E, C, d) slot buffers scale with the global token count
+        # and must not replicate across the data axis.
+        "act_cap": "data",
+    }
+    if moe_sharding == "ep":
+        rules.update(experts="model", expert_mlp=None, act_exp="model")
+    elif moe_sharding == "tp":  # paper C4: every device sees all experts
+        rules.update(experts=None, expert_mlp="model", act_exp=None)
+    else:  # auto: EP across pods, TP within (paper's multi-node layout)
+        if multi_pod:
+            rules.update(experts="pod", expert_mlp="model", act_exp="pod")
+            rules["act_batch"] = "data"  # pod axis is consumed by experts
+        else:
+            rules.update(experts=None, expert_mlp="model", act_exp=None)
+    if shape_kind == "decode":
+        # long-context decode: shard the KV sequence (context parallelism);
+        # batch=1 cells cannot use the data axis for batch anyway.
+        rules["act_kv_seq"] = batch if shape_kind == "decode" else None
+        rules["act_batch"] = None
+    return rules
+
+
+def decode_rules_batched(*, multi_pod: bool,
+                         moe_sharding: str = "tp") -> Dict[str, MeshAxes]:
+    """decode_32k: batch is large (128) -> shard batch over data, replicate KV seq."""
+    rules = base_rules(multi_pod=multi_pod, shape_kind="train",
+                       moe_sharding=moe_sharding)
+    rules["act_kv_seq"] = None
+    return rules
+
+
+def rules_for(shape_kind: str, global_batch: int, *, multi_pod: bool,
+              moe_sharding: str = "tp") -> Dict[str, MeshAxes]:
+    if shape_kind == "decode" and global_batch > 1:
+        return decode_rules_batched(multi_pod=multi_pod, moe_sharding=moe_sharding)
+    return base_rules(multi_pod=multi_pod, shape_kind=shape_kind,
+                      moe_sharding=moe_sharding)
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+def resolve_pspec(axes: Sequence[Optional[str]],
+                  rules: Dict[str, MeshAxes]) -> P:
+    """Map logical axes -> PartitionSpec, dropping duplicate mesh axes
+    (first occurrence wins)."""
+    used: set = set()
+    parts = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        keep = tuple(a for a in ms if a not in used)
+        used.update(keep)
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            parts.append(keep[0])
+        else:
+            parts.append(keep)
+    return P(*parts)
+
+
+def fit_pspec_to_shape(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dim (e.g. 12 KV heads on
+    a 16-way model axis, vocab 50280 on 16): keep the largest dividing prefix
+    of each dim's axis tuple. Keeps every lowering legal without per-arch
+    special cases; the dropped axis falls back to replication for that dim."""
+    parts = []
+    for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if part is None:
+            parts.append(None)
+            continue
+        ms = (part,) if isinstance(part, str) else tuple(part)
+        keep = []
+        prod = 1
+        for a in ms:
+            n = mesh.shape[a]
+            if dim % (prod * n) == 0:
+                keep.append(a)
+                prod *= n
+            else:
+                break
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            parts.append(keep[0])
+        else:
+            parts.append(tuple(keep))
+    return P(*parts)
+
+
+class ShardingContext:
+    def __init__(self, mesh: Optional[Mesh], rules: Dict[str, MeshAxes]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def sharding(self, axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        assert self.mesh is not None
+        spec = resolve_pspec(axes, self.rules)
+        if shape is not None:
+            spec = fit_pspec_to_shape(spec, shape, self.mesh)
+        return NamedSharding(self.mesh, spec)
+
+    def tree_shardings(self, axes_tree, shape_tree=None):
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x)
+        if shape_tree is None:
+            return jax.tree_util.tree_map(
+                lambda a: self.sharding(a), axes_tree, is_leaf=is_axes)
+        return jax.tree_util.tree_map(
+            lambda a, s: self.sharding(a, s.shape), axes_tree, shape_tree,
+            is_leaf=is_axes)
+
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Optional[Mesh], rules: Dict[str, MeshAxes]):
+    ctx = ShardingContext(mesh, rules)
+    token = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(token)
+
+
+def current_context() -> Optional[ShardingContext]:
+    return _CTX.get()
+
+
+def logical_constraint(x, axes: Sequence[Optional[str]]):
+    """Apply with_sharding_constraint if a sharding context is active."""
+    ctx = _CTX.get()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = resolve_pspec(axes, ctx.rules)
+    spec = fit_pspec_to_shape(spec, x.shape, ctx.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

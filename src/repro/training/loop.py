@@ -1,0 +1,123 @@
+"""Fault-tolerant training loop.
+
+Scale features (DESIGN.md §5):
+  * checkpoint/restart: atomic keep-k checkpoints, elastic re-sharding
+    restore (device count may change between runs);
+  * SIGTERM/SIGINT-safe: a signal requests a final checkpoint at the next
+    step boundary before exiting (preemption handling);
+  * deterministic resumable data (index-based — restores mid-epoch exactly);
+  * straggler watchdog: per-step wall-time EWMA; steps slower than
+    ``straggler_factor``x the EWMA are logged and counted (on real fleets
+    this feeds the health controller that evicts slow hosts);
+  * microbatched gradient accumulation with fp32 accumulators and optional
+    int8-EF cross-pod compression (launch/steps.py builds the step fn).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.training.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                       save_checkpoint)
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    async_ckpt: bool = False      # background-thread saves (overlap with step)
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.2
+
+
+@dataclass
+class LoopState:
+    step: int = 0
+    ewma_step_s: float = 0.0
+    stragglers: int = 0
+    losses: List[float] = field(default_factory=list)
+    interrupted: bool = False
+
+
+def train_loop(state, step_fn: Callable, batch_fn: Callable[[int], Any],
+               cfg: LoopConfig, *, state_template=None, shardings=None,
+               log: Callable[[str], None] = print) -> LoopState:
+    """Run ``step_fn(state, batch) -> (state, metrics)`` for cfg.total_steps.
+
+    Restores from the latest checkpoint in ckpt_dir if one exists (elastic:
+    ``shardings`` may target a different mesh than the saving run used).
+    """
+    loop = LoopState()
+    start = 0
+    if cfg.ckpt_dir and latest_checkpoint(cfg.ckpt_dir) is not None:
+        state, start = restore_checkpoint(
+            cfg.ckpt_dir, state_template or jax.eval_shape(lambda: state),
+            shardings=shardings)
+        loop.step = start
+        log(f"[loop] restored step {start} from {cfg.ckpt_dir}")
+
+    async_ck = None
+    if cfg.ckpt_dir and cfg.async_ckpt:
+        from repro.training.checkpoint import AsyncCheckpointer
+        async_ck = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
+
+    stop_requested = {"flag": False}
+    prev_handlers = {}
+
+    def _handler(signum, frame):
+        stop_requested["flag"] = True
+        log(f"[loop] signal {signum}: checkpoint-and-exit at next boundary")
+
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            prev_handlers[sig] = signal.signal(sig, _handler)
+        except ValueError:   # non-main thread (tests)
+            pass
+
+    try:
+        for step in range(start, cfg.total_steps):
+            t0 = time.monotonic()
+            batch = batch_fn(step)
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            loop.step = step + 1
+            loop.losses.append(loss)
+            if loop.ewma_step_s == 0.0:
+                loop.ewma_step_s = dt
+            else:
+                if dt > cfg.straggler_factor * loop.ewma_step_s:
+                    loop.stragglers += 1
+                    log(f"[loop] straggler step {step}: {dt:.3f}s vs "
+                        f"EWMA {loop.ewma_step_s:.3f}s")
+                loop.ewma_step_s = ((1 - cfg.ewma_alpha) * loop.ewma_step_s
+                                    + cfg.ewma_alpha * dt)
+            if step % cfg.log_every == 0:
+                log(f"[loop] step {step} loss {loss:.4f} ({dt:.3f}s)")
+            boundary = (cfg.ckpt_dir and
+                        ((step + 1) % cfg.ckpt_every == 0
+                         or step + 1 == cfg.total_steps
+                         or stop_requested["flag"]))
+            if boundary:
+                if async_ck is not None:
+                    async_ck.save(step + 1, state)
+                else:
+                    save_checkpoint(cfg.ckpt_dir, step + 1, state,
+                                    keep=cfg.keep)
+            if stop_requested["flag"]:
+                loop.interrupted = True
+                break
+    finally:
+        if async_ck is not None:
+            async_ck.wait()
+        for sig, h in prev_handlers.items():
+            signal.signal(sig, h)
+    return loop

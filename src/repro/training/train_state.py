@@ -1,0 +1,43 @@
+"""Train state: parameters + optimizer moments + step, with abstract
+(ShapeDtypeStruct) and sharding-tree variants for the dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import model_specs
+from repro.models.param import (ParamSpec, abstract_params, init_params,
+                                is_spec, logical_axes)
+from repro.training.optimizer import OptConfig, init_opt_state
+
+
+def make_train_state(key, cfg: ModelConfig, opt: OptConfig) -> Dict[str, Any]:
+    params = init_params(key, model_specs(cfg))
+    return {"params": params, "opt": init_opt_state(params, opt),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ModelConfig, opt: OptConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for .lower() — no allocation."""
+    specs = model_specs(cfg)
+    params = abstract_params(specs)
+    moment = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, opt.adam_dtype), params)
+    return {"params": params,
+            "opt": {"mu": moment,
+                    "nu": jax.tree_util.tree_map(lambda x: x, moment),
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Logical-axis tree parallel to make_train_state's output (moments share
+    the parameter axes; scalars are replicated)."""
+    specs = model_specs(cfg)
+    axes = logical_axes(specs)
+    return {"params": axes,
+            "opt": {"mu": axes, "nu": axes, "count": ()},
+            "step": ()}

@@ -1,0 +1,99 @@
+"""Attention layer invariants: blockwise (flash custom-vjp) vs full oracle,
+decode vs prefill consistency, ring-buffer windowed caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    full_attention)
+
+
+def _qkv(key, B, S, KV, qpk, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, KV * qpk, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (False, 0, 0.0), (True, 24, 0.0), (True, 0, 30.0),
+])
+def test_blockwise_matches_full(causal, window, softcap):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 96, 2, 3, 16)
+    out = blockwise_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, q_block=32, kv_block=32)
+    exp = full_attention(q, k, v, causal=causal, window=window,
+                         softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=3e-6,
+                               rtol=3e-6)
+
+
+def test_blockwise_grads_match_full():
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 64, 2, 2, 16)
+
+    def f(fn):
+        return jax.grad(lambda q, k, v: (fn(q, k, v) ** 2).sum(),
+                        argnums=(0, 1, 2))(q, k, v)
+
+    g1 = f(lambda q, k, v: blockwise_attention(q, k, v, causal=True,
+                                               q_block=16, kv_block=16))
+    g2 = f(lambda q, k, v: full_attention(q, k, v, causal=True))
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                                   rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(8, 80), KV=st.sampled_from([1, 2, 4]),
+       qpk=st.sampled_from([1, 2, 4]), qb=st.sampled_from([8, 16, 32]))
+def test_blockwise_property(S, KV, qpk, qb):
+    """Property: blockwise == full for arbitrary (S, heads, blocks)."""
+    q, k, v = _qkv(jax.random.PRNGKey(S * 131 + KV), 1, S, KV, qpk, 16)
+    out = blockwise_attention(q, k, v, causal=True, q_block=qb, kv_block=qb)
+    exp = full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_decode_matches_prefill_row():
+    """Decode of token t must equal row t of the full causal attention."""
+    key = jax.random.PRNGKey(2)
+    B, S, KV, qpk, hd = 2, 24, 2, 2, 16
+    q, k, v = _qkv(key, B, S, KV, qpk, hd)
+    full = full_attention(q, k, v, causal=True)
+    # decode the last token against a cache of the first S entries
+    out = decode_attention(q[:, -1:], k, v, jnp.full((B,), S))
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-5, rtol=1e-5)
+
+
+def test_decode_respects_lengths():
+    """Entries beyond the valid length must not affect the output."""
+    key = jax.random.PRNGKey(3)
+    B, S, KV, qpk, hd = 1, 32, 1, 2, 16
+    q, k, v = _qkv(key, B, S, KV, qpk, hd)
+    lengths = jnp.array([20])
+    out1 = decode_attention(q[:, :1], k, v, lengths)
+    k2 = k.at[:, 20:].set(999.0)
+    v2 = v.at[:, 20:].set(-999.0)
+    out2 = decode_attention(q[:, :1], k2, v2, lengths)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+def test_gqa_head_grouping():
+    """With KV heads replicated to all q heads, GQA == MHA."""
+    key = jax.random.PRNGKey(4)
+    B, S, hd = 1, 16, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, 4, hd))
+    k1 = jax.random.normal(ks[1], (B, S, 1, hd))
+    v1 = jax.random.normal(ks[2], (B, S, 1, hd))
+    out_gqa = full_attention(q, k1, v1, causal=True)
+    k4 = jnp.broadcast_to(k1, (B, S, 4, hd))
+    v4 = jnp.broadcast_to(v1, (B, S, 4, hd))
+    out_mha = full_attention(q, k4, v4, causal=True)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               atol=1e-6)

@@ -1,0 +1,34 @@
+"""Benchmark-suite smoke: every figure module runs in quick mode and
+produces sane rows (guards the full paper-reproduction harness)."""
+import importlib
+
+import pytest
+
+FIGS = ["fig04_opb_breakdown", "fig05_hetero", "fig08_edap", "fig10_flows",
+        "fig11_throughput", "fig12_latency", "fig14_bankpim", "fig15_energy",
+        "fig16_split", "skew_study"]
+
+
+@pytest.mark.parametrize("name", FIGS)
+def test_benchmark_quick(name):
+    mod = importlib.import_module(f"benchmarks.{name}")
+    rows = mod.run(quick=True)
+    assert rows, name
+    assert all(isinstance(r, dict) for r in rows)
+
+
+def test_key_claims_hold():
+    """The quick benchmarks must show the paper's directions."""
+    import benchmarks.fig11_throughput as f11
+    rows = f11.run(quick=True)
+    by = {(r["system"], r["policy"], r["l_in"]): r["speedup_vs_gpu"]
+          for r in rows}
+    assert by[("duplex", "duplex", 256)] > 1.3
+    assert by[("duplex_et", "duplex_pe_et", 256)] >= by[("duplex", "duplex",
+                                                         256)] * 0.95
+
+    import benchmarks.fig10_flows as f10
+    rows = f10.run(quick=True)
+    dec = {r["flow"]: r["time_vs_serial"] for r in rows
+           if r["stage"] == "decode_b64_ctx2k"}
+    assert dec["minibatch_split"] > 1.0 > dec["duplex_pe"]

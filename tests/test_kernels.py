@@ -1,0 +1,161 @@
+"""Per-kernel validation: shape/dtype sweeps in interpret mode vs the
+pure-jnp oracles in kernels/ref.py (assignment deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill/train kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,KV,qpk,hd", [
+    (1, 32, 1, 1, 16), (2, 64, 2, 4, 32), (1, 96, 4, 2, 64),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_kernel(B, S, KV, qpk, hd, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    H = KV * qpk
+    q = _rand(ks[0], (B, S, H, hd), dtype)
+    k = _rand(ks[1], (B, S, KV, hd), dtype)
+    v = _rand(ks[2], (B, S, KV, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, q_block=32, kv_block=32)
+    qg = q.reshape(B, S, KV, qpk, hd).transpose(0, 2, 3, 1, 4)
+    exp = ref.flash_attention_ref(qg, k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3), causal=causal)
+    exp = exp.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, KV, qpk, hd = 1, 64, 2, 2, 32
+    q = _rand(ks[0], (B, S, KV * qpk, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              q_block=16, kv_block=16)
+    qg = q.reshape(B, S, KV, qpk, hd).transpose(0, 2, 3, 1, 4)
+    exp = ref.flash_attention_ref(qg, k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3), causal=True,
+                                  window=window)
+    exp = exp.transpose(0, 3, 1, 2, 4).reshape(B, S, KV * qpk, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_softcap():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, KV, qpk, hd = 1, 32, 1, 2, 16
+    q = _rand(ks[0], (B, S, KV * qpk, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, softcap=10.0,
+                              q_block=16, kv_block=16)
+    qg = q.reshape(B, S, KV, qpk, hd).transpose(0, 2, 3, 1, 4)
+    exp = ref.flash_attention_ref(qg, k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3), causal=True,
+                                  softcap=10.0)
+    exp = exp.transpose(0, 3, 1, 2, 4).reshape(B, S, KV * qpk, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (the bandwidth-path kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Smax,KV,qpk,hd", [
+    (2, 64, 2, 4, 32), (3, 48, 1, 8, 16), (1, 128, 4, 1, 64),
+])
+def test_decode_attention_kernel(B, Smax, KV, qpk, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = _rand(ks[0], (B, 1, KV * qpk, hd), dtype)
+    kc = _rand(ks[1], (B, Smax, KV, hd), dtype)
+    vc = _rand(ks[2], (B, Smax, KV, hd), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, Smax + 1)
+    out = ops.decode_attention(q, kc, vc, lengths, kv_block=16)
+    exp = ref.decode_attention_ref(
+        q.reshape(B, KV, qpk, hd), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), lengths)
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(B, KV, qpk, hd), np.float32),
+        np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_window():
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    B, Smax, KV, qpk, hd = 2, 64, 2, 2, 32
+    q = _rand(ks[0], (B, 1, KV * qpk, hd), jnp.float32)
+    kc = _rand(ks[1], (B, Smax, KV, hd), jnp.float32)
+    vc = _rand(ks[2], (B, Smax, KV, hd), jnp.float32)
+    lengths = jnp.array([40, 64])
+    out = ops.decode_attention(q, kc, vc, lengths, window=16, kv_block=16)
+    exp = ref.decode_attention_ref(
+        q.reshape(B, KV, qpk, hd), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), lengths, window=16)
+    np.testing.assert_allclose(np.asarray(out.reshape(B, KV, qpk, hd)),
+                               np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE kernels (hot grouped-GEMM path + cold gather-GEMV path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,d,f", [(2, 16, 32, 64), (4, 8, 64, 32),
+                                     (1, 32, 16, 128)])
+def test_moe_gemm_kernel(E, C, d, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    x = _rand(ks[0], (E, C, d), dtype)
+    w = {"wi_gate": _rand(ks[1], (E, d, f), dtype) * 0.1,
+         "wi_up": _rand(ks[2], (E, d, f), dtype) * 0.1,
+         "wo": _rand(ks[3], (E, f, d), dtype) * 0.1}
+    out = ops.moe_gemm(w, x, c_block=8, f_block=32)
+    exp = ref.moe_ffn_ref(w, x)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("E,C,d,f", [(2, 4, 32, 64), (6, 2, 64, 32)])
+def test_moe_gemv_kernel(E, C, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    x = _rand(ks[0], (E, C, d), jnp.float32)
+    w = {"wi_gate": _rand(ks[1], (E, d, f), jnp.float32) * 0.1,
+         "wi_up": _rand(ks[2], (E, d, f), jnp.float32) * 0.1,
+         "wo": _rand(ks[3], (E, f, d), jnp.float32) * 0.1}
+    out = ops.moe_gemv(w, x, f_block=32)
+    exp = ref.moe_ffn_ref(w, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_kernels_jit_and_padding():
+    """Kernel wrappers must pad odd shapes and work under jit."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, S, KV, qpk, hd = 1, 50, 2, 3, 16   # S not a multiple of blocks
+    q = _rand(ks[0], (B, S, KV * qpk, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, hd), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, q_block=16, kv_block=16, interpret=True))
+    out = f(q, k, v)
+    assert out.shape == q.shape
+    assert not bool(jnp.isnan(out).any())

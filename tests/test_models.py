@@ -1,0 +1,161 @@
+"""Model-level invariants across families: forward shapes, loss behaviour,
+prefill/decode == full-forward consistency (the serving-correctness core)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, DENSE, MOE, LayerKind,
+                                MoEConfig, SSMConfig, Segment,
+                                small_test_config)
+from repro.models.model import (decode_step, forward, init_cache, init_model,
+                                loss_fn, prefill)
+
+
+def _roundtrip(cfg, *, B=2, S=24, gen=4, seed=0):
+    """Prefill S tokens then greedy-decode `gen`; compare each decode logits
+    row against the full forward over the growing sequence.
+
+    MoE capacity is forced ample: with drops enabled, a token dropped at
+    T=prefill tokens but kept at T=1 decode tokens makes the two paths
+    legitimately differ (standard capacity-MoE semantics)."""
+    from repro.core.execution import ExecutionPlan, execution_plan
+    params = init_model(jax.random.PRNGKey(seed), cfg)
+    key = jax.random.PRNGKey(seed + 1)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    cache = init_cache(cfg, B, S + gen + 1)
+    true_len = jnp.full((B,), S)
+    with execution_plan(ExecutionPlan(moe_impl="grouped",
+                                      moe_capacity=4 * B * (S + gen))):
+        logits_p, cache = prefill(params, cfg, {"tokens": tokens}, cache,
+                                  true_len)
+        seq = tokens
+        logits_f, _ = forward(params, cfg, {"tokens": seq})
+        np.testing.assert_allclose(np.asarray(logits_p[:, 0]),
+                                   np.asarray(logits_f[:, -1]),
+                                   atol=2e-3, rtol=2e-3)
+        nxt = jnp.argmax(logits_p[:, -1], -1)[:, None].astype(jnp.int32)
+        for _ in range(gen):
+            seq = jnp.concatenate([seq, nxt], axis=1)
+            logits_d, cache = decode_step(params, cfg, nxt, cache)
+            logits_f, _ = forward(params, cfg, {"tokens": seq})
+            np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                                       np.asarray(logits_f[:, -1]),
+                                       atol=2e-3, rtol=2e-3)
+            nxt = jnp.argmax(logits_d[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+def test_decode_matches_forward_dense(tiny_dense):
+    _roundtrip(tiny_dense)
+
+
+def test_decode_matches_forward_moe(tiny_moe):
+    _roundtrip(tiny_moe)
+
+
+def test_decode_matches_forward_ssm(tiny_ssm):
+    _roundtrip(tiny_ssm)
+
+
+def test_decode_matches_forward_hybrid():
+    cfg = small_test_config(
+        "tiny-hybrid", family="hybrid", num_layers=4,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64),
+        ssm=SSMConfig(d_state=16, headdim=16, chunk_size=8))
+    # jamba-style: mamba/attn interleave, MoE on odd layers
+    pattern = (LayerKind("mamba", DENSE), LayerKind("attn", MOE),
+               LayerKind("mamba", DENSE), LayerKind("mamba", MOE))
+    cfg = dataclasses.replace(cfg, segments=(Segment(pattern, 1),)).validate()
+    _roundtrip(cfg)
+
+
+def test_decode_matches_forward_sliding_window():
+    cfg = small_test_config("tiny-swa", num_layers=2)
+    pattern = (LayerKind(ATTN_LOCAL, DENSE), LayerKind(ATTN, DENSE))
+    cfg = dataclasses.replace(cfg, segments=(Segment(pattern, 1),),
+                              sliding_window=8).validate()
+    # cache buffer = window+1 ring: still must match the full forward
+    _roundtrip(cfg, S=20, gen=4)
+
+
+def test_parallel_block_consistency():
+    cfg = dataclasses.replace(small_test_config("tiny-par"),
+                              parallel_block=True).validate()
+    _roundtrip(cfg)
+
+
+def test_qk_norm_and_softcap():
+    cfg = dataclasses.replace(small_test_config("tiny-qk"), qk_norm=True,
+                              attn_logit_softcap=30.0).validate()
+    _roundtrip(cfg)
+
+
+def test_loss_decreases_one_sgd_ish_step(tiny_dense, dense_params):
+    tokens = jax.random.randint(jax.random.PRNGKey(9), (4, 32), 0,
+                                tiny_dense.vocab_size)
+    batch = {"tokens": tokens}
+
+    def lf(p):
+        return loss_fn(p, tiny_dense, batch)[0]
+
+    l0, g = jax.value_and_grad(lf)(dense_params)
+    p2 = jax.tree_util.tree_map(lambda p, g: p - 0.05 * g, dense_params, g)
+    l1 = lf(p2)
+    assert float(l1) < float(l0)
+
+
+def test_loss_ignore_index(tiny_dense, dense_params):
+    tokens = jax.random.randint(jax.random.PRNGKey(10), (2, 16), 0,
+                                tiny_dense.vocab_size)
+    labels = jnp.full_like(tokens, -100)
+    loss, m = loss_fn(dense_params, tiny_dense,
+                      {"tokens": tokens, "labels": labels})
+    assert float(m["ce"]) == 0.0
+
+
+def test_remat_policies_agree(tiny_dense, dense_params):
+    tokens = jax.random.randint(jax.random.PRNGKey(11), (2, 16), 0,
+                                tiny_dense.vocab_size)
+    outs = []
+    for remat in ("none", "dots", "full"):
+        loss, _ = loss_fn(dense_params, tiny_dense, {"tokens": tokens},
+                          remat=remat)
+        outs.append(float(loss))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5)
+
+
+def test_vlm_frontend_stub():
+    cfg = dataclasses.replace(small_test_config("tiny-vlm", family="vlm"),
+                              frontend_embeds=8).validate()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.zeros((2, 12), jnp.int32),
+             "patch_embeds": jnp.ones((2, 8, cfg.d_model), jnp.float32)}
+    logits, _ = forward(params, cfg, batch)
+    assert logits.shape == (2, 20, cfg.vocab_size)
+    loss, _ = loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_encdec_whisper_stub():
+    from repro.configs.base import ATTN_BIDIR, ATTN_CROSS
+    base = small_test_config("tiny-whisper", family="audio")
+    cfg = dataclasses.replace(
+        base, is_encoder_decoder=True,
+        segments=(Segment((LayerKind(ATTN_CROSS, DENSE),), 2),),
+        enc_segments=(Segment((LayerKind(ATTN_BIDIR, DENSE),), 2),),
+        enc_num_layers=2).validate()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = {"frames": jnp.ones((2, 10, cfg.d_model)),
+             "dec_tokens": jnp.zeros((2, 6), jnp.int32)}
+    logits, _ = forward(params, cfg, batch)
+    assert logits.shape == (2, 6, cfg.vocab_size)
+    # prefill + decode against self + cross caches
+    cache = init_cache(cfg, 2, 16)
+    lg, cache = prefill(params, cfg, batch, cache, jnp.array([6, 4]))
+    nxt = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+    lg2, cache = decode_step(params, cfg, nxt, cache)
+    assert lg2.shape == (2, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(lg2).any())

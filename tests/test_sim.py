@@ -1,0 +1,132 @@
+"""Simulator invariants — the paper's qualitative claims must hold as
+properties of the model (the quantitative table lives in EXPERIMENTS.md)."""
+import numpy as np
+import pytest
+
+from repro.core.opb import decoding_only, mixed
+from repro.sim.cluster import kv_bytes_per_token, max_batch_size
+from repro.sim.engine_sim import simulate, simulate_split
+from repro.sim.layermodel import stage_exec
+from repro.sim.metrics import latency_summary
+from repro.sim.paper_models import GLAM, MIXTRAL, OPT, PAPER_MODELS
+from repro.sim.specs import (bankpim_system, default_system, duplex_system,
+                             gpu_system)
+from repro.sim.workload import gaussian_requests, poisson_arrivals
+
+from copy import deepcopy
+
+
+def test_paper_model_param_counts():
+    """Table I param totals (within 15% — embeddings/vocab vary)."""
+    expected = {"mixtral": 47e9, "glam": 143e9, "grok1": 314e9,
+                "opt": 66e9, "llama3": 70e9}
+    for name, target in expected.items():
+        got = PAPER_MODELS[name].param_count()
+        assert abs(got - target) / target < 0.15, (name, got)
+
+
+def test_decode_stage_dominated_by_moe_attn():
+    """Fig. 4(a): MoE + attention dominate the GPU decode stage."""
+    ex = stage_exec(default_system(MIXTRAL, "gpu"), MIXTRAL,
+                    decoding_only(64, 2048), "gpu")
+    frac = (ex.breakdown["moe"] + ex.breakdown["attn"]) / ex.time
+    assert frac > 0.5
+
+
+def test_duplex_faster_than_gpu_on_decode_stage():
+    mix = decoding_only(64, 2048)
+    t_gpu = stage_exec(default_system(MIXTRAL, "gpu"), MIXTRAL, mix,
+                       "gpu").time
+    t_dpx = stage_exec(default_system(MIXTRAL, "duplex"), MIXTRAL, mix,
+                       "duplex").time
+    assert t_dpx < t_gpu
+
+
+def test_coprocessing_never_slower():
+    """C2/C3 makespan <= serial execution on the same device."""
+    for mix in (decoding_only(64, 2048), mixed(48, 2048, 2, 1024)):
+        t_ser = stage_exec(default_system(MIXTRAL, "duplex"), MIXTRAL, mix,
+                           "duplex").time
+        t_cop = stage_exec(default_system(MIXTRAL, "duplex"), MIXTRAL, mix,
+                           "duplex_pe").time
+        assert t_cop <= t_ser * 1.01
+
+
+def test_throughput_ladder_mixtral():
+    """GPU < Duplex <= Duplex+PE <= ~Duplex+PE+ET (Fig. 11 ordering)."""
+    proto = gaussian_requests(32, 512, 64, seed=1)
+    thr = {}
+    for kind, policy in [("gpu", "gpu"), ("duplex", "duplex"),
+                         ("duplex", "duplex_pe"),
+                         ("duplex_et", "duplex_pe_et")]:
+        r = simulate(default_system(MIXTRAL, kind), MIXTRAL, policy,
+                     deepcopy(proto), max_batch=32)
+        thr[policy + kind] = r.throughput
+    assert thr["duplexduplex"] > 1.5 * thr["gpugpu"]
+    assert thr["duplex_peduplex"] >= 0.99 * thr["duplexduplex"]
+    assert thr["duplex_pe_etduplex_et"] >= thr["duplex_peduplex"]
+
+
+def test_duplex_saves_energy():
+    proto = gaussian_requests(24, 512, 64, seed=2)
+    g = simulate(default_system(GLAM, "gpu"), GLAM, "gpu", deepcopy(proto),
+                 max_batch=32)
+    d = simulate(default_system(GLAM, "duplex"), GLAM, "duplex",
+                 deepcopy(proto), max_batch=32)
+    assert d.energy_per_token < g.energy_per_token
+
+
+def test_bankpim_beats_duplex_on_mha_only():
+    """Fig. 14: OPT (MHA, sub-1 Op/B decode attention) favors Bank-PIM;
+    Mixtral (MoE+GQA) favors Duplex."""
+    mix = decoding_only(64, 2048)
+    t_d_opt = stage_exec(duplex_system(1, 4), OPT, mix, "duplex_pe").time
+    t_b_opt = stage_exec(bankpim_system(1, 4), OPT, mix, "duplex_pe").time
+    t_d_mx = stage_exec(duplex_system(1, 4), MIXTRAL, mix, "duplex_pe").time
+    t_b_mx = stage_exec(bankpim_system(1, 4), MIXTRAL, mix, "duplex_pe").time
+    assert t_b_opt < t_d_opt
+    assert t_d_mx < t_b_mx
+
+
+def test_hetero_tail_pathology():
+    """Fig. 5: hetero helps decode-only stages but mixed-stage MoE lands on
+    the weak unit => mixed stage slower than pure GPU."""
+    dec = decoding_only(32, 2048)
+    mx = mixed(30, 2048, 2, 2048)
+    t_gpu_dec = stage_exec(gpu_system(1, 4), MIXTRAL, dec, "gpu").time
+    t_het_dec = stage_exec(duplex_system(1, 4), MIXTRAL, dec, "hetero").time
+    t_gpu_mix = stage_exec(gpu_system(1, 4), MIXTRAL, mx, "gpu").time
+    t_het_mix = stage_exec(duplex_system(1, 4), MIXTRAL, mx, "hetero").time
+    assert t_het_dec < t_gpu_dec
+    assert t_het_mix > t_gpu_mix
+
+
+def test_split_lower_throughput():
+    """Fig. 16: phase-split wastes capacity => lower throughput."""
+    proto = gaussian_requests(32, 256, 64, seed=3)
+    ns = simulate(duplex_system(1, 4), MIXTRAL, "duplex_pe", deepcopy(proto),
+                  max_batch=64)
+    sp = simulate_split(duplex_system(1, 2), duplex_system(1, 2), MIXTRAL,
+                        "duplex_pe", deepcopy(proto))
+    assert sp.throughput < ns.throughput
+
+
+def test_max_batch_capacity_model():
+    cap4 = max_batch_size(gpu_system(1, 4), MIXTRAL, 4096)
+    cap8 = max_batch_size(gpu_system(1, 8), MIXTRAL, 4096)
+    assert cap8 > cap4 > 0
+    dup = max_batch_size(gpu_system(1, 4), MIXTRAL, 4096, weight_copies=2)
+    assert dup < cap4
+    assert kv_bytes_per_token(MIXTRAL) == 2 * 2 * 8 * 128 * 32
+
+
+def test_poisson_queueing_saturation():
+    """T2FT grows sharply once offered load exceeds service rate."""
+    lat = {}
+    for qps in (2.0, 50.0):
+        reqs = poisson_arrivals(gaussian_requests(24, 512, 32, seed=4),
+                                qps, seed=4)
+        simulate(gpu_system(1, 4), MIXTRAL, "gpu", reqs, max_batch=8,
+                 max_prefill_per_stage=1)
+        lat[qps] = latency_summary(reqs)["t2ft_p50"]
+    assert lat[50.0] > 2.0 * lat[2.0]

@@ -1,0 +1,222 @@
+"""Training substrate: optimizer, checkpoint/restart (incl. elastic +
+atomicity), gradient compression (int8-EF), data pipeline determinism,
+fault-tolerant loop, pipeline parallelism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.training.checkpoint import (latest_checkpoint, list_checkpoints,
+                                       restore_checkpoint, save_checkpoint)
+from repro.training.compression import (compress, decompress, ef_step)
+from repro.training.data import DataConfig, SyntheticLMData
+from repro.training.loop import LoopConfig, train_loop
+from repro.training.optimizer import (OptConfig, adamw_update,
+                                      clip_by_global_norm, init_opt_state,
+                                      lr_schedule)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    opt = OptConfig(learning_rate=0.1, weight_decay=0.0, warmup_steps=0,
+                    total_steps=200, min_lr_ratio=1.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init_opt_state(params, opt)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, opt)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    n2 = float(jnp.linalg.norm(clipped["a"]))
+    assert n2 == pytest.approx(1.0, rel=1e-5)
+
+
+def test_lr_schedule_shape():
+    opt = OptConfig(learning_rate=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(opt, jnp.array(s))) for s in (0, 5, 10, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] == pytest.approx(0.1, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _state(v=1.0):
+    return {"params": {"w": jnp.full((3, 2), v)},
+            "step": jnp.array(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 10, _state(2.5))
+    restored, step = restore_checkpoint(d, jax.eval_shape(lambda: _state()))
+    assert step == 10
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 2.5)
+
+
+def test_checkpoint_keep_k(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, _state(float(s)), keep=2)
+    assert list_checkpoints(d) == [4, 5]
+    assert latest_checkpoint(d) == 5
+
+
+def test_checkpoint_atomicity_ignores_partial(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 3, _state())
+    # simulate a crashed write: directory without DONE marker
+    os.makedirs(os.path.join(d, "step_00000009"))
+    assert latest_checkpoint(d) == 3
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, _state())
+    bad = {"params": {"w": jnp.zeros((4, 4))}, "step": jnp.array(0)}
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, jax.eval_shape(lambda: bad))
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), n=st.integers(2, 64))
+def test_compress_roundtrip_error_bound(scale, n):
+    g = jax.random.normal(jax.random.PRNGKey(n), (n,)) * scale
+    q, s = compress(g)
+    back = decompress(q, s)
+    # symmetric int8: |err| <= scale/2 per element
+    assert float(jnp.abs(back - g).max()) <= float(s) * 0.5 + 1e-9
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the accumulated compressed sum tracks the true sum."""
+    g = jnp.array([0.004, -0.003, 0.002])   # below one quantization step
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(64):
+        q, s, err = ef_step(g, err)
+        total = total + decompress(q, s)
+    np.testing.assert_allclose(np.asarray(total / 64), np.asarray(g),
+                               atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=4, seed=3)
+    d1, d2 = SyntheticLMData(cfg), SyntheticLMData(cfg)
+    np.testing.assert_array_equal(d1.batch_at(12)["tokens"],
+                                  d2.batch_at(12)["tokens"])
+    it = d2.iterate(start_step=5)
+    np.testing.assert_array_equal(next(it)["tokens"],
+                                  d1.batch_at(5)["tokens"])
+
+
+def test_data_learnable_structure():
+    """Markov blend => bigram statistics are non-uniform (learnable)."""
+    cfg = DataConfig(vocab_size=64, seq_len=256, global_batch=8, seed=0)
+    toks = SyntheticLMData(cfg).batch_at(0)["tokens"]
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs[(int(a), int(b))] = pairs.get((int(a), int(b)), 0) + 1
+    top = max(pairs.values())
+    assert top > 3 * (sum(pairs.values()) / len(pairs))
+
+
+# ---------------------------------------------------------------------------
+# loop (restart + straggler)
+# ---------------------------------------------------------------------------
+
+def test_loop_checkpoints_and_restores(tmp_path):
+    d = str(tmp_path / "loop")
+
+    def step_fn(state, batch):
+        return ({"w": state["w"] + 1.0},
+                {"loss": jnp.asarray(1.0 / (float(state["w"]) + 1.0))})
+
+    state0 = {"w": jnp.array(0.0)}
+    cfg = LoopConfig(total_steps=10, ckpt_dir=d, ckpt_every=5, log_every=100)
+    loop1 = train_loop(state0, step_fn, lambda s: None, cfg,
+                       state_template=jax.eval_shape(lambda: state0),
+                       log=lambda *_: None)
+    assert loop1.step == 10 and latest_checkpoint(d) == 10
+    # re-run: restores at 10 and does nothing more
+    loop2 = train_loop(state0, step_fn, lambda s: None, cfg,
+                       state_template=jax.eval_shape(lambda: state0),
+                       log=lambda *_: None)
+    assert loop2.step == 10 and loop2.losses == []
+
+
+# ---------------------------------------------------------------------------
+# pipeline parallelism
+# ---------------------------------------------------------------------------
+
+def test_pipeline_matches_sequential():
+    from repro.training.pipeline import bubble_fraction, pipeline_apply
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1,), ("pipe",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    P_stages = 1
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (P_stages, 8, 8)) * 0.3
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    mbs = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 8))
+    out = pipeline_apply(stage_fn, W, mbs, mesh=mesh)
+    exp = jax.vmap(lambda x: stage_fn(W[0], x))(mbs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+    assert bubble_fraction(8, 4) == pytest.approx(3 / 11)
+
+
+def test_async_checkpointer(tmp_path):
+    from repro.training.checkpoint import AsyncCheckpointer
+    d = str(tmp_path / "ack")
+    ck = AsyncCheckpointer(d, keep=2)
+    for s in (1, 2, 3):
+        ck.save(s, _state(float(s)))
+    ck.wait()
+    assert list_checkpoints(d) == [2, 3]
+    restored, step = restore_checkpoint(d, jax.eval_shape(lambda: _state()))
+    assert step == 3
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 3.0)
+
+
+def test_loop_async_checkpointing(tmp_path):
+    d = str(tmp_path / "loop_async")
+
+    def step_fn(state, batch):
+        return {"w": state["w"] + 1.0}, {"loss": jnp.asarray(0.5)}
+
+    state0 = {"w": jnp.array(0.0)}
+    cfg = LoopConfig(total_steps=6, ckpt_dir=d, ckpt_every=2,
+                     async_ckpt=True, log_every=100)
+    loop = train_loop(state0, step_fn, lambda s: None, cfg,
+                      state_template=jax.eval_shape(lambda: state0),
+                      log=lambda *_: None)
+    assert loop.step == 6
+    assert latest_checkpoint(d) == 6
