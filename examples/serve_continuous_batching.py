@@ -22,8 +22,11 @@ cfg = small_test_config(
     num_kv_heads=2, d_ff=256, vocab_size=512,
     moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=256))
 params = init_model(jax.random.PRNGKey(0), cfg)
+# kv_layout="paged": KV lives in a shared page pool, decode streams only the
+# live pages of the active slots (see ROADMAP.md "DESIGN: paged KV cache").
 engine = ServingEngine(cfg, params, max_slots=8, max_len=128,
-                       use_duplex=True, max_prefill_seqs=2)
+                       use_duplex=True, max_prefill_seqs=2,
+                       kv_layout="paged", kv_page_size=32)
 
 rng = np.random.default_rng(0)
 requests = []

@@ -1,10 +1,26 @@
 """Pallas TPU kernels for the paper's two execution paths + jnp oracles.
 
 compute path (xPU analogue):    flash_attn.py, moe_gemm.py
-bandwidth path (Logic-PIM):     decode_attn.py, moe_gemv.py
+bandwidth path (Logic-PIM):     decode_attn.py (dense + paged), moe_gemv.py
 wrappers / oracles:             ops.py, ref.py
 """
-from repro.kernels.ops import (decode_attention, flash_attention, moe_gemm,
-                               moe_gemv)
+from jax.experimental.pallas import tpu as _pltpu
 
-__all__ = ["decode_attention", "flash_attention", "moe_gemm", "moe_gemv"]
+# --- JAX version compat -----------------------------------------------------
+# The TPU compiler-params dataclass was renamed across JAX releases
+# (TPUCompilerParams <-> CompilerParams). Every kernel module builds its
+# compiler params through this shim so either spelling of JAX works.
+_COMPILER_PARAMS_CLS = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct pltpu compiler params under whichever name this JAX has."""
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+from repro.kernels.ops import (decode_attention, flash_attention, moe_gemm,
+                               moe_gemv, paged_decode_attention)
+
+__all__ = ["decode_attention", "flash_attention", "moe_gemm", "moe_gemv",
+           "paged_decode_attention", "tpu_compiler_params"]

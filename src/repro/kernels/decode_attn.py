@@ -1,14 +1,30 @@
-"""Pallas TPU flash-decode GQA kernel (the Logic-PIM-analogue attention path).
+"""Pallas TPU flash-decode GQA kernels (the Logic-PIM-analogue attention path).
 
 One new query token per sequence against a long KV cache: Op/B ≈ 2·deg_grp
 (paper §III-A) — bandwidth-bound. The kernel's job is therefore to *stream*
-K/V from HBM through VMEM exactly once at full bandwidth; the (qpk × bk)
-score GEMM rides along. Grid (B, KV, nk) with VMEM online-softmax
-accumulators across the kv-block dimension.
+exactly the live K/V bytes from HBM through VMEM once at full bandwidth; the
+(qpk × bk) score GEMM rides along.
 
-Per-sequence valid lengths arrive as a (B, 1) int32 array (one scalar block
-per grid row) — the continuous-batching engine's sequences have different
-context lengths (paper §II-C) and the mask must honor each.
+Two variants:
+
+  * ``decode_attention_kernel`` — dense layout (B, KV, S, hd). Per-sequence
+    lengths arrive as a (B, 1) scalar block and gate the *compute* via
+    ``pl.when`` — but the BlockSpec pipeline still DMAs every kv block from
+    HBM, so per-stage traffic scales with the configured maximum S, not the
+    live context. Kept as the reference/fallback path.
+
+  * ``paged_decode_attention_kernel`` — paged layout: K/V live in a shared
+    page pool (P, KV, page, hd) addressed through per-sequence block tables.
+    Lengths and block tables are **scalar-prefetch** operands
+    (``pltpu.PrefetchScalarGridSpec``), so the kv index map can (a) translate
+    the kv grid step through the block table and (b) clamp out-of-range steps
+    to an already-resident page index. Pallas elides the DMA when consecutive
+    grid steps map to the same block, so dead pages past a sequence's live
+    length (or before its attention window) cost **zero** HBM traffic — the
+    per-stage streamed bytes scale with actual context lengths. The grid's
+    kv extent is the block-table width: the serving engine trims it by
+    slicing block tables to the stage's bucketed max live page count; a
+    caller holding full-width tables can trim with ``pages_bound`` instead.
 
 Validated in interpret mode against ``ref.decode_attention_ref``.
 """
@@ -21,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
 
 NEG_INF = -1e30
 
@@ -106,7 +124,140 @@ def decode_attention_kernel(q, k, v, lengths, *, window: int = 0,
             pltpu.VMEM((qpk, 1), jnp.float32),    # m
             pltpu.VMEM((qpk, 1), jnp.float32),    # l
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths2, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Paged (ragged, length-aware) decode attention
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, window: int,
+                         softcap: float, scale: float, page: int,
+                         npages: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    k_start = ki * page
+    # dead pages (fully past the live region / before the window) skip the
+    # compute here; their DMAs were already elided by the clamped index map.
+    needed = k_start < length
+    if window > 0:
+        needed = jnp.logical_and(needed,
+                                 k_start + page - 1 > length - 1 - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (qpk, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (page, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (qpk, page)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        valid = kpos < length
+        if window > 0:
+            valid = jnp.logical_and(valid, kpos > length - 1 - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_old = m_ref[...]                              # (qpk, 1)
+        m_new = jnp.maximum(m_old, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new)                          # (qpk, page)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (qpk, hd)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == npages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, block_tables,
+                                  *, window: int = 0, softcap: float = 0.0,
+                                  pages_bound: int | None = None,
+                                  interpret: bool = False):
+    """q: (B, KV, qpk, hd); k_pages, v_pages: (P, KV, page, hd) shared page
+    pool; lengths: (B,) int32 live KV entries; block_tables: (B, maxp) int32
+    page ids (row b, column j = pool page holding positions
+    [j*page, (j+1)*page) of sequence b; unused columns must hold a valid page
+    id — conventionally 0, the pool's reserved null page).
+
+    The kv grid extent is ``pages_bound`` (defaults to maxp — pass it to
+    trim a full-width table without slicing it). Out-of-range grid steps are
+    clamped by the scalar-prefetch index map to the sequence's last live
+    page (or its first in-window page), so their DMAs are elided by the
+    Pallas pipeline. Returns (B, KV, qpk, hd).
+    """
+    B, KV, qpk, hd = q.shape
+    P, KVp, page, hdp = k_pages.shape
+    assert (KVp, hdp) == (KV, hd), (k_pages.shape, q.shape)
+    maxp = block_tables.shape[1]
+    npages = maxp if pages_bound is None else pages_bound
+    assert 1 <= npages <= maxp, (npages, maxp)
+    scale = 1.0 / math.sqrt(hd)
+    lengths = lengths.astype(jnp.int32)
+    block_tables = block_tables.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_decode_kernel, window=window,
+                               softcap=softcap, scale=scale, page=page,
+                               npages=npages)
+
+    def q_map(b, g, ki, lens, bt):
+        del ki, lens, bt
+        return (b, g, 0, 0)
+
+    def kv_map(b, g, ki, lens, bt):
+        # clamp the kv grid step into the sequence's live page range so the
+        # pipeline re-targets an already-resident page (same block index as
+        # the previous step -> the DMA is elided entirely).
+        length = lens[b]
+        last = jnp.maximum((length + page - 1) // page - 1, 0)
+        if window > 0:
+            # page holding position length-1-window: conservative lower clamp
+            # (never clamps away a page the mask still needs).
+            first = jnp.maximum((length - 1 - window) // page, 0)
+        else:
+            first = 0
+        kic = jnp.clip(ki, first, last)
+        return (bt[b, kic], g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, qpk, hd), q_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpk, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((qpk, hd), jnp.float32),   # acc
+            pltpu.VMEM((qpk, 1), jnp.float32),    # m
+            pltpu.VMEM((qpk, 1), jnp.float32),    # l
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, block_tables, q, k_pages, v_pages)

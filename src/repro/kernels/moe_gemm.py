@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _moe_gemm_kernel(x_ref, wg_ref, wu_ref, wo_ref, o_ref, acc_ref, *,
                      nf: int):
@@ -67,7 +69,7 @@ def moe_gemm_kernel(w, x, *, c_block: int = 256, f_block: int = 512,
         out_specs=pl.BlockSpec((1, c_block, d), lambda e, ci, fi: (e, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((E, C, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((c_block, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w["wi_gate"], w["wi_up"], w["wo"])

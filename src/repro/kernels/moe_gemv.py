@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _moe_gemv_kernel(x_ref, wg_ref, wu_ref, wo_ref, o_ref, acc_ref, *,
                      nf: int):
@@ -68,7 +70,7 @@ def moe_gemv_kernel(w, x, *, f_block: int = 256, interpret: bool = False):
         out_specs=pl.BlockSpec((1, Cc, d), lambda e, fi: (e, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((Ec, Cc, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((Cc, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, w["wi_gate"], w["wi_up"], w["wo"])

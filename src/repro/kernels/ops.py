@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.decode_attn import decode_attention_kernel
+from repro.kernels.decode_attn import (decode_attention_kernel,
+                                       paged_decode_attention_kernel)
 from repro.kernels.flash_attn import flash_attention_kernel
 from repro.kernels.moe_gemm import moe_gemm_kernel
 from repro.kernels.moe_gemv import moe_gemv_kernel
@@ -84,6 +85,31 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
     out = decode_attention_kernel(qg, kg, vg, lengths.astype(jnp.int32),
                                   window=window, softcap=softcap,
                                   kv_block=kv_block, interpret=interpret)
+    return out.reshape(B, 1, H, hd)
+
+
+def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables, *,
+                           window: int = 0, softcap: float = 0.0,
+                           pages_bound: int | None = None,
+                           interpret: bool | None = None):
+    """Model layout: q (B, 1, H, hd); page pools (P, KV, page, hd);
+    lengths (B,); block_tables (B, maxp) int32. -> (B, 1, H, hd).
+
+    The kv grid spans the block-table width (or ``pages_bound`` if given, to
+    trim a full-width table); dead pages past each sequence's live length
+    cost no HBM traffic (the scalar-prefetch index map clamps them to a
+    resident page)."""
+    B, _, H, hd = q.shape
+    KV = k_pages.shape[1]
+    qpk = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    qg = q.reshape(B, KV, qpk, hd)
+    out = paged_decode_attention_kernel(qg, k_pages, v_pages,
+                                        lengths.astype(jnp.int32),
+                                        block_tables, window=window,
+                                        softcap=softcap,
+                                        pages_bound=pages_bound,
+                                        interpret=interpret)
     return out.reshape(B, 1, H, hd)
 
 

@@ -9,21 +9,30 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across JAX versions: ``axis_types`` /
+    ``jax.sharding.AxisType`` only exist in newer releases, and Auto is
+    the default there anyway."""
+    axis_type_cls = getattr(jax.sharding, "AxisType", None)
+    if axis_type_cls is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type_cls.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (16, 16) = ("data", "model") — 256 chips.
     Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many local devices exist (tests/examples)."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def mesh_info(mesh) -> dict:

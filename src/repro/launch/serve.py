@@ -28,6 +28,11 @@ def main(argv=None) -> int:
     p.add_argument("--l-out", type=int, default=16)
     p.add_argument("--max-slots", type=int, default=8)
     p.add_argument("--max-len", type=int, default=128)
+    p.add_argument("--kv-layout", choices=("dense", "paged"),
+                   default="dense",
+                   help="paged = shared KV page pool; decode streams live "
+                        "pages only (full-attention decoder archs)")
+    p.add_argument("--kv-page-size", type=int, default=64)
     p.add_argument("--no-duplex", action="store_true")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -38,6 +43,8 @@ def main(argv=None) -> int:
     params = init_model(jax.random.PRNGKey(args.seed), cfg)
     eng = ServingEngine(cfg, params, max_slots=args.max_slots,
                         max_len=args.max_len,
+                        kv_layout=args.kv_layout,
+                        kv_page_size=args.kv_page_size,
                         use_duplex=not args.no_duplex)
     rng = np.random.default_rng(args.seed)
     reqs = []

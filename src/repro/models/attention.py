@@ -640,6 +640,64 @@ def attention_decode_step(params, cfg: ModelConfig, x, cache, *, window: int = 0
     return y, new_cache
 
 
+def paged_gather_kv(pages, block_tables):
+    """Gather a sequence-contiguous dense view of the live (bucketed) pages.
+
+    pages: (P, KV, page, hd) pool; block_tables: (B, maxp) page ids.
+    Returns (B, maxp*page, KV, hd) — the XLA fallback streams only the
+    stage's bucketed live pages instead of the configured maximum length."""
+    B, maxp = block_tables.shape
+    _, KV, page, hd = pages.shape
+    g = pages[block_tables]                       # (B, maxp, KV, page, hd)
+    return g.transpose(0, 1, 3, 2, 4).reshape(B, maxp * page, KV, hd)
+
+
+def paged_attention_decode_step(params, cfg: ModelConfig, x, cache, attn_ctx,
+                                *, window: int = 0):
+    """One-token decode against the paged KV pool (B = active-slot bucket).
+
+    cache: {"k_pages", "v_pages"} each (P, KV, page, hd) — the layer's share
+    of the page pool. attn_ctx: {"lengths": (B,) live token counts,
+    "block_tables": (B, maxp) page ids} — per-stage scalars the engine passes
+    alongside the batch (they index *slots*, so they live outside the
+    per-layer cache). Returns (y, new_cache).
+
+    The new token's K/V is written at (block_tables[b, len//page], len%page);
+    rows padded up to the batch bucket carry length 0 and write into the
+    pool's reserved null page 0, so they never corrupt live pages.
+    """
+    B = x.shape[0]
+    lengths = attn_ctx["lengths"].astype(jnp.int32)      # (B,)
+    bt = attn_ctx["block_tables"].astype(jnp.int32)      # (B, maxp)
+    q, k, v = _project_qkv(params, cfg, x, lengths[:, None])
+    k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+    page = k_pages.shape[2]
+    bidx = jnp.arange(B)
+    # clamp the write to the visible table (mirrors the dense path's
+    # write_idx = min(pos, Smax-1) once a sequence overruns capacity)
+    wpos = jnp.minimum(lengths, bt.shape[1] * page - 1)  # (B,)
+    page_ids = bt[bidx, wpos // page]                    # (B,)
+    offs = wpos % page                                   # (B,)
+    k_pages = k_pages.at[page_ids, :, offs].set(
+        k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, :, offs].set(
+        v[:, 0].astype(v_pages.dtype))
+    new_len = lengths + 1
+    from repro.core.execution import current_plan
+    if current_plan().use_kernels:
+        from repro.kernels.ops import paged_decode_attention
+        out = paged_decode_attention(q, k_pages, v_pages, new_len, bt,
+                                     window=window,
+                                     softcap=cfg.attn_logit_softcap)
+    else:
+        kd = paged_gather_kv(k_pages, bt)
+        vd = paged_gather_kv(v_pages, bt)
+        out = decode_attention(q, kd, vd, new_len, window=window,
+                               softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1), params["wo"]["kernel"])
+    return y, {"k_pages": k_pages, "v_pages": v_pages}
+
+
 def write_prefill_cache(cache, k, v, true_len, *, window: int = 0):
     """Write prefill K/V (B,S,KV,hd) into a decode cache.
 

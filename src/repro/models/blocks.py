@@ -95,7 +95,27 @@ def block_forward(params, cfg: ModelConfig, kind: LayerKind, x, positions,
 # ---------------------------------------------------------------------------
 
 def block_init_cache(cfg: ModelConfig, kind: LayerKind, batch: int,
-                     max_len: int, dtype, kv_quant: bool = False) -> dict:
+                     max_len: int, dtype, kv_quant: bool = False, *,
+                     paged: bool = False, page_size: int = 64,
+                     num_pages: int = 0) -> dict:
+    if paged:
+        # Paged layout: this layer's share of the KV page pool. No per-slot
+        # leaves — slot metadata (lengths, block tables) lives in the
+        # KVManager and reaches decode as `attn_ctx`. Page 0 is the reserved
+        # null page (write target of padded batch rows). ATTN_LOCAL stays
+        # dense: its prefill cache is a ring buffer whose slots don't map
+        # positionally onto pages (the paged kernel itself supports window
+        # masking for standalone use).
+        if kind.mixer != ATTN:
+            raise ValueError(
+                f"paged KV cache supports full self-attention decoder "
+                f"layers only, got mixer={kind.mixer}")
+        if kv_quant:
+            raise NotImplementedError("paged KV cache + int8 KV quant")
+        kv = cfg.num_kv_heads
+        hd = cfg.resolved_head_dim
+        return {"k_pages": jnp.zeros((num_pages, kv, page_size, hd), dtype),
+                "v_pages": jnp.zeros((num_pages, kv, page_size, hd), dtype)}
     if kind.mixer == MAMBA:
         return {"mamba": mamba_init_cache(cfg, batch, dtype)}
     window = cfg.sliding_window if kind.mixer == ATTN_LOCAL else 0
@@ -122,13 +142,20 @@ def block_init_cache(cfg: ModelConfig, kind: LayerKind, batch: int,
     return cache
 
 
-def block_decode_step(params, cfg: ModelConfig, kind: LayerKind, x, cache):
-    """Single-token decode. Returns (x, new_cache)."""
+def block_decode_step(params, cfg: ModelConfig, kind: LayerKind, x, cache,
+                      attn_ctx=None):
+    """Single-token decode. Returns (x, new_cache). ``attn_ctx`` carries the
+    stage's slot metadata ({"lengths", "block_tables"}) for paged caches."""
     h = rmsnorm(params["norm1"], x, cfg.norm_eps)
     if kind.mixer == MAMBA:
         mixer_out, new_mamba = mamba_decode_step(params["mixer"], cfg, h,
                                                  cache["mamba"])
         new_cache = {"mamba": new_mamba}
+    elif "k_pages" in cache:
+        from repro.models.attention import paged_attention_decode_step
+        window = cfg.sliding_window if kind.mixer == ATTN_LOCAL else 0
+        mixer_out, new_cache = paged_attention_decode_step(
+            params["mixer"], cfg, h, cache, attn_ctx, window=window)
     else:
         window = cfg.sliding_window if kind.mixer == ATTN_LOCAL else 0
         mixer_out, new_attn = attention_decode_step(params["mixer"], cfg, h,
@@ -251,21 +278,27 @@ def segment_forward(params, cfg: ModelConfig, seg: Segment, x, positions, *,
 
 
 def segment_init_cache(cfg: ModelConfig, seg: Segment, batch: int,
-                       max_len: int, dtype, kv_quant: bool = False):
+                       max_len: int, dtype, kv_quant: bool = False, *,
+                       paged: bool = False, page_size: int = 64,
+                       num_pages: int = 0):
     one = {"blocks": tuple(block_init_cache(cfg, k, batch, max_len, dtype,
-                                            kv_quant)
+                                            kv_quant, paged=paged,
+                                            page_size=page_size,
+                                            num_pages=num_pages)
                            for k in seg.pattern)}
     return jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (seg.repeats,) + a.shape).copy(), one)
 
 
-def segment_decode_step(params, cfg: ModelConfig, seg: Segment, x, cache):
+def segment_decode_step(params, cfg: ModelConfig, seg: Segment, x, cache,
+                        attn_ctx=None):
     def body(x, inp):
         blk_params, blk_cache = inp
         new_caches = []
         for i, kind in enumerate(seg.pattern):
             x, nc = block_decode_step(blk_params["blocks"][i], cfg, kind, x,
-                                      blk_cache["blocks"][i])
+                                      blk_cache["blocks"][i],
+                                      attn_ctx=attn_ctx)
             new_caches.append(nc)
         return x, {"blocks": tuple(new_caches)}
 

@@ -195,9 +195,15 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Any], *,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=None, kv_quant: bool = False) -> list:
+               dtype=None, kv_quant: bool = False, *, paged: bool = False,
+               page_size: int = 64, num_pages: int = 0) -> list:
+    """Decode cache. Dense (default): per-slot (batch, max_len) leaves.
+    Paged: each attention layer holds a (num_pages, KV, page_size, hd) pool
+    share; capacity is owned by the serving-side page allocator (KVManager)."""
     dtype = dtype or cfg.dtype
-    return [segment_init_cache(cfg, seg, batch, max_len, dtype, kv_quant)
+    return [segment_init_cache(cfg, seg, batch, max_len, dtype, kv_quant,
+                               paged=paged, page_size=page_size,
+                               num_pages=num_pages)
             for seg in cfg.segments]
 
 
@@ -234,14 +240,17 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], cache,
     return logits, new_cache
 
 
-def decode_step(params, cfg: ModelConfig, tokens, cache):
-    """tokens: (B, 1) int32 -> (logits (B,1,V), new_cache)."""
+def decode_step(params, cfg: ModelConfig, tokens, cache, attn_ctx=None):
+    """tokens: (B, 1) int32 -> (logits (B,1,V), new_cache). For a paged
+    cache, ``attn_ctx`` = {"lengths": (B,), "block_tables": (B, maxp)} maps
+    the stage's active-slot batch rows onto the page pool."""
     x = embed_lookup(params["embed"], tokens).astype(cfg.dtype)
     x = logical_constraint(x, ("act_batch", None, "act_embed"))
     new_cache = []
     for seg, seg_params, seg_cache in zip(cfg.segments, params["segments"],
                                           cache):
-        x, nc = segment_decode_step(seg_params, cfg, seg, x, seg_cache)
+        x, nc = segment_decode_step(seg_params, cfg, seg, x, seg_cache,
+                                    attn_ctx=attn_ctx)
         new_cache.append(nc)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = _lm_head(params, cfg, x)

@@ -19,8 +19,14 @@ Stage loop (paper §II-C / §V):
     concurrency benefit is modeled in ``sim/`` (DESIGN.md §2).
 
 jit discipline: step functions are cached per static key (k_cold bucket,
-prefill shape bucket) so continuous batching never recompiles in steady
-state.
+prefill shape bucket; paged decode additionally batch/live-page buckets) so
+continuous batching never recompiles in steady state.
+
+KV layouts: ``kv_layout="dense"`` decodes over all slots against the
+``max_slots × max_len`` cache (seed behavior); ``kv_layout="paged"`` decodes
+a gathered active-slot batch against a shared KV page pool, so per-stage HBM
+traffic scales with occupancy × live context (ROADMAP.md "DESIGN: paged KV
+cache").
 """
 from __future__ import annotations
 
@@ -33,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTN_LOCAL, MAMBA, ModelConfig
 from repro.core.costmodel import DUPLEX
 from repro.core.dispatch import plan_stage
 from repro.core.execution import ExecutionPlan, execution_plan
@@ -52,6 +58,16 @@ def _bucket(n: int, buckets) -> int:
     return buckets[-1]
 
 
+def _pow2_buckets(n_max: int) -> Tuple[int, ...]:
+    out = []
+    b = 1
+    while b < n_max:
+        out.append(b)
+        b *= 2
+    out.append(n_max)
+    return tuple(out)
+
+
 @dataclass
 class StageReport:
     stage_index: int
@@ -61,13 +77,18 @@ class StageReport:
     k_cold: int
     bandwidth_flop_fraction: float
     wall_time: float
+    # K+V bytes the decode attention path streams this stage (all attention
+    # layers). Dense: max_slots × max_len regardless of occupancy. Paged:
+    # live pages of the active slots only.
+    kv_bytes_streamed: int = 0
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_len: int, use_duplex: bool = True,
                  use_kernels: bool = False, kv_quant: bool = False,
-                 preemption: str = "none",
+                 preemption: str = "none", kv_layout: str = "dense",
+                 kv_page_size: int = 64, kv_num_pages: Optional[int] = None,
                  sampling: SamplingParams = SamplingParams(),
                  max_prefill_seqs: int = 4, max_prefill_tokens: int = 8192,
                  prefill_len_buckets: Tuple[int, ...] = (64, 128, 256, 512,
@@ -80,7 +101,14 @@ class ServingEngine:
         self.preemptions = 0
         self.cfg = cfg
         self.params = params
-        self.kv = KVManager(cfg, max_slots, max_len, kv_quant=kv_quant)
+        self.kv = KVManager(cfg, max_slots, max_len, kv_quant=kv_quant,
+                            layout=kv_layout, page_size=kv_page_size,
+                            num_pages=kv_num_pages)
+        self.paged = self.kv.paged
+        if self.paged and preemption != "none":
+            raise NotImplementedError(
+                "preemption gathers dense slot rows; paged eviction is "
+                "page-table surgery and not implemented yet")
         self.scheduler = ContinuousBatchingScheduler(
             max_prefill_seqs=max_prefill_seqs,
             max_prefill_tokens=max_prefill_tokens)
@@ -96,11 +124,38 @@ class ServingEngine:
                                       cfg.moe.d_ff_expert,
                                       max_tokens=max(4 * max_slots, 512))
             self.planner = DuplexPlanner(lut_x, lut_p, cfg.moe.num_experts)
+        # decode-attention streamed-bytes accounting (K+V only; mamba mixers
+        # hold O(1) state and cross-attn KV is written once, both excluded).
+        # Dense streams each layer's whole buffer — max_len for full
+        # attention, the ring (window+1) for ATTN_LOCAL.
+        per_tok = (2 * cfg.num_kv_heads * cfg.resolved_head_dim *
+                   jnp.dtype(cfg.dtype).itemsize)
+        n_attn = 0
+        dense_tokens_per_slot = 0
+        for seg in cfg.segments:
+            for kind in seg.pattern:
+                if kind.mixer == MAMBA:
+                    continue
+                n_attn += seg.repeats
+                if kind.mixer == ATTN_LOCAL and cfg.sliding_window > 0:
+                    dense_tokens_per_slot += seg.repeats * (
+                        min(max_len, cfg.sliding_window) + 1)
+                else:
+                    dense_tokens_per_slot += seg.repeats * max_len
+        self._kv_bytes_per_token = per_tok * n_attn
+        self._dense_kv_bytes_per_stage = (max_slots * per_tok *
+                                          dense_tokens_per_slot)
         self._key = jax.random.PRNGKey(seed)
         self._tokens = np.zeros((max_slots,), np.int32)   # last token per slot
         self._slot_req: Dict[int, Request] = {}
         self._decode_fns: Dict[int, callable] = {}
+        self._paged_decode_fns: Dict[Tuple[int, int, int], callable] = {}
         self._prefill_fns: Dict[Tuple[int, int], callable] = {}
+        # paged decode jit keys: (batch bucket, live-page bucket) — powers of
+        # two so steady-state continuous batching never recompiles.
+        self.decode_bs_buckets = _pow2_buckets(max_slots)
+        if self.paged:
+            self.pages_buckets = _pow2_buckets(self.kv.max_pages_per_slot)
         self._stage_idx = 0
         self.reports: List[StageReport] = []
 
@@ -121,6 +176,30 @@ class ServingEngine:
 
             self._decode_fns[k_cold] = fn
         return self._decode_fns[k_cold]
+
+    def _paged_decode_fn(self, k_cold: int, n_batch: int, n_pages: int):
+        """Paged decode step over a gathered active-slot batch. Static key =
+        (k_cold, batch bucket, live-page bucket): the kv work is trimmed to
+        the stage's bucketed max live pages, not the configured maximum."""
+        key = (k_cold, n_batch, n_pages)
+        if key not in self._paged_decode_fns:
+            cfg = self.cfg
+            plan = ExecutionPlan(
+                moe_impl="duplex" if k_cold > 0 else "grouped",
+                k_cold=k_cold, use_kernels=self.use_kernels)
+
+            @jax.jit
+            def fn(params, tokens, cache, lengths, block_tables, key_):
+                with execution_plan(plan):
+                    logits, new_cache = decode_step(
+                        params, cfg, tokens, cache,
+                        attn_ctx={"lengths": lengths,
+                                  "block_tables": block_tables})
+                nxt = sample(logits, key_, self.sampling)
+                return nxt, new_cache
+
+            self._paged_decode_fns[key] = fn
+        return self._paged_decode_fns[key]
 
     def _prefill_fn(self, n_seqs: int, seq_len: int):
         key = (n_seqs, seq_len)
@@ -193,7 +272,18 @@ class ServingEngine:
         """Run one continuous-batching stage. Returns None when idle."""
         t0 = time.monotonic()
         self._maybe_preempt()
-        decision = self.scheduler.next_stage(self.kv.free_slots)
+        free = self.kv.free_slots
+        if self.paged:
+            # admission backpressure for oversubscribed pools: only admit
+            # when the pool can still hold one worst-case prompt plus a page
+            # of growth per running sequence. Running sequences can still
+            # exhaust a badly undersized pool (ensure_len raises — there is
+            # no paged preemption yet), but admissions won't cause it.
+            reserve = (len(self.scheduler.running) +
+                       self.kv.max_pages_per_slot)
+            if self.kv.free_pages < reserve:
+                free = 0
+        decision = self.scheduler.next_stage(free)
         if decision is None:
             return None
         mix = decision.mix()
@@ -210,9 +300,44 @@ class ServingEngine:
             k_cold = self.planner.k_cold_static(counts)
         splan = plan_stage(self.cfg, mix) if mix.num_tokens else None
 
-        # ---- decode half (bandwidth path) — runs over all slots; outputs of
-        # inactive slots are discarded, their cache is overwritten on reuse.
-        if decision.decoding:
+        # ---- decode half (bandwidth path). Dense: runs over all slots —
+        # outputs of inactive slots are discarded, their cache is overwritten
+        # on reuse, and their dead KV is streamed every stage. Paged: runs
+        # over a gathered active-slot batch bucket; the kv grid is trimmed to
+        # the stage's bucketed max live pages, so HBM traffic scales with
+        # occupancy × live context instead of max_slots × max_len.
+        kv_bytes = 0
+        if decision.decoding and self.paged:
+            page = self.kv.page_size
+            slots = [r.slot for r in decision.decoding]
+            live_pages = []                # per-slot pages after this write
+            for s in slots:
+                target = min(int(self.kv.lens[s]) + 1, self.kv.max_len)
+                self.kv.ensure_len(s, target)
+                live_pages.append(-(-target // page))
+            kv_bytes = sum(live_pages) * page * self._kv_bytes_per_token
+            nb = _bucket(len(slots), self.decode_bs_buckets)
+            mp = _bucket(max(live_pages), self.pages_buckets)
+            tokens = np.zeros((nb, 1), np.int32)
+            lengths = np.zeros((nb,), np.int32)   # pad rows: len 0 -> null page
+            bt = np.zeros((nb, mp), np.int32)
+            for i, s in enumerate(slots):
+                tokens[i, 0] = self._tokens[s]
+                lengths[i] = self.kv.lens[s]
+                bt[i] = self.kv.block_tables[s, :mp]
+            fn = self._paged_decode_fn(k_cold, nb, mp)
+            nxt, self.kv.cache = fn(self.params, jnp.asarray(tokens),
+                                    self.kv.cache, jnp.asarray(lengths),
+                                    jnp.asarray(bt), self._next_key())
+            nxt = np.asarray(nxt)
+            tnow = now if now is not None else time.monotonic()
+            for i, r in enumerate(decision.decoding):
+                tok = int(nxt[i])
+                self._tokens[r.slot] = tok
+                r.record_token(tok, tnow)
+            self.kv.lens[np.asarray(slots)] += 1
+        elif decision.decoding:
+            kv_bytes = self._dense_kv_bytes_per_stage
             fn = self._decode_fn(k_cold)
             toks = jnp.asarray(self._tokens)[:, None]
             nxt, self.kv.cache = fn(self.params, toks, self.kv.cache,
@@ -250,7 +375,11 @@ class ServingEngine:
             take = jnp.asarray(range(len(slots)), dtype=jnp.int32)
             local = [jax.tree_util.tree_map(lambda a: a[:, take], seg)
                      for seg in local_cache]
-            self.kv.scatter(local, slots)
+            if self.paged:
+                self.kv.scatter_paged(local, slots,
+                                      [int(t) for t in true_len[:len(slots)]])
+            else:
+                self.kv.scatter(local, slots)
             tnow = now if now is not None else time.monotonic()
             for i, (r, s) in enumerate(zip(fresh, slots)):
                 r.slot = s
@@ -272,7 +401,8 @@ class ServingEngine:
             num_prefill=len(decision.admitted), k_cold=k_cold,
             bandwidth_flop_fraction=(splan.bandwidth_fraction()
                                      if splan else 0.0),
-            wall_time=time.monotonic() - t0)
+            wall_time=time.monotonic() - t0,
+            kv_bytes_streamed=int(kv_bytes))
         self.reports.append(report)
         self._stage_idx += 1
         return report

@@ -1,21 +1,53 @@
-"""Slot-based KV-cache manager.
+"""KV-cache manager: slot bookkeeping + (optionally) a paged KV pool.
 
-The engine owns one global cache (all model layers) sized for ``max_slots``
-sequences × ``max_len`` positions; this manager tracks slot occupancy and
-performs the slot-indexed scatter of freshly prefilled per-request caches
-into the global cache. Freeing is O(1) bookkeeping — a slot's stale contents
-are fully overwritten by the next prefill (the prefill path builds its local
-cache from a fresh init, so no stale positions can leak).
+Two layouts:
 
-Memory note (paper §III-B/Fig. 5(c)): the global KV cache is the capacity
-item that limits batch size. ``bytes_per_slot`` reports it so deployments can
-size max_slots against device HBM; the Duplex single-device design wins over
-hetero systems precisely because it does not duplicate MoE weights and can
-spend that capacity on KV slots.
+``dense`` (seed behavior)
+    One global cache sized ``max_slots × max_len`` for every sequence slot;
+    the manager tracks slot occupancy and scatters freshly prefilled
+    per-request caches into slot rows. Simple, but every slot permanently
+    owns ``max_len`` worth of KV — idle slots and short contexts waste both
+    HBM capacity *and* decode bandwidth (the dense decode kernel streams the
+    whole buffer every stage).
+
+``paged`` (vLLM-style, paper §III-B / Fig. 5(c))
+    K/V live in a shared pool of fixed-size pages; each slot owns a
+    *block table* — the list of page ids holding its context — and pages are
+    allocated on demand as the context grows (``ensure_len``) and returned
+    on ``free``. Page 0 is reserved as the null page: block tables are
+    zero-filled, and padded decode rows write their garbage token there, so
+    a dummy row can never corrupt a live sequence. Capacity is therefore
+    shared across sequences: total KV memory is ``num_pages × page_size``
+    regardless of ``max_slots``, and a deployment can oversubscribe slots
+    against expected context lengths instead of provisioning every slot at
+    ``max_len``.
+
+Memory note (paper §III-B / Fig. 5(c)): the KV cache is the capacity item
+that limits batch size — Duplex's single-device design wins over hetero
+systems precisely because it does not duplicate MoE weights and can spend
+that capacity on KV. With the dense layout, "capacity" means
+``max_slots × max_len`` whether or not the tokens exist; with the paged
+layout it means *live pages*, so the achievable batch size scales with the
+actual context-length distribution, which is exactly the Fig. 5(c) argument:
+more concurrent sequences per GB, higher decode-stage batch, better
+bandwidth amortization. ``bytes_per_slot`` reports the *live* per-sequence
+footprint in paged mode (configured footprint in dense mode) so deployments
+can size ``num_pages`` against device HBM.
+
+Page size choice: ``page_size`` should divide (or equal) the decode kernel's
+kv block — each kernel grid step streams exactly one page, so pages that are
+too small under-utilize the DMA pipeline while pages that are too large
+re-introduce dead-byte streaming within the last partial page. The default
+(64) matches the engine's context bucketing; see ROADMAP.md "DESIGN: paged
+KV cache".
+
+Slot/page id allocation is heap-ordered (lowest id first) and O(log n) per
+allocate/free.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import heapq
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,16 +57,47 @@ from repro.configs.base import ModelConfig
 from repro.models.model import init_cache
 
 
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
 class KVManager:
     def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int,
-                 dtype=None, kv_quant: bool = False):
+                 dtype=None, kv_quant: bool = False, layout: str = "dense",
+                 page_size: int = 64, num_pages: Optional[int] = None):
+        assert layout in ("dense", "paged"), layout
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
         self.kv_quant = kv_quant
-        self.cache = init_cache(cfg, max_slots, max_len, dtype, kv_quant)
+        self.layout = layout
+        self.paged = layout == "paged"
         self._free: List[int] = list(range(max_slots))
+        heapq.heapify(self._free)
         self._active: set = set()
+        if self.paged:
+            if kv_quant:
+                raise NotImplementedError("paged KV cache + int8 KV quant")
+            self.page_size = page_size
+            self.max_pages_per_slot = _cdiv(max_len, page_size)
+            if num_pages is None:
+                # default: full dense capacity (+1 null page) — sharing then
+                # only *reduces* live footprint; pass fewer pages to
+                # oversubscribe slots against expected context lengths.
+                num_pages = 1 + max_slots * self.max_pages_per_slot
+            assert num_pages >= 2, "need at least the null page + one page"
+            self.num_pages = num_pages
+            self.cache = init_cache(cfg, max_slots, max_len, dtype, False,
+                                    paged=True, page_size=page_size,
+                                    num_pages=num_pages)
+            self._page_free: List[int] = list(range(1, num_pages))
+            heapq.heapify(self._page_free)
+            self._slot_pages: Dict[int, List[int]] = {}
+            self.block_tables = np.zeros((max_slots, self.max_pages_per_slot),
+                                         np.int32)
+            self.lens = np.zeros((max_slots,), np.int32)
+        else:
+            self.cache = init_cache(cfg, max_slots, max_len, dtype, kv_quant)
 
     # ---- occupancy ----------------------------------------------------------
     @property
@@ -45,20 +108,58 @@ class KVManager:
     def active_slots(self) -> List[int]:
         return sorted(self._active)
 
+    @property
+    def free_pages(self) -> int:
+        return len(self._page_free) if self.paged else 0
+
+    @property
+    def live_pages(self) -> int:
+        if not self.paged:
+            return 0
+        return sum(len(p) for p in self._slot_pages.values())
+
     def allocate(self) -> int:
-        slot = self._free.pop(0)
+        slot = heapq.heappop(self._free)
         self._active.add(slot)
+        if self.paged:
+            self._slot_pages[slot] = []
         return slot
 
     def free(self, slot: int) -> None:
+        if slot not in self._active:
+            return
         self._active.discard(slot)
-        self._free.append(slot)
-        self._free.sort()
+        heapq.heappush(self._free, slot)
+        if self.paged:
+            for pid in self._slot_pages.pop(slot, []):
+                heapq.heappush(self._page_free, pid)
+            self.block_tables[slot] = 0
+            self.lens[slot] = 0
+
+    # ---- paged capacity ------------------------------------------------------
+    def ensure_len(self, slot: int, target_len: int) -> None:
+        """Grow slot's block table until it covers ``target_len`` positions.
+        Raises RuntimeError when the pool is exhausted (callers can treat it
+        as admission-control backpressure)."""
+        assert self.paged and slot in self._active, slot
+        pages = self._slot_pages[slot]
+        need = _cdiv(max(target_len, 1), self.page_size)
+        assert need <= self.max_pages_per_slot, (target_len, self.max_len)
+        while len(pages) < need:
+            if not self._page_free:
+                raise RuntimeError(
+                    f"KV page pool exhausted ({self.num_pages} pages, "
+                    f"{self.live_pages} live) — raise num_pages or free "
+                    f"sequences before growing slot {slot}")
+            pid = heapq.heappop(self._page_free)
+            self.block_tables[slot, len(pages)] = pid
+            pages.append(pid)
 
     # ---- cache ops -----------------------------------------------------------
     def scatter(self, local_cache, slots: Sequence[int]) -> None:
-        """Insert per-request caches (batch = len(slots)) at slot indices.
-        Every cache leaf is laid out (stacked_layers, batch, ...)."""
+        """Dense layout: insert per-request caches (batch = len(slots)) at
+        slot indices. Every cache leaf is laid out (stacked_layers, batch, ...)."""
+        assert not self.paged, "use scatter_paged for the paged layout"
         idx = jnp.asarray(list(slots), dtype=jnp.int32)
 
         def leaf(g, l):
@@ -67,12 +168,74 @@ class KVManager:
         self.cache = [jax.tree_util.tree_map(leaf, g, l)
                       for g, l in zip(self.cache, local_cache)]
 
-    def bytes_per_slot(self) -> int:
+    def scatter_paged(self, local_cache, slots: Sequence[int],
+                      true_lens: Sequence[int]) -> None:
+        """Insert per-request *dense* prefill caches into the page pool.
+
+        local_cache: the prefill path's dense cache (k/v leaves
+        (repeats, B_local, L, KV, hd)); request i covers slots[i] with
+        true_lens[i] live positions. Pages are allocated here; all requests'
+        pages are written with one scatter per pool leaf."""
+        assert self.paged
+        page = self.page_size
+        rows = []                      # (local_row, n_pages)
+        pids: List[int] = []
+        for i, (slot, tl) in enumerate(zip(slots, true_lens)):
+            # clamp like the dense write path (idx = min(pos, size-1)) so an
+            # over-long prompt truncates instead of asserting
+            tl = min(max(int(tl), 1), self.max_len)
+            self.ensure_len(slot, tl)
+            self.lens[slot] = tl
+            npg = _cdiv(tl, page)
+            rows.append((i, npg))
+            pids.extend(self._slot_pages[slot][:npg])
+        idx = jnp.asarray(pids, dtype=jnp.int32)
+
+        def write(gleaf, lleaf):
+            # lleaf (repeats, B_local, L, KV, hd) -> per-request page chunks
+            R, _, L, KV, hd = lleaf.shape
+            pad = (-L) % page
+            src = jnp.pad(lleaf, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            src = src.reshape(R, -1, src.shape[2] // page, page, KV, hd)
+            chunks = [src[:, i, :npg] for i, npg in rows]
+            val = jnp.concatenate(chunks, axis=1)    # (R, n, page, KV, hd)
+            val = val.transpose(0, 1, 3, 2, 4)       # -> (R, n, KV, page, hd)
+            return gleaf.at[:, idx].set(val.astype(gleaf.dtype))
+
+        new_cache = []
+        for seg_g, seg_l in zip(self.cache, local_cache):
+            blocks = []
+            for gblk, lblk in zip(seg_g["blocks"], seg_l["blocks"]):
+                blocks.append({"k_pages": write(gblk["k_pages"], lblk["k"]),
+                               "v_pages": write(gblk["v_pages"], lblk["v"])})
+            new_cache.append({"blocks": tuple(blocks)})
+        self.cache = new_cache
+
+    # ---- reporting -----------------------------------------------------------
+    def _total_bytes(self) -> int:
         leaves = jax.tree_util.tree_leaves(self.cache)
-        total = sum(l.size * l.dtype.itemsize for l in leaves)
-        return total // self.max_slots
+        return sum(l.size * l.dtype.itemsize for l in leaves)
+
+    def bytes_per_slot(self) -> int:
+        """Dense: configured per-slot footprint. Paged: *live* per-sequence
+        footprint (live pages / active sequences; one full-length slot's
+        worth when idle, for sizing)."""
+        total = self._total_bytes()
+        if not self.paged:
+            return total // self.max_slots
+        per_page = total // self.num_pages
+        if self._active:
+            return per_page * max(self.live_pages, 1) // len(self._active)
+        return per_page * self.max_pages_per_slot
 
     def stats(self) -> dict:
-        return {"max_slots": self.max_slots, "free": self.free_slots,
-                "active": len(self._active),
-                "bytes_per_slot": self.bytes_per_slot()}
+        out = {"max_slots": self.max_slots, "free": self.free_slots,
+               "active": len(self._active),
+               "bytes_per_slot": self.bytes_per_slot(),
+               "layout": self.layout}
+        if self.paged:
+            out.update({"num_pages": self.num_pages,
+                        "page_size": self.page_size,
+                        "live_pages": self.live_pages,
+                        "free_pages": self.free_pages})
+        return out

@@ -31,6 +31,7 @@ def test_full_config_metadata(arch):
         assert cfg.active_param_count() < cfg.param_count()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_reduced_smoke_forward_and_train(arch):
     cfg = reduced_config(get_config(arch))
@@ -59,6 +60,7 @@ def test_reduced_smoke_forward_and_train(arch):
     assert np.isfinite(gn) and gn > 0, arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_reduced_smoke_decode(arch):
     """One prefill + one decode step per arch (serving path)."""

@@ -6,6 +6,7 @@ import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.execution import ExecutionPlan, execution_plan, shard_blocks
+from repro.launch.mesh import make_mesh
 from repro.training.checkpoint import restore_checkpoint, save_checkpoint
 
 
@@ -16,8 +17,7 @@ def test_elastic_restore_resharding(tmp_path):
     state = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4),
              "step": jnp.array(3)}
     save_checkpoint(d, 5, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     shardings = {"w": NamedSharding(mesh, P("data", None)),
                  "step": NamedSharding(mesh, P())}
     restored, step = restore_checkpoint(

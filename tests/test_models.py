@@ -59,6 +59,7 @@ def test_decode_matches_forward_ssm(tiny_ssm):
     _roundtrip(tiny_ssm)
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_hybrid():
     cfg = small_test_config(
         "tiny-hybrid", family="hybrid", num_layers=4,
@@ -71,6 +72,7 @@ def test_decode_matches_forward_hybrid():
     _roundtrip(cfg)
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_sliding_window():
     cfg = small_test_config("tiny-swa", num_layers=2)
     pattern = (LayerKind(ATTN_LOCAL, DENSE), LayerKind(ATTN, DENSE))

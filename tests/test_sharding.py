@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import make_mesh
 from repro.sharding.rules import (base_rules, fit_pspec_to_shape,
                                   resolve_pspec, rules_for)
 
@@ -23,8 +24,7 @@ def test_resolve_none_axes():
 
 
 def test_fit_drops_nondividing():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     # fake a 16-way axis via a mesh-shaped namespace
     class FakeMesh:
         shape = {"model": 16, "data": 4}

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.launch.mesh import make_mesh
 from repro.training.checkpoint import (latest_checkpoint, list_checkpoints,
                                        restore_checkpoint, save_checkpoint)
 from repro.training.compression import (compress, decompress, ef_step)
@@ -177,8 +178,7 @@ def test_pipeline_matches_sequential():
     from repro.training.pipeline import bubble_fraction, pipeline_apply
     if len(jax.devices()) < 1:
         pytest.skip("no devices")
-    mesh = jax.make_mesh((1,), ("pipe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pipe",))
     P_stages = 1
     key = jax.random.PRNGKey(0)
     W = jax.random.normal(key, (P_stages, 8, 8)) * 0.3
