@@ -24,6 +24,8 @@ FIGS = [
     "fig16_split",           # SVIII-A split-node comparison
     "skew_study",            # SVIII-B expert-skew implications
     "duplex_runtime",        # TPU-runtime counterpart (HLO-level wins)
+    "decode_paged",          # paged vs dense streamed-KV (PR 1 tentpole)
+    "moe_ragged",            # ragged vs padded MoE kernels (PR 2 tentpole)
 ]
 
 

@@ -50,7 +50,23 @@ def default_capacities(T: int, m: MoEConfig, k_cold: int,
     # kernel's own BlockSpec concern, NOT baked into the slot buffers.
     sigma = (mean * (1.0 - m.top_k / m.num_experts)) ** 0.5
     c_hot = _align(int(mean + 3.0 * sigma) + 1, a_hot)
-    c_cold = _align(int(mean) + 1, a_cold)
+    # Cold experts are the k_cold *least-loaded* ranks, so their capacity is
+    # governed by the count at the cold/hot boundary rank — the normal-order-
+    # statistic expectation mean + sigma·Φ⁻¹(k_cold/E) — not the uniform
+    # mean, plus a fluctuation margin (the realized boundary count wobbles
+    # stage to stage; without slack the largest cold expert would overflow
+    # and drop tokens on a large fraction of stages). For small cold sets
+    # (the common planner outcome) the boundary quantile is deep in the
+    # lower tail, so C_cold shrinks well below the mean; at k_cold = E it
+    # recovers the worst expert (≈ hot capacity).
+    if k_cold > 0:
+        from statistics import NormalDist
+        q = min(max(k_cold / m.num_experts, 1e-6), 1.0 - 1e-6)
+        z = NormalDist().inv_cdf(q)
+        boundary = mean + z * sigma + max(mean, 0.0) ** 0.5
+    else:
+        boundary = mean
+    c_cold = _align(int(max(boundary, 0.0)) + 1, a_cold)
     return c_hot, c_cold
 
 
@@ -125,14 +141,23 @@ def _expert_ffn(w, x):
 
 def duplex_moe_apply(params, cfg: ModelConfig, x, *, k_cold: int,
                      c_hot: Optional[int] = None, c_cold: Optional[int] = None,
-                     use_kernels: bool = False,
-                     return_stats: bool = False):
+                     use_kernels: bool = False, ragged: bool = False,
+                     c_block: int = 256, return_stats: bool = False):
     """Duplex MoE layer: hot experts through the grouped-GEMM path, cold
     experts through the gather-GEMV path. ``k_cold`` is static (planner).
 
     Semantics match ``models/moe.py::moe_apply`` for sufficient capacities
     (tokens over capacity are dropped, standard capacity-MoE behaviour).
     Dispatch is hierarchical (per batch shard) like the grouped path.
+
+    With ``ragged`` (and ``use_kernels``), per-expert live token counts are
+    threaded into the scalar-prefetch kernels: the hot grouped GEMM elides
+    dead token-block DMAs/compute and the cold GEMV skips fully empty
+    experts, so executed FLOPs and streamed weight bytes scale with the
+    routed tokens instead of the capacity padding. Requires a single
+    dispatch shard (per-shard slot buffers interleave live slots in the
+    merged token dim); multi-shard dispatch falls back to the padded
+    kernels.
     """
     from repro.core.execution import shard_blocks
     from repro.models.moe import combine_slots, gather_slots
@@ -151,6 +176,11 @@ def duplex_moe_apply(params, cfg: ModelConfig, x, *, k_cold: int,
 
     x_slots = gather_slots(xb, disp.src_token)              # (n, n_slots, d)
     w_perm = _gather_weights(params, disp.perm)
+    # live tokens per slot-buffer expert (rank order; dispatch fills each
+    # expert's slots as a contiguous prefix) — scalar-prefetch operands of
+    # the ragged kernels. Only exact for a single dispatch shard.
+    use_ragged = ragged and use_kernels and n == 1
+    counts_rank = disp.counts[disp.perm] if use_ragged else None
 
     # ---- cold path: (k_cold, n*C_cold, d) — bandwidth-streaming GEMV --------
     if disp.k_cold > 0:
@@ -159,8 +189,11 @@ def duplex_moe_apply(params, cfg: ModelConfig, x, *, k_cold: int,
         w_cold = {k: v[:disp.k_cold] for k, v in w_perm.items()}
         if use_kernels:
             from repro.kernels.ops import moe_gemv
+            cold_counts = (jnp.minimum(counts_rank[:disp.k_cold], disp.c_cold)
+                           if use_ragged else None)
             y_cold = moe_gemv(w_cold, x_cold.reshape(disp.k_cold,
-                                                     n * disp.c_cold, -1))
+                                                     n * disp.c_cold, -1),
+                              cold_counts)
             y_cold = y_cold.reshape(disp.k_cold, n, disp.c_cold, -1)
         else:
             y_cold = _expert_ffn(w_cold, x_cold)
@@ -175,10 +208,19 @@ def duplex_moe_apply(params, cfg: ModelConfig, x, *, k_cold: int,
         x_hot = logical_constraint(x_hot,
                                    ("act_exp", "act_cap", None, "act_embed"))
         w_hot = {k: v[disp.k_cold:] for k, v in w_perm.items()}
-        if use_kernels:
+        if use_ragged:
+            from repro.kernels.ops import ragged_moe_gemm
+            hot_counts = jnp.minimum(counts_rank[disp.k_cold:], disp.c_hot)
+            y_hot = ragged_moe_gemm(w_hot,
+                                    x_hot.reshape(E - disp.k_cold,
+                                                  n * disp.c_hot, -1),
+                                    hot_counts, c_block=c_block)
+            y_hot = y_hot.reshape(E - disp.k_cold, n, disp.c_hot, -1)
+        elif use_kernels:
             from repro.kernels.ops import moe_gemm
             y_hot = moe_gemm(w_hot, x_hot.reshape(E - disp.k_cold,
-                                                  n * disp.c_hot, -1))
+                                                  n * disp.c_hot, -1),
+                             c_block=c_block)
             y_hot = y_hot.reshape(E - disp.k_cold, n, disp.c_hot, -1)
         else:
             y_hot = _expert_ffn(w_hot, x_hot)
@@ -199,6 +241,47 @@ def duplex_moe_apply(params, cfg: ModelConfig, x, *, k_cold: int,
     if return_stats:
         return y, router
     return y, router.aux_loss
+
+
+def moe_traffic_model(counts, *, k_cold: int, c_hot: int, c_cold: int,
+                      d_model: int, d_ff: int, c_block: int = 256,
+                      itemsize: int = 2, mats: int = 3) -> dict:
+    """Modeled per-MoE-layer HBM bytes + FLOPs under the capacity-padded vs
+    ragged kernels for one stage's per-expert token counts (host-side; the
+    serving engine feeds it the same stage statistics that drive ``k_cold``).
+
+    Hot path: grouped GEMM — padded runs every (expert, token-block) and
+    re-streams the expert's ``mats`` weight matrices per block; ragged runs
+    live blocks only (``kernels/moe_gemm.py::moe_gemm_traffic`` semantics).
+    Cold path: gather GEMV — weights stream once per cold expert (padded)
+    vs once per *occupied* cold expert (ragged); FLOPs cover the C_cold slab.
+    Returns ``{padded,ragged}_{bytes,weight_bytes,flops}``.
+    """
+    import numpy as np
+    from repro.kernels.moe_gemm import moe_gemm_traffic
+    counts = np.sort(np.asarray(counts, dtype=np.int64))   # rank order
+    cold, hot = counts[:k_cold], counts[k_cold:]
+    out = {k: 0 for k in ("padded_weight_bytes", "ragged_weight_bytes",
+                          "padded_bytes", "ragged_bytes",
+                          "padded_flops", "ragged_flops")}
+    if len(hot) and c_hot > 0:
+        t = moe_gemm_traffic(hot, capacity=c_hot, d_model=d_model,
+                             d_ff=d_ff, c_block=c_block, itemsize=itemsize,
+                             mats=mats)
+        for k in out:
+            out[k] += t[k]
+    if len(cold) and c_cold > 0:
+        w_once = mats * d_model * d_ff * itemsize
+        a_slab = 2 * c_cold * d_model * itemsize
+        flops_slab = 2 * mats * c_cold * d_model * d_ff
+        occupied = int((np.minimum(cold, c_cold) > 0).sum())
+        out["padded_weight_bytes"] += len(cold) * w_once
+        out["ragged_weight_bytes"] += occupied * w_once
+        out["padded_bytes"] += len(cold) * (w_once + a_slab)
+        out["ragged_bytes"] += occupied * (w_once + a_slab)
+        out["padded_flops"] += len(cold) * flops_slab
+        out["ragged_flops"] += occupied * flops_slab
+    return out
 
 
 def padded_flops_saved(T: int, m: MoEConfig, k_cold: int, d_model: int,

@@ -30,6 +30,11 @@ class ExecutionPlan:
     c_hot: Optional[int] = None      # duplex: hot capacity (None = auto)
     c_cold: Optional[int] = None     # duplex: cold capacity (None = auto)
     moe_capacity: Optional[int] = None   # grouped: capacity override
+    # duplex + kernels: thread per-expert live counts into the ragged
+    # scalar-prefetch MoE kernels (dead token-block DMAs elided, compute
+    # skipped) instead of the capacity-padded grouped GEMM.
+    moe_ragged: bool = False
+    moe_c_block: int = 256           # hot grouped-GEMM token-block size
     use_kernels: bool = False        # Pallas kernels (TPU) vs XLA paths
     decode_kv_block: int = 512
     # hierarchical MoE dispatch: tokens dispatch into per-shard slot blocks so
@@ -94,11 +99,16 @@ def shard_blocks(x):
 def moe_execute(params, cfg: ModelConfig, x, *, return_stats: bool = False):
     """Route the MoE layer through the path the active plan selects."""
     plan = current_plan()
-    if plan.moe_impl == "duplex" and plan.k_cold > 0:
+    # the ragged kernels live on the count-threaded duplex path, so a
+    # duplex plan with k_cold == 0 still routes there when ragged is on
+    # (all experts hot, all token blocks count-gated).
+    if plan.moe_impl == "duplex" and (plan.k_cold > 0 or plan.moe_ragged):
         from repro.core.duplex_moe import duplex_moe_apply
         return duplex_moe_apply(params, cfg, x, k_cold=plan.k_cold,
                                 c_hot=plan.c_hot, c_cold=plan.c_cold,
                                 use_kernels=plan.use_kernels,
+                                ragged=plan.moe_ragged,
+                                c_block=plan.moe_c_block,
                                 return_stats=return_stats)
     from repro.models.moe import moe_apply
     return moe_apply(params, cfg, x, capacity=plan.moe_capacity,

@@ -45,13 +45,36 @@ class ExpertLUT:
 
 
 def build_lut(dev: DeviceSpec, d_model: int, d_ff: int,
-              max_tokens: int, mats: int = 3) -> ExpertLUT:
+              max_tokens: int, mats: int = 3, *,
+              block: Optional[int] = None,
+              capacity: Optional[int] = None) -> ExpertLUT:
     """Expert FFN = ``mats`` GEMMs (3 for SwiGLU, 2 classic): flops =
-    2·mats·t·d·f, bytes = weights (read once) + activations."""
+    2·mats·t·d·f, bytes = weights (read once) + activations.
+
+    Cost modes — the LUT must model what the kernel actually executes:
+
+      * default (``block=capacity=None``): ideal live-token cost, weights
+        streamed once — the gather-GEMV (cold/PIM) path;
+      * ``capacity``: the capacity-padded grouped GEMM — any nonzero count
+        executes the full padded slot buffer and re-streams the weights once
+        per ``block``-sized token block (the pre-ragged hot path);
+      * ``block`` alone: the ragged grouped GEMM — live tokens rounded up to
+        token blocks, weights re-streamed once per *live* block.
+    """
     t = np.arange(max_tokens + 1, dtype=np.float64)
-    flops = 2.0 * mats * t * d_model * d_ff
-    w_bytes = 2.0 * mats * d_model * d_ff
-    a_bytes = 2.0 * t * (2 * d_model + mats * d_ff)
+    w_once = 2.0 * mats * d_model * d_ff
+    if capacity is not None:
+        nb = np.where(t > 0, float(-(-capacity // (block or capacity))), 0.0)
+        t_eff = np.where(t > 0, float(capacity), 0.0)
+    elif block is not None:
+        nb = np.ceil(t / block)
+        t_eff = nb * block
+    else:
+        nb = (t > 0).astype(np.float64)
+        t_eff = t
+    flops = 2.0 * mats * t_eff * d_model * d_ff
+    w_bytes = w_once * nb
+    a_bytes = 2.0 * t_eff * (2 * d_model + mats * d_ff)
     bytes_ = np.where(t > 0, w_bytes + a_bytes, 0.0)
     times = np.maximum(flops / dev.peak_flops, bytes_ / dev.mem_bw)
     times = np.where(t > 0, times + dev.t_launch, 0.0)
@@ -59,8 +82,16 @@ def build_lut(dev: DeviceSpec, d_model: int, d_ff: int,
 
 
 def build_luts(duplex: DuplexSpec, d_model: int, d_ff: int,
-               max_tokens: int, mats: int = 3) -> Tuple[ExpertLUT, ExpertLUT]:
-    return (build_lut(duplex.xpu, d_model, d_ff, max_tokens, mats),
+               max_tokens: int, mats: int = 3, *,
+               hot_block: Optional[int] = None,
+               hot_capacity: Optional[int] = None
+               ) -> Tuple[ExpertLUT, ExpertLUT]:
+    """(xPU LUT, PIM LUT). ``hot_block``/``hot_capacity`` select the xPU
+    (grouped-GEMM) cost mode — ragged live-block vs capacity-padded — so the
+    greedy k_cold split reflects what the hot kernel actually executes; the
+    PIM (GEMV) path keeps the ideal live-token cost."""
+    return (build_lut(duplex.xpu, d_model, d_ff, max_tokens, mats,
+                      block=hot_block, capacity=hot_capacity),
             build_lut(duplex.pim, d_model, d_ff, max_tokens, mats))
 
 

@@ -20,7 +20,9 @@ def tpu_compiler_params(**kwargs):
 
 
 from repro.kernels.ops import (decode_attention, flash_attention, moe_gemm,
-                               moe_gemv, paged_decode_attention)
+                               moe_gemv, paged_decode_attention,
+                               ragged_moe_gemm)
 
 __all__ = ["decode_attention", "flash_attention", "moe_gemm", "moe_gemv",
-           "paged_decode_attention", "tpu_compiler_params"]
+           "paged_decode_attention", "ragged_moe_gemm",
+           "tpu_compiler_params"]

@@ -22,8 +22,8 @@ from repro.kernels import ref
 from repro.kernels.decode_attn import (decode_attention_kernel,
                                        paged_decode_attention_kernel)
 from repro.kernels.flash_attn import flash_attention_kernel
-from repro.kernels.moe_gemm import moe_gemm_kernel
-from repro.kernels.moe_gemv import moe_gemv_kernel
+from repro.kernels.moe_gemm import moe_gemm_kernel, ragged_moe_gemm_kernel
+from repro.kernels.moe_gemv import moe_gemv_kernel, ragged_moe_gemv_kernel
 from repro.kernels.ssd_decode import ssd_decode_kernel
 
 
@@ -135,16 +135,56 @@ def moe_gemm(w, x, *, c_block: int = 256, f_block: int = 512,
     return out[:, :C]
 
 
-def moe_gemv(w, x, *, f_block: int = 256, interpret: bool | None = None):
-    """Cold-expert gather GEMV. x: (Ec, Cc, d) -> (Ec, Cc, d)."""
+def ragged_moe_gemm(w, x, counts, *, c_block: int = 256, f_block: int = 512,
+                    blocks_bound: int | None = None,
+                    interpret: bool | None = None):
+    """Count-aware hot-expert grouped GEMM. x: (E, C, d) slot buffers (live
+    tokens a contiguous prefix of the C dim); counts: (E,) live tokens per
+    expert. Streamed weight bytes and FLOPs scale with live token blocks;
+    slots at or past each expert's count come back zeroed. -> (E, C, d)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    E, C, d = x.shape
+    c_block = min(c_block, C)
+    f_block = min(f_block, w["wi_gate"].shape[2])
+    xp = _pad_to(x, c_block, 1)
+    wg = _pad_to(w["wi_gate"], f_block, 2)
+    wu = _pad_to(w["wi_up"], f_block, 2)
+    wo = _pad_to(w["wo"], f_block, 1)
+    if blocks_bound is not None:     # a bound past the buffer is a no-op
+        blocks_bound = min(blocks_bound, xp.shape[1] // c_block)
+    cap = C if blocks_bound is None else min(C, blocks_bound * c_block)
+    counts = jnp.minimum(counts.astype(jnp.int32), cap)
+    out = ragged_moe_gemm_kernel({"wi_gate": wg, "wi_up": wu, "wo": wo}, xp,
+                                 counts, c_block=c_block, f_block=f_block,
+                                 blocks_bound=blocks_bound,
+                                 interpret=interpret)[:, :C]
+    # dead blocks are never written by the kernel (their output DMAs are
+    # elided along with their inputs) — mask so they read as zero.
+    slot = jax.lax.broadcasted_iota(jnp.int32, (E, C), 1)
+    return jnp.where((slot < counts[:, None])[..., None], out, 0)
+
+
+def moe_gemv(w, x, counts=None, *, f_block: int = 256,
+             interpret: bool | None = None):
+    """Cold-expert gather GEMV. x: (Ec, Cc, d) -> (Ec, Cc, d). With
+    ``counts`` (Ec,) live tokens per expert, fully empty cold experts stream
+    no weights (scalar-prefetch DMA elision) and their rows come back
+    zeroed."""
     interpret = _interpret_default() if interpret is None else interpret
     f = w["wi_gate"].shape[2]
     f_block = min(f_block, f)
     wg = _pad_to(w["wi_gate"], f_block, 2)
     wu = _pad_to(w["wi_up"], f_block, 2)
     wo = _pad_to(w["wo"], f_block, 1)
-    return moe_gemv_kernel({"wi_gate": wg, "wi_up": wu, "wo": wo}, x,
-                           f_block=f_block, interpret=interpret)
+    wp = {"wi_gate": wg, "wi_up": wu, "wo": wo}
+    if counts is None:
+        return moe_gemv_kernel(wp, x, f_block=f_block, interpret=interpret)
+    Ec, Cc, _ = x.shape
+    counts = jnp.minimum(counts.astype(jnp.int32), Cc)
+    out = ragged_moe_gemv_kernel(wp, x, counts, f_block=f_block,
+                                 interpret=interpret)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (Ec, Cc), 1)
+    return jnp.where((slot < counts[:, None])[..., None], out, 0)
 
 
 def ssd_decode(state, x, dt, a_log, b, c, d, *, h_block: int = 8,
@@ -163,4 +203,5 @@ def ssd_decode(state, x, dt, a_log, b, c, d, *, h_block: int = 8,
 flash_attention_ref = ref.flash_attention_ref
 decode_attention_ref = ref.decode_attention_ref
 moe_ffn_ref = ref.moe_ffn_ref
+ragged_moe_ffn_ref = ref.ragged_moe_ffn_ref
 ssd_decode_ref = ref.ssd_decode_ref

@@ -69,6 +69,16 @@ def moe_ffn_ref(w, x):
     return out.astype(x.dtype)
 
 
+def ragged_moe_ffn_ref(w, x, counts):
+    """Count-aware grouped expert FFN oracle: rows at or past each expert's
+    live count are zero (the ragged kernels' contract). x: (E, C, d);
+    counts: (E,). Returns (E, C, d)."""
+    y = moe_ffn_ref(w, x)
+    E, C, _ = x.shape
+    live = jnp.arange(C)[None, :] < jnp.asarray(counts, jnp.int32)[:, None]
+    return jnp.where(live[..., None], y, 0)
+
+
 def ssd_decode_ref(state, x, dt, a_log, b, c, d):
     """Mamba-2 single-token state update. state (B,H,N,P) fp32; x (B,H,P);
     dt (B,H); a_log, d (H,); b, c (B,N). Returns (y, new_state)."""

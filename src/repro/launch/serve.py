@@ -34,6 +34,13 @@ def main(argv=None) -> int:
                         "pages only (full-attention decoder archs)")
     p.add_argument("--kv-page-size", type=int, default=64)
     p.add_argument("--no-duplex", action="store_true")
+    p.add_argument("--kernels", action="store_true",
+                   help="lower through the Pallas kernels (interpret mode "
+                        "on CPU); with duplex this enables the ragged "
+                        "count-threaded MoE path")
+    p.add_argument("--no-moe-ragged", action="store_true",
+                   help="with --kernels: keep the capacity-padded MoE "
+                        "kernels instead of the ragged ones")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -45,7 +52,9 @@ def main(argv=None) -> int:
                         max_len=args.max_len,
                         kv_layout=args.kv_layout,
                         kv_page_size=args.kv_page_size,
-                        use_duplex=not args.no_duplex)
+                        use_duplex=not args.no_duplex,
+                        use_kernels=args.kernels,
+                        moe_ragged=not args.no_moe_ragged)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -64,6 +73,13 @@ def main(argv=None) -> int:
     kc = [r.k_cold for r in eng.reports]
     print(f"[serve] decode-stage bandwidth-path FLOP fraction: "
           f"{np.mean(bw):.3f}; k_cold (planner): min={min(kc)} max={max(kc)}")
+    moe_b = sum(r.moe_bytes_streamed for r in eng.reports)
+    if moe_b:
+        live = sum(r.moe_flops_live for r in eng.reports)
+        padded = sum(r.moe_flops_padded for r in eng.reports)
+        print(f"[serve] MoE streamed bytes={moe_b/1e6:.2f}MB "
+              f"({'ragged' if eng.moe_ragged else 'padded'} kernels); "
+              f"live/padded FLOPs={live/max(padded, 1):.2f}")
     return 0
 
 

@@ -6,6 +6,10 @@ Two execution paths are provided (DESIGN.md §2):
   * ``duplex`` (core/duplex_moe.py): splits experts into hot/cold by token
     count using the paper's greedy partitioner and runs the cold tail through
     a bandwidth-optimized GEMV path, eliminating capacity-padding waste.
+    With ``ExecutionPlan.moe_ragged`` the per-expert counts are additionally
+    threaded into the scalar-prefetch ragged kernels, so executed FLOPs and
+    streamed weight bytes scale with live tokens (ROADMAP "DESIGN: ragged
+    scalar-prefetch MoE kernels").
 
 The router also returns per-expert token counts: the serving scheduler feeds
 them to the Duplex planner (one-stage-stale statistics, DESIGN.md §8).

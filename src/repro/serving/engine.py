@@ -11,6 +11,10 @@ Stage loop (paper §II-C / §V):
     the partitioner's statically-bucketed ``k_cold`` picks how many experts go
     through the bandwidth (gather-GEMV) path; which experts is decided
     dynamically per layer from the actual router counts inside the step.
+    With kernels on, both paths are *ragged* (``moe_ragged``): live counts
+    ride into the scalar-prefetch kernels, dead token blocks cost no DMAs or
+    FLOPs, and the engine sizes ``c_hot`` to a bucketed live-block count so
+    the token grid is a stable jit key.
   * C3: the mixed stage runs decode-sequence attention through the
     bandwidth-path decode kernel and prefill attention through the
     compute-path blockwise kernel. On Duplex hardware the two run
@@ -68,6 +72,10 @@ def _pow2_buckets(n_max: int) -> Tuple[int, ...]:
     return tuple(out)
 
 
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
 @dataclass
 class StageReport:
     stage_index: int
@@ -81,12 +89,21 @@ class StageReport:
     # layers). Dense: max_slots × max_len regardless of occupancy. Paged:
     # live pages of the active slots only.
     kv_bytes_streamed: int = 0
+    # MoE weight+activation bytes the decode-stage expert kernels stream
+    # (all MoE layers, modeled from the stage's expected routing counts —
+    # the planner's seeded stream rescaled to the decode token count).
+    # Padded kernels execute the full capacity grid; ragged kernels execute
+    # live token blocks only.
+    moe_bytes_streamed: int = 0
+    moe_flops_live: int = 0       # FLOPs over live (routed) token blocks
+    moe_flops_padded: int = 0     # FLOPs the capacity-padded path would burn
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_len: int, use_duplex: bool = True,
                  use_kernels: bool = False, kv_quant: bool = False,
+                 moe_ragged: bool = True, moe_c_block: int = 256,
                  preemption: str = "none", kv_layout: str = "dense",
                  kv_page_size: int = 64, kv_num_pages: Optional[int] = None,
                  sampling: SamplingParams = SamplingParams(),
@@ -115,14 +132,27 @@ class ServingEngine:
         self.sampling = sampling
         self.use_duplex = use_duplex and cfg.moe is not None
         self.use_kernels = use_kernels
+        # ragged MoE kernels need the count-threaded duplex path + Pallas
+        # (the XLA grouped fallback is inherently capacity-padded).
+        self.moe_ragged = bool(moe_ragged and use_kernels and self.use_duplex)
+        self.moe_c_block = moe_c_block
         self.prefill_len_buckets = tuple(
             b for b in prefill_len_buckets if b <= max_len) or (max_len,)
         self.seq_buckets = tuple(sorted({1, 2, max_prefill_seqs}))
         self.planner: Optional[DuplexPlanner] = None
         if self.use_duplex:
+            # the xPU LUT models what the hot kernel executes: ragged →
+            # block-quantized live tokens; padded → the full capacity grid,
+            # weights re-streamed once per c_block token block either way.
+            ch, _, cb = self._moe_caps(max_slots, 0)
+            if self.moe_ragged:
+                hot_kw = dict(hot_block=cb)
+            else:
+                hot_kw = dict(hot_block=cb, hot_capacity=ch)
             lut_x, lut_p = build_luts(DUPLEX, cfg.d_model,
                                       cfg.moe.d_ff_expert,
-                                      max_tokens=max(4 * max_slots, 512))
+                                      max_tokens=max(4 * max_slots, 512),
+                                      **hot_kw)
             self.planner = DuplexPlanner(lut_x, lut_p, cfg.moe.num_experts)
         # decode-attention streamed-bytes accounting (K+V only; mamba mixers
         # hold O(1) state and cross-attn KV is written once, both excluded).
@@ -145,6 +175,14 @@ class ServingEngine:
         self._kv_bytes_per_token = per_tok * n_attn
         self._dense_kv_bytes_per_stage = (max_slots * per_tok *
                                           dense_tokens_per_slot)
+        # MoE streamed-bytes accounting: layer count + GEMM matrices per
+        # expert FFN (3 SwiGLU / 2 classic) for the traffic model.
+        from repro.configs.base import MOE
+        self._moe_layers = sum(seg.repeats
+                               for seg in cfg.segments
+                               for kind in seg.pattern if kind.ffn == MOE)
+        self._moe_mats = 3 if cfg.gated_ffn else 2
+        self._param_itemsize = jnp.dtype(cfg.param_dtype).itemsize
         self._key = jax.random.PRNGKey(seed)
         self._tokens = np.zeros((max_slots,), np.int32)   # last token per slot
         self._slot_req: Dict[int, Request] = {}
@@ -160,12 +198,38 @@ class ServingEngine:
         self.reports: List[StageReport] = []
 
     # ------------------------------------------------------------------ jits
-    def _decode_fn(self, k_cold: int):
-        if k_cold not in self._decode_fns:
+    def _moe_caps(self, T: int, k_cold: int) -> Tuple[int, int, int]:
+        """(c_hot, c_cold, c_block) for a decode stage of T (already
+        bucketed) tokens. The hot capacity snaps up to a power-of-two count
+        of c_block-sized token blocks — the stage's *live-block bucket* —
+        so the ragged kernel's token-block grid is a stable jit key and
+        steady state never recompiles."""
+        from repro.core.duplex_moe import default_capacities
+        if self.cfg.moe is None:
+            return 0, 0, self.moe_c_block
+        ch, cc = default_capacities(T, self.cfg.moe, k_cold)
+        cb = min(self.moe_c_block, _pow2_ceil(ch))
+        blocks = _pow2_ceil(-(-ch // cb))
+        return blocks * cb, cc, cb
+
+    def _moe_plan(self, k_cold: int, c_hot: int, c_cold: int,
+                  c_block: int) -> ExecutionPlan:
+        # the ragged kernels live on the count-threaded duplex path, so keep
+        # it selected even at k_cold == 0 (all experts hot, all ragged).
+        use_duplex_impl = k_cold > 0 or self.moe_ragged
+        return ExecutionPlan(
+            moe_impl="duplex" if use_duplex_impl else "grouped",
+            k_cold=k_cold,
+            c_hot=c_hot if use_duplex_impl else None,
+            c_cold=c_cold if use_duplex_impl else None,
+            moe_ragged=self.moe_ragged, moe_c_block=c_block,
+            use_kernels=self.use_kernels)
+
+    def _decode_fn(self, k_cold: int, c_hot: int, c_cold: int, c_block: int):
+        key = (k_cold, c_hot, c_cold)
+        if key not in self._decode_fns:
             cfg = self.cfg
-            plan = ExecutionPlan(
-                moe_impl="duplex" if k_cold > 0 else "grouped",
-                k_cold=k_cold, use_kernels=self.use_kernels)
+            plan = self._moe_plan(k_cold, c_hot, c_cold, c_block)
 
             @jax.jit
             def fn(params, tokens, cache, key):
@@ -174,19 +238,19 @@ class ServingEngine:
                 nxt = sample(logits, key, self.sampling)
                 return nxt, new_cache
 
-            self._decode_fns[k_cold] = fn
-        return self._decode_fns[k_cold]
+            self._decode_fns[key] = fn
+        return self._decode_fns[key]
 
-    def _paged_decode_fn(self, k_cold: int, n_batch: int, n_pages: int):
+    def _paged_decode_fn(self, k_cold: int, c_hot: int, c_cold: int,
+                         c_block: int, n_batch: int, n_pages: int):
         """Paged decode step over a gathered active-slot batch. Static key =
-        (k_cold, batch bucket, live-page bucket): the kv work is trimmed to
-        the stage's bucketed max live pages, not the configured maximum."""
-        key = (k_cold, n_batch, n_pages)
+        (k_cold, hot/cold capacities, batch bucket, live-page bucket): both
+        the kv grid and the MoE token-block grid are trimmed to the stage's
+        bucketed live work, not the configured maxima."""
+        key = (k_cold, c_hot, c_cold, n_batch, n_pages)
         if key not in self._paged_decode_fns:
             cfg = self.cfg
-            plan = ExecutionPlan(
-                moe_impl="duplex" if k_cold > 0 else "grouped",
-                k_cold=k_cold, use_kernels=self.use_kernels)
+            plan = self._moe_plan(k_cold, c_hot, c_cold, c_block)
 
             @jax.jit
             def fn(params, tokens, cache, lengths, block_tables, key_):
@@ -307,6 +371,8 @@ class ServingEngine:
         # the stage's bucketed max live pages, so HBM traffic scales with
         # occupancy × live context instead of max_slots × max_len.
         kv_bytes = 0
+        decode_tokens = 0              # rows the decode step pushes through MoE
+        moe_caps = None
         if decision.decoding and self.paged:
             page = self.kv.page_size
             slots = [r.slot for r in decision.decoding]
@@ -325,7 +391,9 @@ class ServingEngine:
                 tokens[i, 0] = self._tokens[s]
                 lengths[i] = self.kv.lens[s]
                 bt[i] = self.kv.block_tables[s, :mp]
-            fn = self._paged_decode_fn(k_cold, nb, mp)
+            decode_tokens = nb
+            moe_caps = self._moe_caps(nb, k_cold)
+            fn = self._paged_decode_fn(k_cold, *moe_caps, nb, mp)
             nxt, self.kv.cache = fn(self.params, jnp.asarray(tokens),
                                     self.kv.cache, jnp.asarray(lengths),
                                     jnp.asarray(bt), self._next_key())
@@ -338,7 +406,11 @@ class ServingEngine:
             self.kv.lens[np.asarray(slots)] += 1
         elif decision.decoding:
             kv_bytes = self._dense_kv_bytes_per_stage
-            fn = self._decode_fn(k_cold)
+            # dense decode runs over ALL slots (inactive rows discarded), so
+            # the MoE layers see max_slots tokens regardless of occupancy.
+            decode_tokens = self.kv.max_slots
+            moe_caps = self._moe_caps(decode_tokens, k_cold)
+            fn = self._decode_fn(k_cold, *moe_caps)
             toks = jnp.asarray(self._tokens)[:, None]
             nxt, self.kv.cache = fn(self.params, toks, self.kv.cache,
                                     self._next_key())
@@ -395,6 +467,31 @@ class ServingEngine:
                 self._slot_req.pop(r.slot, None)
         self.scheduler.commit_stage(decision)
 
+        # ---- MoE streamed-bytes / padded-vs-live FLOP accounting for the
+        # decode half (the count-threaded duplex path): counts drawn from the
+        # planner's seeded stream, rescaled to the decode step's token count
+        # (identical to the planner vector whenever the totals coincide).
+        moe_bytes = moe_flops_live = moe_flops_padded = 0
+        if (self.use_duplex and decode_tokens and self._moe_layers
+                and (k_cold > 0 or self.moe_ragged)):
+            from repro.core.duplex_moe import moe_traffic_model
+            m = self.cfg.moe
+            rng = np.random.default_rng(self._stage_idx)
+            dcounts = rng.multinomial(decode_tokens * m.top_k,
+                                      np.full(m.num_experts,
+                                              1.0 / m.num_experts))
+            ch, cc, cb = moe_caps
+            stats = moe_traffic_model(dcounts, k_cold=k_cold, c_hot=ch,
+                                      c_cold=cc, d_model=self.cfg.d_model,
+                                      d_ff=m.d_ff_expert, c_block=cb,
+                                      itemsize=self._param_itemsize,
+                                      mats=self._moe_mats)
+            L = self._moe_layers
+            which = "ragged" if self.moe_ragged else "padded"
+            moe_bytes = stats[f"{which}_bytes"] * L
+            moe_flops_live = stats["ragged_flops"] * L
+            moe_flops_padded = stats["padded_flops"] * L
+
         report = StageReport(
             stage_index=self._stage_idx, is_mixed=decision.is_mixed,
             num_decode=len(decision.decoding),
@@ -402,7 +499,10 @@ class ServingEngine:
             bandwidth_flop_fraction=(splan.bandwidth_fraction()
                                      if splan else 0.0),
             wall_time=time.monotonic() - t0,
-            kv_bytes_streamed=int(kv_bytes))
+            kv_bytes_streamed=int(kv_bytes),
+            moe_bytes_streamed=int(moe_bytes),
+            moe_flops_live=int(moe_flops_live),
+            moe_flops_padded=int(moe_flops_padded))
         self.reports.append(report)
         self._stage_idx += 1
         return report
