@@ -1,0 +1,126 @@
+"""Chunked vs monolithic prefill under a long-prompt workload.
+
+The motivation for chunked prefill (ROADMAP "DESIGN: chunked prefill") is
+twofold, and this benchmark measures both:
+
+  * **decode TBT tail** — a monolithic mixed stage runs an admitted prompt
+    end-to-end, so every decoding request's time-between-tokens absorbs the
+    whole prompt's prefill latency; chunking bounds the per-stage prefill
+    work at ``prefill_chunk_tokens``, so the TBT p99 under long-prompt
+    arrivals drops toward the decode-only stage time.
+  * **per-stage token-count variance** — the MoE Op/B fluctuation the paper
+    identifies (§III/§V-B) is driven by the stage token count swinging
+    between ~batch (decode-only) and ~batch+prompt (mixed). Chunking pins
+    mixed stages near ``batch + chunk`` tokens, stabilizing the per-expert
+    load the cold/hot split is planned against.
+
+Both engines run the same request set twice: a warm-up pass populates the
+jit caches (the chunked engine has more stage shapes to compile), then the
+measured pass reports decode TBT percentiles and stage-token statistics.
+Emits JSON (stdout, plus ``--out FILE``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+
+def _requests(cfg, rng, n_short, n_long, max_len, l_out):
+    from repro.serving.request import Request
+    reqs = []
+    for i in range(n_short + n_long):
+        if i % (1 + n_short // max(n_long, 1)) == 0 and n_long > 0:
+            l_in = int(rng.integers(max_len // 2, max_len - l_out - 1))
+        else:
+            l_in = int(rng.integers(4, max(5, max_len // 16)))
+        reqs.append(Request(rid=i,
+                            prompt=rng.integers(
+                                1, cfg.vocab_size, size=l_in).tolist(),
+                            max_new_tokens=l_out))
+    return reqs
+
+
+def _drive(eng, reqs):
+    """Run a request set to completion; return (decode TBTs, stage tokens,
+    mixed-stage count)."""
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    tbts = [t for r in reqs for t in r.tbts()]
+    stage_tokens = [r.stage_tokens for r in eng.reports if r.stage_tokens]
+    mixed = sum(1 for r in eng.reports if r.is_mixed)
+    return tbts, stage_tokens, mixed
+
+
+def run(quick: bool = True, seed: int = 0) -> List[Dict]:
+    import copy
+
+    from repro.configs.base import MoEConfig, small_test_config
+    from repro.models.model import init_model
+    from repro.serving.engine import ServingEngine
+
+    max_slots = 4 if quick else 8
+    # quick sizing note: the monolithic prefill stage must dwarf the
+    # per-stage dispatch overhead for the TBT tail to show — prompts of
+    # several hundred tokens against a 64-token chunk do that even on CPU.
+    max_len = 512 if quick else 2048
+    l_out = 8 if quick else 64
+    chunk = 64 if quick else 256
+    n_short, n_long = (6, 2) if quick else (24, 8)
+    cfg = small_test_config(
+        "bench-chunk", family="moe", num_layers=2, d_model=32 if quick else 128,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32 if quick else 128))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    proto = _requests(cfg, rng, n_short, n_long, max_len, l_out)
+
+    rows = []
+    for mode, chunk_tokens in (("monolithic", None), ("chunked", chunk)):
+        eng = ServingEngine(cfg, params, max_slots=max_slots,
+                            max_len=max_len, use_duplex=True,
+                            prefill_chunk_tokens=chunk_tokens)
+        _drive(eng, copy.deepcopy(proto))            # warm-up: compile
+        mark = len(eng.reports)
+        tbts, stage_tokens, mixed = _drive(eng, copy.deepcopy(proto))
+        stage_tokens = [r.stage_tokens for r in eng.reports[mark:]
+                        if r.stage_tokens]
+        rows.append({
+            "mode": mode,
+            "prefill_chunk_tokens": chunk_tokens,
+            "max_len": max_len,
+            "n_requests": len(proto),
+            "mixed_stages": int(mixed),
+            "tbt_p50_ms": float(np.percentile(tbts, 50) * 1e3),
+            "tbt_p99_ms": float(np.percentile(tbts, 99) * 1e3),
+            "tbt_max_ms": float(np.max(tbts) * 1e3),
+            "stage_tokens_mean": float(np.mean(stage_tokens)),
+            "stage_tokens_max": int(np.max(stage_tokens)),
+            "stage_tokens_var": float(np.var(stage_tokens)),
+        })
+    mono, chk = rows
+    chk["tbt_p99_reduction_x"] = mono["tbt_p99_ms"] / max(chk["tbt_p99_ms"],
+                                                          1e-9)
+    chk["stage_token_var_reduction_x"] = (
+        mono["stage_tokens_var"] / max(chk["stage_tokens_var"], 1e-9))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON to this file")
+    args = ap.parse_args()
+    rows = run(quick=not args.full)
+    payload = {"benchmark": "prefill_chunked", "rows": rows}
+    text = json.dumps(payload, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

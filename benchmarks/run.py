@@ -26,6 +26,7 @@ FIGS = [
     "duplex_runtime",        # TPU-runtime counterpart (HLO-level wins)
     "decode_paged",          # paged vs dense streamed-KV (PR 1 tentpole)
     "moe_ragged",            # ragged vs padded MoE kernels (PR 2 tentpole)
+    "prefill_chunked",       # chunked vs monolithic prefill (PR 3 tentpole)
 ]
 
 

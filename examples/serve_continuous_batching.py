@@ -24,9 +24,12 @@ cfg = small_test_config(
 params = init_model(jax.random.PRNGKey(0), cfg)
 # kv_layout="paged": KV lives in a shared page pool, decode streams only the
 # live pages of the active slots (see ROADMAP.md "DESIGN: paged KV cache").
+# prefill_chunk_tokens=32: long prompts prefill across stages interleaved
+# with decode (ROADMAP.md "DESIGN: chunked prefill").
 engine = ServingEngine(cfg, params, max_slots=8, max_len=128,
                        use_duplex=True, max_prefill_seqs=2,
-                       kv_layout="paged", kv_page_size=32)
+                       kv_layout="paged", kv_page_size=32,
+                       prefill_chunk_tokens=32)
 
 rng = np.random.default_rng(0)
 requests = []

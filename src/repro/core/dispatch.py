@@ -84,6 +84,10 @@ def route_component(cost: OpCost, *, threshold: float = OPB_THRESHOLD,
 # QKV/proj and dense FFN GEMMs batch over all tokens; the paper keeps them on
 # xPU in every stage type (their Op/B rises with tokens and they fuse with
 # surrounding high-Op/B work).
+# NOTE: "attn_chunk" (chunked prefill, opb.attention_chunk_cost) is
+# deliberately NOT pinned: a whole-prompt chunk is compute-bound like
+# prefill, while a short chunk over a long written prefix is
+# bandwidth-bound like decode — the Op/B rule places it per stage.
 _ALWAYS_COMPUTE = {"qkv+proj", "lm_head"}
 # Components the paper pins to the bandwidth unit in its stage policy even
 # when instantaneous Op/B is borderline:

@@ -82,10 +82,14 @@ class DuplexDispatch(NamedTuple):
 
 def duplex_dispatch(router: RouterOut, m: MoEConfig, T: int, *, k_cold: int,
                     n_shards: int = 1, c_hot: Optional[int] = None,
-                    c_cold: Optional[int] = None) -> DuplexDispatch:
+                    c_cold: Optional[int] = None,
+                    token_valid=None) -> DuplexDispatch:
     """Rank experts by token count; build per-shard slot buffers where rank
     r < k_cold gets C_cold slots (GEMV path) and the rest get C_hot slots
-    (GEMM path). Capacities are per shard (hierarchical dispatch)."""
+    (GEMM path). Capacities are per shard (hierarchical dispatch).
+    ``token_valid`` (T,) masks padded serving rows out of slot assignment
+    (router.counts must have been computed with the same mask so the ragged
+    kernels' live counts match the dispatched slot prefixes)."""
     from repro.models.moe import group_positions, shard_dispatch
     E, k = m.num_experts, m.top_k
     n = n_shards
@@ -114,8 +118,15 @@ def duplex_dispatch(router: RouterOut, m: MoEConfig, T: int, *, k_cold: int,
 
     fe = router.expert_idx.reshape(n, Tl * k)
     fg = router.gates.reshape(n, Tl * k)
-    src, slot_gate = jax.vmap(
-        lambda e, g: shard_dispatch(e, g, Tl, E, caps, bases, n_slots))(fe, fg)
+    if token_valid is not None:
+        fv = jnp.repeat(token_valid.reshape(n, Tl), k, axis=1)
+        src, slot_gate = jax.vmap(
+            lambda e, g, v: shard_dispatch(e, g, Tl, E, caps, bases, n_slots,
+                                           valid=v))(fe, fg, fv)
+    else:
+        src, slot_gate = jax.vmap(
+            lambda e, g: shard_dispatch(e, g, Tl, E, caps, bases,
+                                        n_slots))(fe, fg)
     return DuplexDispatch(src, slot_gate, perm, counts,
                           k_cold, c_hot, c_cold)
 
@@ -142,7 +153,8 @@ def _expert_ffn(w, x):
 def duplex_moe_apply(params, cfg: ModelConfig, x, *, k_cold: int,
                      c_hot: Optional[int] = None, c_cold: Optional[int] = None,
                      use_kernels: bool = False, ragged: bool = False,
-                     c_block: int = 256, return_stats: bool = False):
+                     c_block: int = 256, return_stats: bool = False,
+                     token_valid=None):
     """Duplex MoE layer: hot experts through the grouped-GEMM path, cold
     experts through the gather-GEMV path. ``k_cold`` is static (planner).
 
@@ -168,9 +180,10 @@ def duplex_moe_apply(params, cfg: ModelConfig, x, *, k_cold: int,
     n, Tl, _ = xb.shape
     T = n * Tl
     x_flat = xb.reshape(T, shape[-1])
-    router = route(params, m, x_flat)
+    router = route(params, m, x_flat, valid=token_valid)
     disp = duplex_dispatch(router, m, T, k_cold=k_cold, n_shards=n,
-                           c_hot=c_hot, c_cold=c_cold)
+                           c_hot=c_hot, c_cold=c_cold,
+                           token_valid=token_valid)
     E = m.num_experts
     n_cold = disp.k_cold * disp.c_cold          # per-shard cold slots
 

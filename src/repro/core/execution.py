@@ -96,8 +96,11 @@ def shard_blocks(x):
     return xb, restore
 
 
-def moe_execute(params, cfg: ModelConfig, x, *, return_stats: bool = False):
-    """Route the MoE layer through the path the active plan selects."""
+def moe_execute(params, cfg: ModelConfig, x, *, return_stats: bool = False,
+                token_valid=None):
+    """Route the MoE layer through the path the active plan selects.
+    ``token_valid`` (flat-token bool mask) excludes padded serving rows from
+    routing counts and expert capacity on either path."""
     plan = current_plan()
     # the ragged kernels live on the count-threaded duplex path, so a
     # duplex plan with k_cold == 0 still routes there when ragged is on
@@ -109,7 +112,8 @@ def moe_execute(params, cfg: ModelConfig, x, *, return_stats: bool = False):
                                 use_kernels=plan.use_kernels,
                                 ragged=plan.moe_ragged,
                                 c_block=plan.moe_c_block,
-                                return_stats=return_stats)
+                                return_stats=return_stats,
+                                token_valid=token_valid)
     from repro.models.moe import moe_apply
     return moe_apply(params, cfg, x, capacity=plan.moe_capacity,
-                     return_stats=return_stats)
+                     return_stats=return_stats, token_valid=token_valid)

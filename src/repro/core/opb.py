@@ -37,24 +37,31 @@ class StageMix:
     """One continuous-batching stage.
 
     ``decode_ctx``  — context length (KV entries attended) per decode sequence.
-    ``prefill_len`` — prompt length per prefill sequence (empty => decoding-only
-                      stage; non-empty => mixed stage).
+    ``prefill_len`` — prompt length per whole-prompt prefill sequence.
+    ``chunk_spans`` — (start, end) per chunked-prefill sequence: this stage
+                      processes prompt positions [start, end), attending over
+                      the already-written [0, start) KV prefix plus the
+                      in-flight chunk (ROADMAP "DESIGN: chunked prefill").
+    Empty prefill_len and chunk_spans => decoding-only stage.
     """
     decode_ctx: Tuple[int, ...] = ()
     prefill_len: Tuple[int, ...] = ()
+    chunk_spans: Tuple[Tuple[int, int], ...] = ()
 
     @property
     def is_mixed(self) -> bool:
-        return len(self.prefill_len) > 0
+        return len(self.prefill_len) > 0 or len(self.chunk_spans) > 0
 
     @property
     def num_tokens(self) -> int:
         """Tokens passing through the FC/MoE layers this stage."""
-        return len(self.decode_ctx) + sum(self.prefill_len)
+        return (len(self.decode_ctx) + sum(self.prefill_len)
+                + sum(e - s for s, e in self.chunk_spans))
 
     @property
     def batch_size(self) -> int:
-        return len(self.decode_ctx) + len(self.prefill_len)
+        return (len(self.decode_ctx) + len(self.prefill_len)
+                + len(self.chunk_spans))
 
 
 def decoding_only(batch: int, ctx: int) -> StageMix:
@@ -134,6 +141,31 @@ def attention_prefill_cost(cfg: ModelConfig, s: int, *, window: int = 0,
     kv_bytes = BYTES * 2 * cfg.num_kv_heads * s * hd
     act = BYTES * h * s * hd * 2
     return OpCost("attn_prefill", flops, 0.0, kv_bytes + act)
+
+
+def attention_chunk_cost(cfg: ModelConfig, start: int, end: int, *,
+                         window: int = 0) -> OpCost:
+    """One chunked-prefill sequence: queries [start, end) against the written
+    [0, start) KV prefix plus the chunk's own causal K/V (banded when the
+    layer has a sliding window — only the in-window prefix is read).
+
+    Op/B interpolates between prefill (start=0: triangular, compute-bound)
+    and decode (end=start+1: one query streaming the whole prefix,
+    bandwidth-bound) — the knob the chunk budget turns.
+    """
+    hd = cfg.resolved_head_dim
+    h = cfg.num_heads
+    if window > 0:
+        pairs = sum(min(q + 1, window) for q in range(start, end))
+        kv_read = min(end, window + (end - start))
+    else:
+        # sum_{q=start}^{end-1} (q+1) causal pairs
+        pairs = (end * (end + 1) - start * (start + 1)) // 2
+        kv_read = end
+    flops = 2.0 * h * pairs * hd * 2
+    kv_bytes = BYTES * 2 * cfg.num_kv_heads * kv_read * hd
+    act = BYTES * h * (end - start) * hd * 2
+    return OpCost("attn_chunk", flops, 0.0, kv_bytes + act)
 
 
 def qkv_proj_cost(cfg: ModelConfig, tokens: int) -> OpCost:
@@ -261,8 +293,10 @@ def layer_stage_cost(cfg: ModelConfig, kind: LayerKind, mix: StageMix,
     if kind.mixer == MAMBA:
         if mix.decode_ctx:
             comps.append(mamba_decode_cost(cfg, len(mix.decode_ctx)))
-        if mix.prefill_len:
-            comps.append(mamba_prefill_cost(cfg, sum(mix.prefill_len)))
+        pre_tokens = sum(mix.prefill_len) + sum(e - s
+                                                for s, e in mix.chunk_spans)
+        if pre_tokens:
+            comps.append(mamba_prefill_cost(cfg, pre_tokens))
     else:
         comps.append(qkv_proj_cost(cfg, T))
         dec = OpCost("attn_decode", 0.0, 0.0, 0.0)
@@ -277,6 +311,13 @@ def layer_stage_cost(cfg: ModelConfig, kind: LayerKind, mix: StageMix,
                              "attn_prefill")
         if mix.prefill_len:
             comps.append(pre)
+        chk = OpCost("attn_chunk", 0.0, 0.0, 0.0)
+        for s0, s1 in mix.chunk_spans:
+            chk = chk.merged(attention_chunk_cost(cfg, s0, s1,
+                                                  window=window),
+                             "attn_chunk")
+        if mix.chunk_spans:
+            comps.append(chk)
         if kind.mixer == ATTN_CROSS:
             # decoder cross-attention reads encoder KV: decode ≈ attn_decode
             comps.append(dataclasses.replace(dec, name="cross_attn"))

@@ -13,6 +13,13 @@ Two variants:
     HBM, so per-stage traffic scales with the configured maximum S, not the
     live context. Kept as the reference/fallback path.
 
+  * ``chunked_prefill_attention_kernel`` — chunked-prefill queries (Sc per
+    sequence) against the paged pool: same scalar-prefetch block-table
+    addressing as the paged decode kernel, but each grid step scores a whole
+    chunk's queries against one page with a per-position causal mask, so one
+    pass covers the written prefix AND the in-flight chunk. Dead pages past
+    a sequence's total length are clamp-elided exactly like decode.
+
   * ``paged_decode_attention_kernel`` — paged layout: K/V live in a shared
     page pool (P, KV, page, hd) addressed through per-sequence block tables.
     Lengths and block tables are **scalar-prefetch** operands
@@ -261,3 +268,130 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, block_tables,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, block_tables, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill attention (paged prefix + in-flight chunk)
+# ---------------------------------------------------------------------------
+
+def _chunked_prefill_kernel(tot_ref, start_ref, bt_ref, q_ref, k_ref, v_ref,
+                            o_ref, acc_ref, m_ref, l_ref, *, softcap: float,
+                            scale: float, page: int, npages: int, qpk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    total = tot_ref[b]          # prefix + chunk length
+    start = start_ref[b]        # first chunk position
+    k_start = ki * page
+    # pages fully past the live region skip compute; their DMAs were already
+    # elided by the clamped index map.
+    needed = k_start < total
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (Sc*qpk, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (page, hd)
+        v = v_ref[0, 0]
+        rows = q.shape[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (rows, page)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        # row r holds chunk position r // qpk (heads innermost)
+        qpos = start + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // qpk
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        valid = jnp.logical_and(kpos <= qpos, kpos < total)
+        s = jnp.where(valid, s, NEG_INF)
+        m_old = m_ref[...]                              # (rows, 1)
+        m_new = jnp.maximum(m_old, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_old - m_new)
+        # a chunk-padding row can be fully masked within a live page (its
+        # qpos precedes every kpos here): gate p so exp(NEG_INF - NEG_INF)
+        # cannot alias to 1.
+        p = jnp.exp(s - m_new) * valid.astype(jnp.float32)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (rows, hd)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == npages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def chunked_prefill_attention_kernel(q, k_pages, v_pages, totals, starts,
+                                     block_tables, *, qpk: int = 1,
+                                     softcap: float = 0.0,
+                                     pages_bound: int | None = None,
+                                     interpret: bool = False):
+    """q: (B, KV, Sc*qpk, hd) — chunk queries with heads innermost (row
+    r = chunk position r // qpk); k_pages, v_pages: (P, KV, page, hd) shared
+    page pool; totals: (B,) prefix+chunk lengths (the chunk K/V must already
+    be written); starts: (B,) first chunk position; block_tables: (B, maxp)
+    page ids (unused columns hold the reserved null page 0).
+
+    The kv grid extent is ``pages_bound`` (default maxp); out-of-range steps
+    are clamped by the scalar-prefetch index map to the sequence's last live
+    page so their DMAs are elided — streamed prefix bytes scale with each
+    sequence's written context, not the table width. Rows padded past a
+    sequence's chunk length (and whole padded sequences, totals == 0) come
+    back zeroed. Returns (B, KV, Sc*qpk, hd)."""
+    B, KV, rows, hd = q.shape
+    P, KVp, page, hdp = k_pages.shape
+    assert (KVp, hdp) == (KV, hd), (k_pages.shape, q.shape)
+    maxp = block_tables.shape[1]
+    npages = maxp if pages_bound is None else pages_bound
+    assert 1 <= npages <= maxp, (npages, maxp)
+    scale = 1.0 / math.sqrt(hd)
+    totals = totals.astype(jnp.int32)
+    starts = starts.astype(jnp.int32)
+    block_tables = block_tables.astype(jnp.int32)
+    assert rows % qpk == 0, (rows, qpk)
+    kernel = functools.partial(_chunked_prefill_kernel, softcap=softcap,
+                               scale=scale, page=page, npages=npages,
+                               qpk=qpk)
+
+    def q_map(b, g, ki, tot, st, bt):
+        del ki, tot, st, bt
+        return (b, g, 0, 0)
+
+    def kv_map(b, g, ki, tot, st, bt):
+        del st
+        last = jnp.maximum((tot[b] + page - 1) // page - 1, 0)
+        kic = jnp.clip(ki, 0, last)
+        return (bt[b, kic], g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KV, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, hd), q_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((rows, hd), jnp.float32),   # acc
+            pltpu.VMEM((rows, 1), jnp.float32),    # m
+            pltpu.VMEM((rows, 1), jnp.float32),    # l
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(totals, starts, block_tables, q, k_pages, v_pages)

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.decode_attn import (decode_attention_kernel,
+from repro.kernels.decode_attn import (chunked_prefill_attention_kernel,
+                                       decode_attention_kernel,
                                        paged_decode_attention_kernel)
 from repro.kernels.flash_attn import flash_attention_kernel
 from repro.kernels.moe_gemm import moe_gemm_kernel, ragged_moe_gemm_kernel
@@ -111,6 +112,33 @@ def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables, *,
                                         pages_bound=pages_bound,
                                         interpret=interpret)
     return out.reshape(B, 1, H, hd)
+
+
+def chunked_prefill_attention(q, k_pages, v_pages, totals, starts,
+                              block_tables, *, softcap: float = 0.0,
+                              pages_bound: int | None = None,
+                              interpret: bool | None = None):
+    """Model layout: q (B, Sc, H, hd) chunk queries; page pools
+    (P, KV, page, hd); totals/starts (B,); block_tables (B, maxp) int32.
+    -> (B, Sc, H, hd).
+
+    The chunk's K/V must already be written into the pool (the model layer
+    writes before attending); queries then attend the block-table-addressed
+    prefix + chunk with a per-position causal mask. Dead pages past each
+    sequence's total length cost no HBM traffic (scalar-prefetch clamp)."""
+    B, Sc, H, hd = q.shape
+    KV = k_pages.shape[1]
+    qpk = H // KV
+    interpret = _interpret_default() if interpret is None else interpret
+    # (B, KV, Sc*qpk, hd), heads innermost so row r = chunk position r // qpk
+    qg = q.reshape(B, Sc, KV, qpk, hd).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(B, KV, Sc * qpk, hd)
+    out = chunked_prefill_attention_kernel(
+        qg, k_pages, v_pages, totals.astype(jnp.int32),
+        starts.astype(jnp.int32), block_tables, qpk=qpk, softcap=softcap,
+        pages_bound=pages_bound, interpret=interpret)
+    out = out.reshape(B, KV, Sc, qpk, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, Sc, H, hd)
 
 
 # ---------------------------------------------------------------------------

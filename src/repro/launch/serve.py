@@ -33,6 +33,11 @@ def main(argv=None) -> int:
                    help="paged = shared KV page pool; decode streams live "
                         "pages only (full-attention decoder archs)")
     p.add_argument("--kv-page-size", type=int, default=64)
+    p.add_argument("--prefill-chunk", type=int, default=None,
+                   help="chunked prefill token budget per stage (Sarathi-"
+                        "style): long prompts prefill across stages "
+                        "interleaved with decode; default = monolithic "
+                        "whole-prompt prefill")
     p.add_argument("--no-duplex", action="store_true")
     p.add_argument("--kernels", action="store_true",
                    help="lower through the Pallas kernels (interpret mode "
@@ -54,7 +59,8 @@ def main(argv=None) -> int:
                         kv_page_size=args.kv_page_size,
                         use_duplex=not args.no_duplex,
                         use_kernels=args.kernels,
-                        moe_ragged=not args.no_moe_ragged)
+                        moe_ragged=not args.no_moe_ragged,
+                        prefill_chunk_tokens=args.prefill_chunk)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -80,6 +86,11 @@ def main(argv=None) -> int:
         print(f"[serve] MoE streamed bytes={moe_b/1e6:.2f}MB "
               f"({'ragged' if eng.moe_ragged else 'padded'} kernels); "
               f"live/padded FLOPs={live/max(padded, 1):.2f}")
+    st = [r.stage_tokens for r in eng.reports]
+    mode = (f"chunked@{args.prefill_chunk}" if args.prefill_chunk
+            else "monolithic")
+    print(f"[serve] per-stage tokens ({mode} prefill): "
+          f"mean={np.mean(st):.1f} std={np.std(st):.1f} max={max(st)}")
     return 0
 
 

@@ -698,6 +698,142 @@ def paged_attention_decode_step(params, cfg: ModelConfig, x, cache, attn_ctx,
     return y, {"k_pages": k_pages, "v_pages": v_pages}
 
 
+# ---------------------------------------------------------------------------
+# Chunked prefill (ROADMAP "DESIGN: chunked prefill")
+#
+# A prefill *chunk* processes prompt positions [start, start+chunk_len) of a
+# sequence whose earlier positions are already in the decode cache: queries
+# attend over the written prefix PLUS the in-flight chunk. The chunk's K/V is
+# written into the cache first (positions are appended in order, so a
+# write-then-attend over absolute positions is exact), then attention runs
+# with the per-position causal mask. Restricted to full self-attention
+# layers — ring (ATTN_LOCAL) caches overwrite prefix slots mid-chunk and
+# mamba needs cross-chunk state carry (ROADMAP open items).
+# ---------------------------------------------------------------------------
+
+def chunk_attention(q, k_ctx, v_ctx, q_positions, kv_positions, kv_len, *,
+                    softcap: float = 0.0):
+    """Chunk queries against a gathered context (XLA fallback path).
+
+    q: (B, Sc, H, hd); k_ctx/v_ctx: (B, Skv, KV, hd); q_positions: (B, Sc)
+    absolute positions; kv_positions: (B, Skv) absolute positions of the
+    context entries (INT32_MAX = never written); kv_len: (B,) valid context
+    length *including* the chunk. Returns (B, Sc, H, hd).
+    """
+    B, Sc, H, hd = q.shape
+    KV = k_ctx.shape[2]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sc, KV, qpk, hd)
+    s = jnp.einsum("bqgph,bkgh->bgpqk", qg, k_ctx,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (kv_positions[:, None, :] <= q_positions[:, :, None])   # causal
+    valid &= (kv_positions < kv_len[:, None])[:, None, :]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (chunk padding) would softmax to uniform: zero them
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    out = jnp.einsum("bgpqk,bkgh->bqgph", p.astype(v_ctx.dtype), v_ctx)
+    return out.reshape(B, Sc, H, hd)
+
+
+def attention_chunk_step(params, cfg: ModelConfig, x, cache, chunk_ctx):
+    """Chunked prefill against a dense slot cache. x: (Bc, Sc, d);
+    chunk_ctx = {"slots": (Bc,) cache rows, "starts": (Bc,) first position,
+    "chunk_lens": (Bc,) live chunk tokens}. Rows padded up to the batch
+    bucket carry chunk_len 0; all of their writes (and any position past a
+    live row's chunk_len) are dropped via out-of-bounds scatter, so padding
+    can never touch another sequence's KV. Returns (y, new_cache)."""
+    Bc, Sc, _ = x.shape
+    slots = chunk_ctx["slots"].astype(jnp.int32)
+    starts = chunk_ctx["starts"].astype(jnp.int32)
+    clens = chunk_ctx["chunk_lens"].astype(jnp.int32)
+    positions = starts[:, None] + jnp.arange(Sc, dtype=jnp.int32)[None]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    nrows, Smax = cache["k"].shape[0], cache["k"].shape[1]
+    valid = jnp.arange(Sc, dtype=jnp.int32)[None] < clens[:, None]
+    row = jnp.where(valid, jnp.broadcast_to(slots[:, None], (Bc, Sc)), nrows)
+    idx = jnp.minimum(positions, Smax - 1)
+    pos_arr = cache["pos"].at[row, idx].set(positions, mode="drop")
+    total = starts + clens
+    slots_w = jnp.where(clens > 0, slots, nrows)
+    len_arr = cache["len"].at[slots_w].set(total, mode="drop")
+    if "k_scale" in cache:                     # int8 KV cache
+        k8, ks = quantize_kv(k)
+        v8, vs = quantize_kv(v)
+        k_cache = cache["k"].at[row, idx].set(k8, mode="drop")
+        v_cache = cache["v"].at[row, idx].set(v8, mode="drop")
+        ks_c = cache["k_scale"].at[row, idx].set(ks, mode="drop")
+        vs_c = cache["v_scale"].at[row, idx].set(vs, mode="drop")
+        # chunk attention runs on the dequantized gathered context (the
+        # decode half keeps the pure-int8 dot path)
+        kd = (k_cache[slots].astype(jnp.float32)
+              * ks_c[slots][..., None]).astype(q.dtype)
+        vd = (v_cache[slots].astype(jnp.float32)
+              * vs_c[slots][..., None]).astype(q.dtype)
+        new_cache = {"k": k_cache, "v": v_cache, "k_scale": ks_c,
+                     "v_scale": vs_c, "pos": pos_arr, "len": len_arr}
+    else:
+        k_cache = cache["k"].at[row, idx].set(
+            k.astype(cache["k"].dtype), mode="drop")
+        v_cache = cache["v"].at[row, idx].set(
+            v.astype(cache["v"].dtype), mode="drop")
+        kd, vd = k_cache[slots], v_cache[slots]
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos_arr,
+                     "len": len_arr}
+    out = chunk_attention(q, kd, vd, positions, pos_arr[slots], total,
+                          softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(Bc, Sc, -1),
+                   params["wo"]["kernel"])
+    return y, new_cache
+
+
+def paged_attention_chunk_step(params, cfg: ModelConfig, x, cache, chunk_ctx):
+    """Chunked prefill against the paged KV pool.
+
+    chunk_ctx = {"starts", "chunk_lens", "block_tables" (Bc, maxp)}. The
+    chunk's K/V is scattered into its block-table pages (dead positions and
+    padded rows write into the reserved null page 0), then queries attend
+    over the block-table-addressed prefix + chunk: the Pallas
+    ``chunked_prefill_attention`` kernel when the plan lowers through
+    kernels (scalar-prefetch block tables, dead-page DMAs elided), else the
+    live-page-gather XLA fallback. Returns (y, new_cache)."""
+    Bc, Sc, _ = x.shape
+    starts = chunk_ctx["starts"].astype(jnp.int32)
+    clens = chunk_ctx["chunk_lens"].astype(jnp.int32)
+    bt = chunk_ctx["block_tables"].astype(jnp.int32)     # (Bc, maxp)
+    positions = starts[:, None] + jnp.arange(Sc, dtype=jnp.int32)[None]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+    page = k_pages.shape[2]
+    maxp = bt.shape[1]
+    valid = jnp.arange(Sc, dtype=jnp.int32)[None] < clens[:, None]
+    col = jnp.minimum(positions // page, maxp - 1)
+    page_ids = jnp.where(valid, bt[jnp.arange(Bc)[:, None], col], 0)
+    offs = positions % page
+    k_pages = k_pages.at[page_ids, :, offs].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, :, offs].set(v.astype(v_pages.dtype))
+    total = starts + clens
+    from repro.core.execution import current_plan
+    if current_plan().use_kernels:
+        from repro.kernels.ops import chunked_prefill_attention
+        out = chunked_prefill_attention(q, k_pages, v_pages, total, starts,
+                                        bt, softcap=cfg.attn_logit_softcap)
+    else:
+        kd = paged_gather_kv(k_pages, bt)
+        vd = paged_gather_kv(v_pages, bt)
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(maxp * page, dtype=jnp.int32)[None],
+            (Bc, maxp * page))
+        out = chunk_attention(q, kd, vd, positions, kv_pos, total,
+                              softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(Bc, Sc, -1),
+                   params["wo"]["kernel"])
+    return y, {"k_pages": k_pages, "v_pages": v_pages}
+
+
 def write_prefill_cache(cache, k, v, true_len, *, window: int = 0):
     """Write prefill K/V (B,S,KV,hd) into a decode cache.
 

@@ -143,10 +143,28 @@ def block_init_cache(cfg: ModelConfig, kind: LayerKind, batch: int,
 
 
 def block_decode_step(params, cfg: ModelConfig, kind: LayerKind, x, cache,
-                      attn_ctx=None):
-    """Single-token decode. Returns (x, new_cache). ``attn_ctx`` carries the
-    stage's slot metadata ({"lengths", "block_tables"}) for paged caches."""
+                      attn_ctx=None, collect_counts: bool = False):
+    """Single-token decode. Returns (x, new_cache, moe_counts). ``attn_ctx``
+    carries the stage's slot metadata ({"lengths", "block_tables"} for paged
+    caches; optional "valid" (B,) live-row mask excluding padded/dead rows
+    from MoE routing counts and capacity). ``moe_counts`` is the layer's
+    per-expert routed-token counts ((E,) fp32) when ``collect_counts`` and
+    the block has an MoE ffn, else None — the serving engine feeds the
+    actual counts (not a synthetic draw) back to the Duplex planner."""
     h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    valid = attn_ctx.get("valid") if attn_ctx else None
+    counts = None
+
+    def _ffn(h_in):
+        nonlocal counts
+        if kind.ffn != MOE:
+            return ffn_apply(params["ffn"], h_in)
+        out, stats = moe_execute(params["ffn"], cfg, h_in, return_stats=True,
+                                 token_valid=valid)
+        if collect_counts:
+            counts = stats.counts.astype(jnp.float32)
+        return out
+
     if kind.mixer == MAMBA:
         mixer_out, new_mamba = mamba_decode_step(params["mixer"], cfg, h,
                                                  cache["mamba"])
@@ -163,11 +181,8 @@ def block_decode_step(params, cfg: ModelConfig, kind: LayerKind, x, cache,
         new_cache = dict(cache)
         new_cache.update(new_attn)
     if cfg.parallel_block and kind.ffn != NONE:
-        if kind.ffn == MOE:
-            ffn_out, _ = moe_execute(params["ffn"], cfg, h)
-        else:
-            ffn_out = ffn_apply(params["ffn"], h)
-        return x + mixer_out + ffn_out, new_cache
+        ffn_out = _ffn(h)
+        return x + mixer_out + ffn_out, new_cache, counts
     x = x + mixer_out
     if kind.mixer == ATTN_CROSS:
         h = rmsnorm(params["norm_cross"], x, cfg.norm_eps)
@@ -183,13 +198,10 @@ def block_decode_step(params, cfg: ModelConfig, kind: LayerKind, x, cache,
         x = x + jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1),
                            params["cross"]["wo"]["kernel"])
     if kind.ffn == NONE:
-        return x, new_cache
+        return x, new_cache, counts
     h = rmsnorm(params["norm2"], x, cfg.norm_eps)
-    if kind.ffn == MOE:
-        ffn_out, _ = moe_execute(params["ffn"], cfg, h)
-    else:
-        ffn_out = ffn_apply(params["ffn"], h)
-    return x + ffn_out, new_cache
+    ffn_out = _ffn(h)
+    return x + ffn_out, new_cache, counts
 
 
 def block_prefill(params, cfg: ModelConfig, kind: LayerKind, x, positions,
@@ -291,19 +303,131 @@ def segment_init_cache(cfg: ModelConfig, seg: Segment, batch: int,
 
 
 def segment_decode_step(params, cfg: ModelConfig, seg: Segment, x, cache,
-                        attn_ctx=None):
+                        attn_ctx=None, collect_counts: bool = False):
+    """With ``collect_counts`` also returns the segment's summed per-expert
+    MoE routing counts ((E,) fp32, zeros if the segment has no MoE)."""
+    E = cfg.moe.num_experts if (collect_counts and cfg.moe) else 0
+
     def body(x, inp):
         blk_params, blk_cache = inp
         new_caches = []
+        counts = jnp.zeros((E,), jnp.float32)
         for i, kind in enumerate(seg.pattern):
-            x, nc = block_decode_step(blk_params["blocks"][i], cfg, kind, x,
-                                      blk_cache["blocks"][i],
-                                      attn_ctx=attn_ctx)
+            x, nc, cnt = block_decode_step(blk_params["blocks"][i], cfg,
+                                           kind, x, blk_cache["blocks"][i],
+                                           attn_ctx=attn_ctx,
+                                           collect_counts=collect_counts)
             new_caches.append(nc)
-        return x, {"blocks": tuple(new_caches)}
+            if cnt is not None and E:
+                counts = counts + cnt
+        return x, ({"blocks": tuple(new_caches)}, counts)
 
-    x, new_cache = jax.lax.scan(body, x, (params, cache))
+    x, (new_cache, counts) = jax.lax.scan(body, x, (params, cache))
+    if collect_counts:
+        return x, new_cache, counts.sum(axis=0)
     return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Unified mixed stage: decode rows + prefill-chunk rows in one token stream
+# (ROADMAP "DESIGN: chunked prefill"). Attention runs per group (decode
+# kernel vs chunked-prefill path against the same cache); norms/FFN/MoE run
+# over the concatenated token stream, so the count-threaded ragged duplex
+# MoE covers BOTH halves of the stage.
+# ---------------------------------------------------------------------------
+
+def block_mixed_step(params, cfg: ModelConfig, kind: LayerKind, xd, xc,
+                     cache, attn_ctx, chunk_ctx,
+                     collect_counts: bool = False):
+    """One block of a unified mixed stage.
+
+    xd: (Bd, 1, d) decode rows; xc: (Bc, Sc, d) prefill-chunk rows. The
+    decode half writes/attends first, then the chunk half writes its span
+    into the same cache (disjoint slots; on the dense layout the decode
+    half's speculative write into a mid-prefill slot is overwritten by that
+    slot's chunk, which starts exactly at its length). Full self-attention
+    mixers only. Returns (xd, xc, new_cache, moe_counts)."""
+    from repro.models.attention import (attention_chunk_step,
+                                        attention_decode_step,
+                                        paged_attention_chunk_step,
+                                        paged_attention_decode_step)
+    if kind.mixer != ATTN:
+        raise ValueError(
+            f"unified mixed stages support full self-attention decoder "
+            f"layers only, got mixer={kind.mixer}")
+    Bd = xd.shape[0]
+    Bc, Sc, d = xc.shape
+    h_d = rmsnorm(params["norm1"], xd, cfg.norm_eps)
+    h_c = rmsnorm(params["norm1"], xc, cfg.norm_eps)
+    if "k_pages" in cache:
+        mixer_d, cache_d = paged_attention_decode_step(
+            params["mixer"], cfg, h_d, cache, attn_ctx)
+        mixer_c, new_cache = paged_attention_chunk_step(
+            params["mixer"], cfg, h_c, cache_d, chunk_ctx)
+    else:
+        mixer_d, upd = attention_decode_step(params["mixer"], cfg, h_d,
+                                             cache)
+        cache_d = dict(cache)
+        cache_d.update(upd)
+        mixer_c, new_cache = attention_chunk_step(params["mixer"], cfg, h_c,
+                                                  cache_d, chunk_ctx)
+    counts = None
+    if cfg.parallel_block and kind.ffn != NONE:
+        ffn_in_d, ffn_in_c = h_d, h_c
+        base_d, base_c = xd + mixer_d, xc + mixer_c
+    else:
+        xd = xd + mixer_d
+        xc = xc + mixer_c
+        if kind.ffn == NONE:
+            return xd, xc, new_cache, counts
+        ffn_in_d = rmsnorm(params["norm2"], xd, cfg.norm_eps)
+        ffn_in_c = rmsnorm(params["norm2"], xc, cfg.norm_eps)
+        base_d, base_c = xd, xc
+    flat = jnp.concatenate([ffn_in_d.reshape(Bd, d),
+                            ffn_in_c.reshape(Bc * Sc, d)], axis=0)
+    if kind.ffn == MOE:
+        dec_valid = attn_ctx.get("valid") if attn_ctx else None
+        if dec_valid is None:
+            dec_valid = jnp.ones((Bd,), bool)
+        chunk_valid = (jnp.arange(Sc, dtype=jnp.int32)[None]
+                       < chunk_ctx["chunk_lens"][:, None].astype(jnp.int32))
+        valid = jnp.concatenate([dec_valid, chunk_valid.reshape(-1)])
+        y, stats = moe_execute(params["ffn"], cfg, flat, return_stats=True,
+                               token_valid=valid)
+        if collect_counts:
+            counts = stats.counts.astype(jnp.float32)
+    else:
+        y = ffn_apply(params["ffn"], flat)
+    yd = y[:Bd].reshape(Bd, 1, d)
+    yc = y[Bd:].reshape(Bc, Sc, d)
+    return base_d + yd, base_c + yc, new_cache, counts
+
+
+def segment_mixed_step(params, cfg: ModelConfig, seg: Segment, xd, xc,
+                       cache, attn_ctx, chunk_ctx,
+                       collect_counts: bool = False):
+    """Scan the segment's stacked super-blocks over both row groups.
+    Returns (xd, xc, new_cache, counts) — counts summed over layers."""
+    E = cfg.moe.num_experts if (collect_counts and cfg.moe) else 0
+
+    def body(carry, inp):
+        xd, xc = carry
+        blk_params, blk_cache = inp
+        new_caches = []
+        counts = jnp.zeros((E,), jnp.float32)
+        for i, kind in enumerate(seg.pattern):
+            xd, xc, nc, cnt = block_mixed_step(
+                blk_params["blocks"][i], cfg, kind, xd, xc,
+                blk_cache["blocks"][i], attn_ctx, chunk_ctx,
+                collect_counts=collect_counts)
+            new_caches.append(nc)
+            if cnt is not None and E:
+                counts = counts + cnt
+        return (xd, xc), ({"blocks": tuple(new_caches)}, counts)
+
+    (xd, xc), (new_cache, counts) = jax.lax.scan(body, (xd, xc),
+                                                 (params, cache))
+    return xd, xc, new_cache, counts.sum(axis=0)
 
 
 def segment_prefill(params, cfg: ModelConfig, seg: Segment, x, positions,

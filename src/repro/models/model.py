@@ -5,6 +5,8 @@ Entry points:
   * ``loss_fn``       — next-token CE (+ MoE aux), vocab-sharding-friendly
   * ``prefill``       — forward + decode-cache population (serving)
   * ``decode_step``   — one-token step against the cache (serving)
+  * ``mixed_step``    — unified mixed stage: decode rows + prefill-chunk
+                        rows as one token stream (chunked prefill, serving)
   * ``init_cache`` / ``abstract_cache`` — concrete / ShapeDtypeStruct caches
 """
 from __future__ import annotations
@@ -240,18 +242,72 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], cache,
     return logits, new_cache
 
 
-def decode_step(params, cfg: ModelConfig, tokens, cache, attn_ctx=None):
+def decode_step(params, cfg: ModelConfig, tokens, cache, attn_ctx=None, *,
+                return_moe_counts: bool = False):
     """tokens: (B, 1) int32 -> (logits (B,1,V), new_cache). For a paged
     cache, ``attn_ctx`` = {"lengths": (B,), "block_tables": (B, maxp)} maps
-    the stage's active-slot batch rows onto the page pool."""
+    the stage's active-slot batch rows onto the page pool; an optional
+    "valid" (B,) mask excludes padded/dead rows from MoE routing. With
+    ``return_moe_counts`` additionally returns the summed per-expert routed
+    token counts ((E,) fp32) across MoE layers — the serving engine's actual
+    planner statistics."""
     x = embed_lookup(params["embed"], tokens).astype(cfg.dtype)
     x = logical_constraint(x, ("act_batch", None, "act_embed"))
     new_cache = []
+    counts = jnp.zeros((cfg.moe.num_experts,), jnp.float32) \
+        if (return_moe_counts and cfg.moe) else None
     for seg, seg_params, seg_cache in zip(cfg.segments, params["segments"],
                                           cache):
-        x, nc = segment_decode_step(seg_params, cfg, seg, x, seg_cache,
-                                    attn_ctx=attn_ctx)
+        if return_moe_counts:
+            x, nc, cnt = segment_decode_step(seg_params, cfg, seg, x,
+                                             seg_cache, attn_ctx=attn_ctx,
+                                             collect_counts=True)
+            if counts is not None:
+                counts = counts + cnt
+        else:
+            x, nc = segment_decode_step(seg_params, cfg, seg, x, seg_cache,
+                                        attn_ctx=attn_ctx)
         new_cache.append(nc)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = _lm_head(params, cfg, x)
+    if return_moe_counts:
+        return logits, new_cache, counts
     return logits, new_cache
+
+
+def mixed_step(params, cfg: ModelConfig, dec_tokens, chunk_tokens, cache, *,
+               attn_ctx=None, chunk_ctx):
+    """One unified mixed continuous-batching stage (ROADMAP "DESIGN: chunked
+    prefill"): decode rows and prefill-chunk rows run the decoder stack as a
+    single token stream — attention per group against the shared cache,
+    norms/FFN/MoE over the concatenation, so the ragged duplex MoE path
+    covers both halves.
+
+    dec_tokens: (Bd, 1) next decode token per row; chunk_tokens: (Bc, Sc)
+    chunk token slab. ``attn_ctx`` is the decode half's slot metadata (see
+    ``decode_step``); ``chunk_ctx`` = {"starts", "chunk_lens", plus dense:
+    "slots" cache rows / paged: "block_tables"}. Returns (dec_logits
+    (Bd,1,V), chunk_logits (Bc,1,V) at each chunk's last live position,
+    new_cache, moe_counts (E,) fp32 or None)."""
+    from repro.models.blocks import segment_mixed_step
+    xd = embed_lookup(params["embed"], dec_tokens).astype(cfg.dtype)
+    xc = embed_lookup(params["embed"], chunk_tokens).astype(cfg.dtype)
+    counts = jnp.zeros((cfg.moe.num_experts,), jnp.float32) \
+        if cfg.moe else None
+    new_cache = []
+    for seg, seg_params, seg_cache in zip(cfg.segments, params["segments"],
+                                          cache):
+        xd, xc, nc, cnt = segment_mixed_step(
+            seg_params, cfg, seg, xd, xc, seg_cache, attn_ctx, chunk_ctx,
+            collect_counts=cfg.moe is not None)
+        new_cache.append(nc)
+        if counts is not None:
+            counts = counts + cnt
+    xd = rmsnorm(params["final_norm"], xd, cfg.norm_eps)
+    xc = rmsnorm(params["final_norm"], xc, cfg.norm_eps)
+    dec_logits = _lm_head(params, cfg, xd)
+    Bc = xc.shape[0]
+    last = jnp.maximum(chunk_ctx["chunk_lens"].astype(jnp.int32) - 1, 0)
+    xc_last = xc[jnp.arange(Bc), last][:, None, :]        # (Bc, 1, d)
+    chunk_logits = _lm_head(params, cfg, xc_last)
+    return dec_logits, chunk_logits, new_cache, counts

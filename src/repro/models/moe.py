@@ -58,7 +58,13 @@ class RouterOut(NamedTuple):
     aux_loss: jnp.ndarray      # scalar load-balance loss
 
 
-def route(params, m: MoEConfig, x_flat: jnp.ndarray) -> RouterOut:
+def route(params, m: MoEConfig, x_flat: jnp.ndarray,
+          valid: Optional[jnp.ndarray] = None) -> RouterOut:
+    """``valid`` (T,) bool marks live tokens: serving stages carry padded
+    rows (bucketed batches, chunk padding, dead decode slots) whose garbage
+    routing must not pollute ``counts`` — the planner input AND the live
+    counts threaded into the ragged kernels — nor consume expert capacity
+    (dispatch skips them, see ``shard_dispatch``)."""
     T = x_flat.shape[0]
     logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
                         params["router"])               # (T, E) fp32
@@ -67,6 +73,9 @@ def route(params, m: MoEConfig, x_flat: jnp.ndarray) -> RouterOut:
     if m.norm_topk_probs:
         gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
     one_hot = jax.nn.one_hot(expert_idx, m.num_experts, dtype=jnp.float32)
+    if valid is not None:
+        gates = jnp.where(valid[:, None], gates, 0.0)
+        one_hot = one_hot * valid[:, None, None].astype(one_hot.dtype)
     counts = one_hot.sum(axis=(0, 1)).astype(jnp.int32)  # (E,)
     # Switch-style load-balance aux loss
     density = one_hot.mean(axis=(0, 1)) * m.num_experts
@@ -140,17 +149,26 @@ def grouped_expert_ffn(params, x_grouped):
 
 
 def shard_dispatch(expert_idx, gates, Tl: int, E: int, caps, bases,
-                   n_slots: int):
+                   n_slots: int, valid=None):
     """Per-shard slot assignment (vmapped over the shard dim).
 
     expert_idx/gates: (Tl*k,) one shard's flattened assignments; ``caps`` and
-    ``bases`` are (E,) per-expert slot capacities / base offsets. Returns
-    (src_token (n_slots,), slot_gate (n_slots,)).
+    ``bases`` are (E,) per-expert slot capacities / base offsets. ``valid``
+    (Tl*k,) bool marks live assignments: invalid ones get no slot AND do not
+    advance their expert's fill position, so a padded row can never displace
+    a live token (they are remapped to the nonexistent expert id E before
+    the position cumsum). Returns (src_token (n_slots,), slot_gate
+    (n_slots,)).
     """
     k = expert_idx.shape[0] // Tl
+    if valid is not None:
+        expert_idx = jnp.where(valid, expert_idx, E)
     pos = group_positions(expert_idx, E)
-    keep = pos < caps[expert_idx]
-    slot = jnp.where(keep, bases[expert_idx] + pos, n_slots)
+    keep = pos < caps[jnp.minimum(expert_idx, E - 1)]
+    if valid is not None:
+        keep = keep & valid
+    slot = jnp.where(keep, bases[jnp.minimum(expert_idx, E - 1)] + pos,
+                     n_slots)
     ft = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), k)
     src = jnp.full((n_slots + 1,), Tl, dtype=jnp.int32)
     src = src.at[slot].set(jnp.where(keep, ft, Tl))[:-1]
@@ -181,9 +199,10 @@ def combine_slots(y_slots, src, Tl: int):
 
 
 def moe_apply(params, cfg: ModelConfig, x, *, capacity: Optional[int] = None,
-              return_stats: bool = False):
+              return_stats: bool = False, token_valid=None):
     """x: (B, S, d) (or (T, d)). Grouped (paper-baseline xPU) path with
-    hierarchical (per-shard-tile) dispatch."""
+    hierarchical (per-shard-tile) dispatch. ``token_valid`` (T,) masks
+    padded serving rows out of routing counts and capacity (see ``route``)."""
     from repro.core.execution import shard_blocks
     m = cfg.moe
     E = m.num_experts
@@ -193,15 +212,22 @@ def moe_apply(params, cfg: ModelConfig, x, *, capacity: Optional[int] = None,
     n, Tl, d = xb.shape
     T = n * Tl
     x_flat = xb.reshape(T, d)
-    router = route(params, m, x_flat)
+    router = route(params, m, x_flat, valid=token_valid)
     C = (max(1, -(-capacity // n)) if capacity is not None
          else _capacity(Tl, m))
     caps = jnp.full((E,), C, jnp.int32)
     bases = (jnp.arange(E, dtype=jnp.int32) * C)
     fe = router.expert_idx.reshape(n, Tl * m.top_k)
     fg = router.gates.reshape(n, Tl * m.top_k)
-    src, slot_gate = jax.vmap(
-        lambda e, g: shard_dispatch(e, g, Tl, E, caps, bases, E * C))(fe, fg)
+    if token_valid is not None:
+        fv = jnp.repeat(token_valid.reshape(n, Tl), m.top_k, axis=1)
+        src, slot_gate = jax.vmap(
+            lambda e, g, v: shard_dispatch(e, g, Tl, E, caps, bases, E * C,
+                                           valid=v))(fe, fg, fv)
+    else:
+        src, slot_gate = jax.vmap(
+            lambda e, g: shard_dispatch(e, g, Tl, E, caps, bases,
+                                        E * C))(fe, fg)
     x_slots = gather_slots(xb, src)                       # (n, E*C, d)
     # keep the gather output (and therefore its transpose-gradient) sharded
     # with the token tiles: the bwd scatter-add otherwise all-reduces a

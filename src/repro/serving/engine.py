@@ -1,54 +1,66 @@
 """Continuous-batching serving engine with Duplex dispatch (C1–C3).
 
-Stage loop (paper §II-C / §V):
+Stage loop (paper §II-C / §V, ROADMAP "DESIGN: chunked prefill"):
 
-  * The scheduler forms a stage: decode sequences + (possibly) admitted
-    prefill sequences (mixed stage).
-  * C1: ``core/dispatch.plan_stage`` computes each component's Op/B and
-    selects its execution path; the engine renders that into ExecutionPlans
-    the jitted step functions are traced under.
-  * C2: MoE layers in decoding-heavy stages run the *duplex* implementation —
-    the partitioner's statically-bucketed ``k_cold`` picks how many experts go
-    through the bandwidth (gather-GEMV) path; which experts is decided
-    dynamically per layer from the actual router counts inside the step.
-    With kernels on, both paths are *ragged* (``moe_ragged``): live counts
-    ride into the scalar-prefetch kernels, dead token blocks cost no DMAs or
-    FLOPs, and the engine sizes ``c_hot`` to a bucketed live-block count so
-    the token grid is a stable jit key.
-  * C3: the mixed stage runs decode-sequence attention through the
-    bandwidth-path decode kernel and prefill attention through the
-    compute-path blockwise kernel. On Duplex hardware the two run
-    concurrently on Logic-PIM/xPU; on a TPU they time-share the chip — the
-    routing (which kernel, which layout) is the paper's mechanism, the
-    concurrency benefit is modeled in ``sim/`` (DESIGN.md §2).
+  * The scheduler forms a stage as one **unified token stream**: every
+    active request contributes one decode token, and prefill work arrives as
+    per-request *chunk spans* — with ``prefill_chunk_tokens`` set, a long
+    prompt prefills across several stages (at most that many prompt tokens
+    per stage) interleaved with everyone else's decode, so no prompt can
+    stall decode TBT and the per-stage MoE token count stays near a constant
+    target; ``prefill_chunk_tokens=None`` emits whole-prompt spans (legacy
+    monolithic behavior) through the same machinery.
+  * C1: ``core/dispatch.plan_stage`` computes each component's Op/B
+    (decode, whole-prompt prefill, and chunk components — a chunk
+    interpolates between the two as the budget shrinks) and selects its
+    execution path.
+  * C2: MoE layers run the *duplex* implementation over the WHOLE stage
+    stream — decode rows and chunk rows are concatenated before routing, so
+    with kernels on, the ragged scalar-prefetch path (live counts threaded,
+    dead token blocks cost no DMAs or FLOPs) covers both halves. The
+    planner's ``k_cold`` is chosen from an EMA of the *actual* per-expert
+    router counts returned by the previous stage's step function
+    (one-stage-stale statistics); padded batch rows are masked out of
+    routing counts and expert capacity.
+  * C3: decode rows run the bandwidth-path decode attention kernel; chunk
+    rows run ``chunked_prefill_attention`` — queries attend the
+    already-written KV prefix (paged: block-table-addressed, scalar-prefetch
+    Pallas kernel or live-page-gather XLA fallback; dense: slot-row gather)
+    plus the in-flight chunk. On Duplex hardware the two run concurrently on
+    Logic-PIM/xPU; on a TPU they time-share the chip.
 
-jit discipline: step functions are cached per static key (k_cold bucket,
-prefill shape bucket; paged decode additionally batch/live-page buckets) so
-continuous batching never recompiles in steady state.
+jit discipline: one mixed-stage step function per static key — (k_cold,
+MoE capacities, chunk-row bucket, chunk-length bucket; paged additionally
+decode-batch / live-page / chunk-page buckets) — so continuous batching
+never recompiles in steady state. There is no separate monolithic prefill
+function: an unchunked prompt is simply a whole-prompt chunk (a small
+legacy prefill path survives only for architectures the unified stream
+cannot serve yet — mamba / windowed / cross-attention mixers).
 
 KV layouts: ``kv_layout="dense"`` decodes over all slots against the
 ``max_slots × max_len`` cache (seed behavior); ``kv_layout="paged"`` decodes
 a gathered active-slot batch against a shared KV page pool, so per-stage HBM
 traffic scales with occupancy × live context (ROADMAP.md "DESIGN: paged KV
-cache").
+cache"). Chunk rows address the same cache: dense chunks write their span
+into their slot's row; paged chunks grow their block table (``ensure_len``)
+and write into their pages.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ATTN_LOCAL, MAMBA, ModelConfig
+from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, MOE, ModelConfig
 from repro.core.costmodel import DUPLEX
 from repro.core.dispatch import plan_stage
 from repro.core.execution import ExecutionPlan, execution_plan
 from repro.core.partition import DuplexPlanner, build_luts
-from repro.models.model import decode_step, init_cache, prefill
+from repro.models.model import decode_step, init_cache, mixed_step, prefill
 from repro.serving.kvmanager import KVManager
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import SamplingParams, sample
@@ -81,22 +93,26 @@ class StageReport:
     stage_index: int
     is_mixed: bool
     num_decode: int
-    num_prefill: int
+    num_prefill: int            # prefill-chunk rows this stage
     k_cold: int
     bandwidth_flop_fraction: float
     wall_time: float
-    # K+V bytes the decode attention path streams this stage (all attention
-    # layers). Dense: max_slots × max_len regardless of occupancy. Paged:
-    # live pages of the active slots only.
+    # K+V bytes the attention paths stream this stage (all attention
+    # layers). Dense: max_slots × max_len regardless of occupancy (+ chunk
+    # slot-row gathers). Paged: live pages of the active decode slots plus
+    # each chunk's prefix+chunk pages.
     kv_bytes_streamed: int = 0
-    # MoE weight+activation bytes the decode-stage expert kernels stream
-    # (all MoE layers, modeled from the stage's expected routing counts —
-    # the planner's seeded stream rescaled to the decode token count).
-    # Padded kernels execute the full capacity grid; ragged kernels execute
-    # live token blocks only.
+    # MoE weight+activation bytes the stage's expert kernels stream (all MoE
+    # layers, modeled from the stage's ACTUAL per-expert router counts as
+    # returned by the jitted step). Padded kernels execute the full capacity
+    # grid; ragged kernels execute live token blocks only.
     moe_bytes_streamed: int = 0
     moe_flops_live: int = 0       # FLOPs over live (routed) token blocks
     moe_flops_padded: int = 0     # FLOPs the capacity-padded path would burn
+    # live prefill-chunk tokens this stage / total live tokens through the
+    # MoE stream (decode + chunk) — the quantity chunking stabilizes
+    chunk_tokens: int = 0
+    stage_tokens: int = 0
 
 
 class ServingEngine:
@@ -108,6 +124,7 @@ class ServingEngine:
                  kv_page_size: int = 64, kv_num_pages: Optional[int] = None,
                  sampling: SamplingParams = SamplingParams(),
                  max_prefill_seqs: int = 4, max_prefill_tokens: int = 8192,
+                 prefill_chunk_tokens: Optional[int] = None,
                  prefill_len_buckets: Tuple[int, ...] = (64, 128, 256, 512,
                                                          1024, 2048, 4096),
                  seed: int = 0):
@@ -126,9 +143,22 @@ class ServingEngine:
             raise NotImplementedError(
                 "preemption gathers dense slot rows; paged eviction is "
                 "page-table surgery and not implemented yet")
+        # the unified token-stream stage covers full self-attention decoder
+        # stacks; mamba needs cross-chunk state carry and ring (ATTN_LOCAL)
+        # caches overwrite prefix slots mid-chunk (ROADMAP open items) —
+        # those archs keep the legacy monolithic prefill path.
+        self._unified = all(kind.mixer == ATTN
+                            for seg in cfg.segments for kind in seg.pattern)
+        if prefill_chunk_tokens is not None and not self._unified:
+            raise NotImplementedError(
+                "chunked prefill needs a full self-attention decoder stack "
+                "(mamba/windowed/cross mixers still prefill monolithically)")
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         self.scheduler = ContinuousBatchingScheduler(
             max_prefill_seqs=max_prefill_seqs,
-            max_prefill_tokens=max_prefill_tokens)
+            max_prefill_tokens=max_prefill_tokens,
+            prefill_chunk_tokens=prefill_chunk_tokens,
+            max_prefill_target=max_len)
         self.sampling = sampling
         self.use_duplex = use_duplex and cfg.moe is not None
         self.use_kernels = use_kernels
@@ -136,9 +166,17 @@ class ServingEngine:
         # (the XLA grouped fallback is inherently capacity-padded).
         self.moe_ragged = bool(moe_ragged and use_kernels and self.use_duplex)
         self.moe_c_block = moe_c_block
-        self.prefill_len_buckets = tuple(
-            b for b in prefill_len_buckets if b <= max_len) or (max_len,)
+        # legacy monolithic prefill buckets (non-unified archs only);
+        # max_len is always a bucket so no prompt within KV capacity is
+        # silently truncated.
+        self.prefill_len_buckets = tuple(sorted(
+            {b for b in prefill_len_buckets if b < max_len} | {max_len}))
         self.seq_buckets = tuple(sorted({1, 2, max_prefill_seqs}))
+        # chunk-length jit buckets: powers of two up to the chunk budget
+        # (or max_len for whole-prompt spans)
+        self.chunk_len_buckets = _pow2_buckets(
+            min(prefill_chunk_tokens, max_len) if prefill_chunk_tokens
+            else max_len)
         self.planner: Optional[DuplexPlanner] = None
         if self.use_duplex:
             # the xPU LUT models what the hot kernel executes: ragged →
@@ -149,11 +187,18 @@ class ServingEngine:
                 hot_kw = dict(hot_block=cb)
             else:
                 hot_kw = dict(hot_block=cb, hot_capacity=ch)
+            max_stage_tokens = (max(4 * max_slots, 512)
+                                + max_prefill_seqs * self.chunk_len_buckets[-1])
             lut_x, lut_p = build_luts(DUPLEX, cfg.d_model,
                                       cfg.moe.d_ff_expert,
-                                      max_tokens=max(4 * max_slots, 512),
+                                      max_tokens=max_stage_tokens,
                                       **hot_kw)
             self.planner = DuplexPlanner(lut_x, lut_p, cfg.moe.num_experts)
+        # EMA of per-MoE-layer per-expert router counts, harvested from each
+        # stage's jitted step (ROADMAP open item: actual counts, not a
+        # synthetic multinomial draw, drive the planner + traffic model).
+        self._ema_counts: Optional[np.ndarray] = None
+        self._count_ema_decay = 0.5
         # decode-attention streamed-bytes accounting (K+V only; mamba mixers
         # hold O(1) state and cross-attn KV is written once, both excluded).
         # Dense streams each layer's whole buffer — max_len for full
@@ -177,7 +222,6 @@ class ServingEngine:
                                           dense_tokens_per_slot)
         # MoE streamed-bytes accounting: layer count + GEMM matrices per
         # expert FFN (3 SwiGLU / 2 classic) for the traffic model.
-        from repro.configs.base import MOE
         self._moe_layers = sum(seg.repeats
                                for seg in cfg.segments
                                for kind in seg.pattern if kind.ffn == MOE)
@@ -186,11 +230,12 @@ class ServingEngine:
         self._key = jax.random.PRNGKey(seed)
         self._tokens = np.zeros((max_slots,), np.int32)   # last token per slot
         self._slot_req: Dict[int, Request] = {}
-        self._decode_fns: Dict[int, callable] = {}
-        self._paged_decode_fns: Dict[Tuple[int, int, int], callable] = {}
-        self._prefill_fns: Dict[Tuple[int, int], callable] = {}
-        # paged decode jit keys: (batch bucket, live-page bucket) — powers of
-        # two so steady-state continuous batching never recompiles.
+        self._decode_fns: Dict[Tuple, callable] = {}
+        self._paged_decode_fns: Dict[Tuple, callable] = {}
+        self._mixed_fns: Dict[Tuple, callable] = {}
+        self._legacy_prefill_fns: Dict[Tuple[int, int], callable] = {}
+        # paged jit keys: (batch bucket, live-page bucket) — powers of two
+        # so steady-state continuous batching never recompiles.
         self.decode_bs_buckets = _pow2_buckets(max_slots)
         if self.paged:
             self.pages_buckets = _pow2_buckets(self.kv.max_pages_per_slot)
@@ -199,11 +244,11 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ jits
     def _moe_caps(self, T: int, k_cold: int) -> Tuple[int, int, int]:
-        """(c_hot, c_cold, c_block) for a decode stage of T (already
-        bucketed) tokens. The hot capacity snaps up to a power-of-two count
-        of c_block-sized token blocks — the stage's *live-block bucket* —
-        so the ragged kernel's token-block grid is a stable jit key and
-        steady state never recompiles."""
+        """(c_hot, c_cold, c_block) for a stage of T (already bucketed,
+        padding included) tokens. The hot capacity snaps up to a power-of-two
+        count of c_block-sized token blocks — the stage's *live-block
+        bucket* — so the ragged kernel's token-block grid is a stable jit
+        key and steady state never recompiles."""
         from repro.core.duplex_moe import default_capacities
         if self.cfg.moe is None:
             return 0, 0, self.moe_c_block
@@ -232,11 +277,13 @@ class ServingEngine:
             plan = self._moe_plan(k_cold, c_hot, c_cold, c_block)
 
             @jax.jit
-            def fn(params, tokens, cache, key):
+            def fn(params, tokens, valid, cache, key):
                 with execution_plan(plan):
-                    logits, new_cache = decode_step(params, cfg, tokens, cache)
+                    logits, new_cache, counts = decode_step(
+                        params, cfg, tokens, cache,
+                        attn_ctx={"valid": valid}, return_moe_counts=True)
                 nxt = sample(logits, key, self.sampling)
-                return nxt, new_cache
+                return nxt, new_cache, counts
 
             self._decode_fns[key] = fn
         return self._decode_fns[key]
@@ -255,26 +302,75 @@ class ServingEngine:
             @jax.jit
             def fn(params, tokens, cache, lengths, block_tables, key_):
                 with execution_plan(plan):
-                    logits, new_cache = decode_step(
+                    logits, new_cache, counts = decode_step(
                         params, cfg, tokens, cache,
                         attn_ctx={"lengths": lengths,
-                                  "block_tables": block_tables})
+                                  "block_tables": block_tables,
+                                  "valid": lengths > 0},
+                        return_moe_counts=True)
                 nxt = sample(logits, key_, self.sampling)
-                return nxt, new_cache
+                return nxt, new_cache, counts
 
             self._paged_decode_fns[key] = fn
         return self._paged_decode_fns[key]
 
-    def _prefill_fn(self, n_seqs: int, seq_len: int):
+    def _mixed_fn(self, k_cold: int, c_hot: int, c_cold: int, c_block: int,
+                  n_chunks: int, chunk_len: int, n_batch: int = 0,
+                  n_pages: int = 0, n_cpages: int = 0):
+        """The unified mixed-stage step: decode rows + chunk rows through
+        one traced model call (``models/model.py::mixed_step``) whose MoE
+        layers see the concatenated token stream. Static key = (k_cold,
+        capacities, chunk-row bucket, chunk-length bucket; paged: + decode
+        batch / live-page / chunk-page buckets)."""
+        key = (k_cold, c_hot, c_cold, n_chunks, chunk_len,
+               n_batch, n_pages, n_cpages)
+        if key not in self._mixed_fns:
+            cfg = self.cfg
+            plan = self._moe_plan(k_cold, c_hot, c_cold, c_block)
+
+            if self.paged:
+                @jax.jit
+                def fn(params, dec_tokens, dec_lengths, dec_bt, chunk_tokens,
+                       starts, clens, chunk_bt, cache, key_):
+                    with execution_plan(plan):
+                        dl, cl, new_cache, counts = mixed_step(
+                            params, cfg, dec_tokens, chunk_tokens, cache,
+                            attn_ctx={"lengths": dec_lengths,
+                                      "block_tables": dec_bt,
+                                      "valid": dec_lengths > 0},
+                            chunk_ctx={"starts": starts,
+                                       "chunk_lens": clens,
+                                       "block_tables": chunk_bt})
+                    kd, kc = jax.random.split(key_)
+                    return (sample(dl, kd, self.sampling),
+                            sample(cl, kc, self.sampling), new_cache, counts)
+            else:
+                @jax.jit
+                def fn(params, dec_tokens, dec_valid, chunk_tokens, slots,
+                       starts, clens, cache, key_):
+                    with execution_plan(plan):
+                        dl, cl, new_cache, counts = mixed_step(
+                            params, cfg, dec_tokens, chunk_tokens, cache,
+                            attn_ctx={"valid": dec_valid},
+                            chunk_ctx={"slots": slots, "starts": starts,
+                                       "chunk_lens": clens})
+                    kd, kc = jax.random.split(key_)
+                    return (sample(dl, kd, self.sampling),
+                            sample(cl, kc, self.sampling), new_cache, counts)
+
+            self._mixed_fns[key] = fn
+        return self._mixed_fns[key]
+
+    def _legacy_prefill_fn(self, n_seqs: int, seq_len: int):
+        """Monolithic whole-prompt prefill into a fresh local cache —
+        retained only for archs the unified stream cannot serve (mamba /
+        windowed / cross mixers); full-attention stacks never come here."""
         key = (n_seqs, seq_len)
-        if key not in self._prefill_fns:
+        if key not in self._legacy_prefill_fns:
             cfg = self.cfg
             max_len = self.kv.max_len
-            # mixed-stage prefill is the high-Op/B side: grouped MoE +
-            # blockwise (compute-path) attention, per C1/C3.
             plan = ExecutionPlan(moe_impl="grouped",
                                  use_kernels=self.use_kernels)
-
             kv_quant = self.kv.kv_quant
 
             @jax.jit
@@ -288,17 +384,51 @@ class ServingEngine:
                 nxt = sample(logits, skey, self.sampling)
                 return nxt, new_cache
 
-            self._prefill_fns[key] = fn
-        return self._prefill_fns[key]
+            self._legacy_prefill_fns[key] = fn
+        return self._legacy_prefill_fns[key]
 
     # ------------------------------------------------------------------ api
     def submit(self, req: Request) -> None:
+        if req.l_in >= self.kv.max_len:
+            raise ValueError(
+                f"prompt of {req.l_in} tokens cannot fit max_len="
+                f"{self.kv.max_len} KV (plus at least one generated token); "
+                f"raise max_len — prompts are never silently truncated")
         self.scheduler.submit(req)
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
         return k
 
+    # ---------------------------------------------------------------- counts
+    def _expected_counts(self, T: int) -> np.ndarray:
+        """Per-expert counts the planner should assume for a stage of T live
+        tokens: the EMA of actual router counts rescaled to T (uniform
+        expectation until the first stage reports back)."""
+        m = self.cfg.moe
+        total = float(T * m.top_k)
+        if self._ema_counts is None or self._ema_counts.sum() <= 0:
+            return np.full(m.num_experts, total / m.num_experts)
+        return self._ema_counts * (total / self._ema_counts.sum())
+
+    def _update_counts(self, counts_sum) -> Optional[np.ndarray]:
+        """Fold one stage's summed-over-layers router counts into the EMA;
+        returns the per-layer count vector for this stage's traffic model."""
+        if counts_sum is None:
+            return None
+        c = np.asarray(counts_sum, np.float64)
+        if self._moe_layers:
+            c = c / self._moe_layers
+        if c.sum() <= 0:
+            return c
+        if self._ema_counts is None:
+            self._ema_counts = c
+        else:
+            d = self._count_ema_decay
+            self._ema_counts = d * self._ema_counts + (1.0 - d) * c
+        return c
+
+    # ------------------------------------------------------------ preemption
     def _maybe_preempt(self) -> None:
         """SVIII-C: if a fresh request is starving with zero free slots,
         evict a running request (migrate its KV to host, or drop it for
@@ -332,48 +462,12 @@ class ServingEngine:
         self._tokens[slot] = req.output[-1]
         req.state = RequestState.DECODE
 
-    def step(self, now: Optional[float] = None) -> Optional[StageReport]:
-        """Run one continuous-batching stage. Returns None when idle."""
-        t0 = time.monotonic()
-        self._maybe_preempt()
-        free = self.kv.free_slots
+    # ---------------------------------------------------------------- stages
+    def _run_decode_only(self, decision: StageDecision, k_cold: int,
+                         tnow: float):
+        """Decoding-only stage (the dominant kind). Returns
+        (kv_bytes, counts_sum, moe_caps)."""
         if self.paged:
-            # admission backpressure for oversubscribed pools: only admit
-            # when the pool can still hold one worst-case prompt plus a page
-            # of growth per running sequence. Running sequences can still
-            # exhaust a badly undersized pool (ensure_len raises — there is
-            # no paged preemption yet), but admissions won't cause it.
-            reserve = (len(self.scheduler.running) +
-                       self.kv.max_pages_per_slot)
-            if self.kv.free_pages < reserve:
-                free = 0
-        decision = self.scheduler.next_stage(free)
-        if decision is None:
-            return None
-        mix = decision.mix()
-        k_cold = 0
-        if self.use_duplex and mix.num_tokens > 0:
-            # planner input: expected per-expert counts for this stage's token
-            # count (uniform routing, paper §VI); the jitted step re-ranks
-            # experts from *actual* counts — only the width is static.
-            m = self.cfg.moe
-            rng = np.random.default_rng(self._stage_idx)
-            counts = rng.multinomial(mix.num_tokens * m.top_k,
-                                     np.full(m.num_experts,
-                                             1.0 / m.num_experts))
-            k_cold = self.planner.k_cold_static(counts)
-        splan = plan_stage(self.cfg, mix) if mix.num_tokens else None
-
-        # ---- decode half (bandwidth path). Dense: runs over all slots —
-        # outputs of inactive slots are discarded, their cache is overwritten
-        # on reuse, and their dead KV is streamed every stage. Paged: runs
-        # over a gathered active-slot batch bucket; the kv grid is trimmed to
-        # the stage's bucketed max live pages, so HBM traffic scales with
-        # occupancy × live context instead of max_slots × max_len.
-        kv_bytes = 0
-        decode_tokens = 0              # rows the decode step pushes through MoE
-        moe_caps = None
-        if decision.decoding and self.paged:
             page = self.kv.page_size
             slots = [r.slot for r in decision.decoding]
             live_pages = []                # per-slot pages after this write
@@ -385,101 +479,251 @@ class ServingEngine:
             nb = _bucket(len(slots), self.decode_bs_buckets)
             mp = _bucket(max(live_pages), self.pages_buckets)
             tokens = np.zeros((nb, 1), np.int32)
-            lengths = np.zeros((nb,), np.int32)   # pad rows: len 0 -> null page
+            lengths = np.zeros((nb,), np.int32)  # pad rows: len 0 -> null page
             bt = np.zeros((nb, mp), np.int32)
             for i, s in enumerate(slots):
                 tokens[i, 0] = self._tokens[s]
                 lengths[i] = self.kv.lens[s]
                 bt[i] = self.kv.block_tables[s, :mp]
-            decode_tokens = nb
             moe_caps = self._moe_caps(nb, k_cold)
             fn = self._paged_decode_fn(k_cold, *moe_caps, nb, mp)
-            nxt, self.kv.cache = fn(self.params, jnp.asarray(tokens),
-                                    self.kv.cache, jnp.asarray(lengths),
-                                    jnp.asarray(bt), self._next_key())
+            nxt, self.kv.cache, counts = fn(
+                self.params, jnp.asarray(tokens), self.kv.cache,
+                jnp.asarray(lengths), jnp.asarray(bt), self._next_key())
             nxt = np.asarray(nxt)
-            tnow = now if now is not None else time.monotonic()
             for i, r in enumerate(decision.decoding):
                 tok = int(nxt[i])
                 self._tokens[r.slot] = tok
                 r.record_token(tok, tnow)
             self.kv.lens[np.asarray(slots)] += 1
-        elif decision.decoding:
-            kv_bytes = self._dense_kv_bytes_per_stage
-            # dense decode runs over ALL slots (inactive rows discarded), so
-            # the MoE layers see max_slots tokens regardless of occupancy.
-            decode_tokens = self.kv.max_slots
-            moe_caps = self._moe_caps(decode_tokens, k_cold)
-            fn = self._decode_fn(k_cold, *moe_caps)
-            toks = jnp.asarray(self._tokens)[:, None]
-            nxt, self.kv.cache = fn(self.params, toks, self.kv.cache,
-                                    self._next_key())
-            nxt = np.asarray(nxt)
-            tnow = now if now is not None else time.monotonic()
-            for r in decision.decoding:
-                tok = int(nxt[r.slot])
+            return kv_bytes, counts, moe_caps
+        # dense: runs over ALL slots — outputs of inactive slots are
+        # discarded (and masked out of MoE routing), their cache is
+        # overwritten on reuse, and their dead KV is streamed every stage.
+        kv_bytes = self._dense_kv_bytes_per_stage
+        valid = np.zeros((self.kv.max_slots,), bool)
+        for r in decision.decoding:
+            valid[r.slot] = True
+        moe_caps = self._moe_caps(self.kv.max_slots, k_cold)
+        fn = self._decode_fn(k_cold, *moe_caps)
+        toks = jnp.asarray(self._tokens)[:, None]
+        nxt, self.kv.cache, counts = fn(self.params, toks,
+                                        jnp.asarray(valid), self.kv.cache,
+                                        self._next_key())
+        nxt = np.asarray(nxt)
+        for r in decision.decoding:
+            tok = int(nxt[r.slot])
+            self._tokens[r.slot] = tok
+            r.record_token(tok, tnow)
+        return kv_bytes, counts, moe_caps
+
+    def _run_mixed(self, decision: StageDecision, k_cold: int, tnow: float):
+        """Unified mixed stage: decode rows + prefill-chunk rows through one
+        jitted step; the final chunk of a prompt samples its first token.
+        Returns (kv_bytes, counts_sum, moe_caps)."""
+        chunks = decision.chunks
+        for c in chunks:                       # first chunk claims the slot
+            if c.req.slot < 0:
+                s = self.kv.allocate()
+                c.req.slot = s
+                self._slot_req[s] = c.req
+        nc_b = _bucket(len(chunks), self.seq_buckets)
+        sc_b = _bucket(max(c.tokens for c in chunks), self.chunk_len_buckets)
+        ctokens = np.zeros((nc_b, sc_b), np.int32)
+        starts = np.zeros((nc_b,), np.int32)
+        clens = np.zeros((nc_b,), np.int32)
+        for i, c in enumerate(chunks):
+            seq = (list(c.req.prompt) + list(c.req.output))[c.start:c.end]
+            ctokens[i, :len(seq)] = seq
+            starts[i] = c.start
+            clens[i] = c.tokens
+        if self.paged:
+            page = self.kv.page_size
+            dslots = [r.slot for r in decision.decoding]
+            live_pages = [1]
+            for s in dslots:
+                target = min(int(self.kv.lens[s]) + 1, self.kv.max_len)
+                self.kv.ensure_len(s, target)
+                live_pages.append(-(-target // page))
+            nb = _bucket(max(len(dslots), 1), self.decode_bs_buckets)
+            mp = _bucket(max(live_pages), self.pages_buckets)
+            dtokens = np.zeros((nb, 1), np.int32)
+            lengths = np.zeros((nb,), np.int32)
+            bt = np.zeros((nb, mp), np.int32)
+            for i, s in enumerate(dslots):
+                dtokens[i, 0] = self._tokens[s]
+                lengths[i] = self.kv.lens[s]
+                bt[i] = self.kv.block_tables[s, :mp]
+            cpages = []
+            for c in chunks:
+                self.kv.ensure_len(c.req.slot, c.end)
+                cpages.append(-(-c.end // page))
+            mpc = _bucket(max(cpages), self.pages_buckets)
+            bt_c = np.zeros((nc_b, mpc), np.int32)
+            for i, c in enumerate(chunks):
+                bt_c[i] = self.kv.block_tables[c.req.slot, :mpc]
+            kv_bytes = ((sum(live_pages[1:]) + sum(cpages)) * page
+                        * self._kv_bytes_per_token)
+            moe_caps = self._moe_caps(nb + nc_b * sc_b, k_cold)
+            fn = self._mixed_fn(k_cold, *moe_caps, nc_b, sc_b, nb, mp, mpc)
+            dn, cn, self.kv.cache, counts = fn(
+                self.params, jnp.asarray(dtokens), jnp.asarray(lengths),
+                jnp.asarray(bt), jnp.asarray(ctokens), jnp.asarray(starts),
+                jnp.asarray(clens), jnp.asarray(bt_c), self.kv.cache,
+                self._next_key())
+            dn = np.asarray(dn)
+            for i, r in enumerate(decision.decoding):
+                tok = int(dn[i])
                 self._tokens[r.slot] = tok
                 r.record_token(tok, tnow)
-
-        # ---- prefill half (compute path), mixed stages only
-        tnow0 = now if now is not None else time.monotonic()
-        restored = [r for r in decision.admitted
-                    if r.saved_cache is not None]
-        fresh = [r for r in decision.admitted if r.saved_cache is None]
-        for r in restored:                       # migrated-back requests
-            self._admit_restored(r, tnow0)
-        if fresh:
-            n_b = _bucket(len(fresh), self.seq_buckets)
-            # recompute-preempted requests re-prefill prompt + generated
-            seqs = [list(r.prompt) + list(r.output) for r in fresh]
-            max_l = max(len(sq) for sq in seqs)
-            l_b = _bucket(max_l, self.prefill_len_buckets)
-            tokens = np.zeros((n_b, l_b), np.int32)
-            true_len = np.zeros((n_b,), np.int32)
-            for i, sq in enumerate(seqs):
-                tokens[i, :len(sq)] = sq[:l_b]
-                true_len[i] = min(len(sq), l_b)
-            fn = self._prefill_fn(n_b, l_b)
-            nxt, local_cache = fn(self.params, jnp.asarray(tokens),
-                                  jnp.asarray(true_len), self._next_key())
-            nxt = np.asarray(nxt)
-            slots = [self.kv.allocate() for _ in fresh]
-            take = jnp.asarray(range(len(slots)), dtype=jnp.int32)
-            local = [jax.tree_util.tree_map(lambda a: a[:, take], seg)
-                     for seg in local_cache]
-            if self.paged:
-                self.kv.scatter_paged(local, slots,
-                                      [int(t) for t in true_len[:len(slots)]])
-            else:
-                self.kv.scatter(local, slots)
-            tnow = now if now is not None else time.monotonic()
-            for i, (r, s) in enumerate(zip(fresh, slots)):
-                r.slot = s
-                self._slot_req[s] = r
-                tok = int(nxt[i])
-                self._tokens[s] = tok
+            if dslots:
+                self.kv.lens[np.asarray(dslots)] += 1
+            for c in chunks:
+                self.kv.lens[c.req.slot] = c.end
+        else:
+            cslots = np.zeros((nc_b,), np.int32)   # dense chunk -> cache row
+            for i, c in enumerate(chunks):
+                cslots[i] = c.req.slot
+            valid = np.zeros((self.kv.max_slots,), bool)
+            for r in decision.decoding:
+                valid[r.slot] = True
+            # chunk rows gather + stream their slot's full cache row
+            kv_bytes = (self._dense_kv_bytes_per_stage
+                        + len(chunks) * self.kv.max_len
+                        * self._kv_bytes_per_token)
+            moe_caps = self._moe_caps(self.kv.max_slots + nc_b * sc_b, k_cold)
+            fn = self._mixed_fn(k_cold, *moe_caps, nc_b, sc_b)
+            dtokens = jnp.asarray(self._tokens)[:, None]
+            dn, cn, self.kv.cache, counts = fn(
+                self.params, dtokens, jnp.asarray(valid),
+                jnp.asarray(ctokens), jnp.asarray(cslots),
+                jnp.asarray(starts), jnp.asarray(clens), self.kv.cache,
+                self._next_key())
+            dn = np.asarray(dn)
+            for r in decision.decoding:
+                tok = int(dn[r.slot])
+                self._tokens[r.slot] = tok
                 r.record_token(tok, tnow)
+        cn = np.asarray(cn)
+        for i, c in enumerate(chunks):
+            if c.is_last:                  # final chunk -> first token
+                tok = int(cn[i])
+                self._tokens[c.req.slot] = tok
+                c.req.record_token(tok, tnow)
+        return kv_bytes, counts, moe_caps
+
+    def _run_legacy_prefill(self, decision: StageDecision,
+                            tnow: float) -> None:
+        """Monolithic whole-prompt prefill + scatter (non-unified archs)."""
+        assert not self.paged
+        fresh = [c.req for c in decision.chunks]
+        n_b = _bucket(len(fresh), self.seq_buckets)
+        # whole-prompt spans; a recompute-preempted replay covers prompt +
+        # generated, capped at max_len by the scheduler — and max_len is
+        # always a bucket, so no sequence outgrows its slab.
+        seqs = [(list(c.req.prompt) + list(c.req.output))[:c.end]
+                for c in decision.chunks]
+        max_l = max(len(sq) for sq in seqs)
+        l_b = _bucket(max_l, self.prefill_len_buckets)
+        tokens = np.zeros((n_b, l_b), np.int32)
+        true_len = np.zeros((n_b,), np.int32)
+        for i, sq in enumerate(seqs):
+            tokens[i, :len(sq)] = sq
+            true_len[i] = len(sq)
+        fn = self._legacy_prefill_fn(n_b, l_b)
+        nxt, local_cache = fn(self.params, jnp.asarray(tokens),
+                              jnp.asarray(true_len), self._next_key())
+        nxt = np.asarray(nxt)
+        slots = [self.kv.allocate() for _ in fresh]
+        take = jnp.asarray(range(len(slots)), dtype=jnp.int32)
+        local = [jax.tree_util.tree_map(lambda a: a[:, take], seg)
+                 for seg in local_cache]
+        self.kv.scatter(local, slots)
+        for i, (r, s) in enumerate(zip(fresh, slots)):
+            r.slot = s
+            self._slot_req[s] = r
+            tok = int(nxt[i])
+            self._tokens[s] = tok
+            r.record_token(tok, tnow)
+
+    def step(self, now: Optional[float] = None) -> Optional[StageReport]:
+        """Run one continuous-batching stage. Returns None when idle."""
+        t0 = time.monotonic()
+        self._maybe_preempt()
+        free = self.kv.free_slots
+        if self.paged:
+            # admission backpressure for oversubscribed pools: only admit
+            # when the pool can still hold one worst-case prompt plus a page
+            # of decode growth per running sequence and a chunk of growth
+            # per in-flight prefill. Running sequences can still exhaust a
+            # badly undersized pool (ensure_len raises — there is no paged
+            # preemption yet), but admissions won't cause it.
+            page = self.kv.page_size
+            budget = self.prefill_chunk_tokens or self.kv.max_len
+            chunk_pages = -(-min(budget, self.kv.max_len) // page)
+            reserve = (len(self.scheduler.running)
+                       + len(self.scheduler.prefilling) * chunk_pages
+                       + self.kv.max_pages_per_slot)
+            if self.kv.free_pages < reserve:
+                free = 0
+        decision = self.scheduler.next_stage(free)
+        if decision is None:
+            return None
+        tnow = now if now is not None else time.monotonic()
+        mix = decision.mix()
+        k_cold = 0
+        if self.use_duplex and mix.num_tokens > 0:
+            # planner input: the EMA of actual previous-stage router counts
+            # rescaled to this stage's token count (one-stage-stale
+            # statistics); the jitted step re-ranks experts from *actual*
+            # counts — only the width is static.
+            k_cold = self.planner.k_cold_static(
+                self._expected_counts(mix.num_tokens))
+        splan = plan_stage(self.cfg, mix) if mix.num_tokens else None
+
+        kv_bytes = 0
+        counts_sum = None
+        moe_caps = None
+        if decision.chunks and self._unified:
+            kv_bytes, counts_sum, moe_caps = self._run_mixed(
+                decision, k_cold, tnow)
+        else:
+            if decision.decoding:
+                kv_bytes, counts_sum, moe_caps = self._run_decode_only(
+                    decision, k_cold, tnow)
+            if decision.chunks:              # non-unified archs only
+                self._run_legacy_prefill(decision, tnow)
+        # migrated-back requests restore AFTER the stage ran: the dense
+        # decode half sweeps every slot and would advance a just-restored
+        # slot's length past its real context.
+        for r in decision.restored:
+            self._admit_restored(r, tnow)
 
         # ---- retire
-        for r in decision.admitted + decision.decoding:
+        for r in ([c.req for c in decision.chunks] + decision.decoding
+                  + decision.restored):
             if r.done and r.slot >= 0:
                 self.kv.free(r.slot)
                 self._slot_req.pop(r.slot, None)
         self.scheduler.commit_stage(decision)
 
-        # ---- MoE streamed-bytes / padded-vs-live FLOP accounting for the
-        # decode half (the count-threaded duplex path): counts drawn from the
-        # planner's seeded stream, rescaled to the decode step's token count
-        # (identical to the planner vector whenever the totals coincide).
+        # ---- MoE streamed-bytes / padded-vs-live FLOP accounting from the
+        # stage's ACTUAL router counts (per-layer average of the jitted
+        # step's summed counts); also folds them into the planner EMA.
+        counts_layer = self._update_counts(counts_sum)
+        chunk_tokens = sum(c.tokens for c in decision.chunks)
+        live_moe = len(decision.decoding) + chunk_tokens
         moe_bytes = moe_flops_live = moe_flops_padded = 0
-        if (self.use_duplex and decode_tokens and self._moe_layers
+        if (self.use_duplex and live_moe and self._moe_layers
+                and moe_caps is not None
                 and (k_cold > 0 or self.moe_ragged)):
             from repro.core.duplex_moe import moe_traffic_model
             m = self.cfg.moe
-            rng = np.random.default_rng(self._stage_idx)
-            dcounts = rng.multinomial(decode_tokens * m.top_k,
-                                      np.full(m.num_experts,
-                                              1.0 / m.num_experts))
+            if counts_layer is not None and counts_layer.sum() > 0:
+                dcounts = np.round(counts_layer).astype(np.int64)
+            else:
+                dcounts = np.round(
+                    self._expected_counts(live_moe)).astype(np.int64)
             ch, cc, cb = moe_caps
             stats = moe_traffic_model(dcounts, k_cold=k_cold, c_hot=ch,
                                       c_cold=cc, d_model=self.cfg.d_model,
@@ -495,14 +739,16 @@ class ServingEngine:
         report = StageReport(
             stage_index=self._stage_idx, is_mixed=decision.is_mixed,
             num_decode=len(decision.decoding),
-            num_prefill=len(decision.admitted), k_cold=k_cold,
+            num_prefill=len(decision.chunks), k_cold=k_cold,
             bandwidth_flop_fraction=(splan.bandwidth_fraction()
                                      if splan else 0.0),
             wall_time=time.monotonic() - t0,
             kv_bytes_streamed=int(kv_bytes),
             moe_bytes_streamed=int(moe_bytes),
             moe_flops_live=int(moe_flops_live),
-            moe_flops_padded=int(moe_flops_padded))
+            moe_flops_padded=int(moe_flops_padded),
+            chunk_tokens=int(chunk_tokens),
+            stage_tokens=int(live_moe))
         self.reports.append(report)
         self._stage_idx += 1
         return report

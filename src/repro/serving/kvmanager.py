@@ -159,7 +159,8 @@ class KVManager:
     def scatter(self, local_cache, slots: Sequence[int]) -> None:
         """Dense layout: insert per-request caches (batch = len(slots)) at
         slot indices. Every cache leaf is laid out (stacked_layers, batch, ...)."""
-        assert not self.paged, "use scatter_paged for the paged layout"
+        assert not self.paged, \
+            "paged prefill writes pages in-stage (see NOTE below)"
         idx = jnp.asarray(list(slots), dtype=jnp.int32)
 
         def leaf(g, l):
@@ -168,48 +169,12 @@ class KVManager:
         self.cache = [jax.tree_util.tree_map(leaf, g, l)
                       for g, l in zip(self.cache, local_cache)]
 
-    def scatter_paged(self, local_cache, slots: Sequence[int],
-                      true_lens: Sequence[int]) -> None:
-        """Insert per-request *dense* prefill caches into the page pool.
-
-        local_cache: the prefill path's dense cache (k/v leaves
-        (repeats, B_local, L, KV, hd)); request i covers slots[i] with
-        true_lens[i] live positions. Pages are allocated here; all requests'
-        pages are written with one scatter per pool leaf."""
-        assert self.paged
-        page = self.page_size
-        rows = []                      # (local_row, n_pages)
-        pids: List[int] = []
-        for i, (slot, tl) in enumerate(zip(slots, true_lens)):
-            # clamp like the dense write path (idx = min(pos, size-1)) so an
-            # over-long prompt truncates instead of asserting
-            tl = min(max(int(tl), 1), self.max_len)
-            self.ensure_len(slot, tl)
-            self.lens[slot] = tl
-            npg = _cdiv(tl, page)
-            rows.append((i, npg))
-            pids.extend(self._slot_pages[slot][:npg])
-        idx = jnp.asarray(pids, dtype=jnp.int32)
-
-        def write(gleaf, lleaf):
-            # lleaf (repeats, B_local, L, KV, hd) -> per-request page chunks
-            R, _, L, KV, hd = lleaf.shape
-            pad = (-L) % page
-            src = jnp.pad(lleaf, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-            src = src.reshape(R, -1, src.shape[2] // page, page, KV, hd)
-            chunks = [src[:, i, :npg] for i, npg in rows]
-            val = jnp.concatenate(chunks, axis=1)    # (R, n, page, KV, hd)
-            val = val.transpose(0, 1, 3, 2, 4)       # -> (R, n, KV, page, hd)
-            return gleaf.at[:, idx].set(val.astype(gleaf.dtype))
-
-        new_cache = []
-        for seg_g, seg_l in zip(self.cache, local_cache):
-            blocks = []
-            for gblk, lblk in zip(seg_g["blocks"], seg_l["blocks"]):
-                blocks.append({"k_pages": write(gblk["k_pages"], lblk["k"]),
-                               "v_pages": write(gblk["v_pages"], lblk["v"])})
-            new_cache.append({"blocks": tuple(blocks)})
-        self.cache = new_cache
+    # NOTE: there is no paged scatter API — paged prefill happens *inside*
+    # the jitted stage step: the serving engine grows a slot's block table
+    # host-side (``ensure_len``) and the chunked-prefill attention layer
+    # writes each chunk's K/V straight into its pages
+    # (models/attention.py::paged_attention_chunk_step), so a prompt's KV
+    # never materializes in a separate dense buffer.
 
     # ---- reporting -----------------------------------------------------------
     def _total_bytes(self) -> int:

@@ -23,6 +23,13 @@ class Request:
     state: RequestState = RequestState.QUEUED
     slot: int = -1
     output: List[int] = field(default_factory=list)
+    # chunked prefill (scheduler-owned): positions [0, prefill_pos) have
+    # been processed and their KV written; prefill_target is frozen at
+    # admission (prompt + recompute-replayed output — it must not drift when
+    # the final chunk's sampled token lands in ``output``). Reset on
+    # recompute-preemption.
+    prefill_pos: int = 0
+    prefill_target: Optional[int] = None
     # preemption (paper SVIII-C): host-saved KV (migrate) / retry marker
     saved_cache: Optional[list] = None
     was_preempted: bool = False
@@ -34,6 +41,21 @@ class Request:
     @property
     def l_in(self) -> int:
         return len(self.prompt)
+
+    @property
+    def prefill_total(self) -> int:
+        """Positions prefill must cover before decode resumes: the prompt,
+        plus any already-generated tokens for a recompute-preempted request
+        (its KV was dropped and must be rebuilt, paper SVIII-C). Frozen into
+        ``prefill_target`` at admission."""
+        if self.prefill_target is not None:
+            return self.prefill_target
+        return len(self.prompt) + len(self.output)
+
+    @property
+    def prefill_done(self) -> bool:
+        return (self.prefill_target is not None
+                and self.prefill_pos >= self.prefill_target)
 
     @property
     def done(self) -> bool:

@@ -1,15 +1,23 @@
 """Stage-level continuous-batching scheduler (ORCA [56] / paper §II-C).
 
-Each call to ``next_stage`` decides the composition of the next stage:
+Each call to ``next_stage`` decides the composition of the next stage as one
+**unified token stream**:
 
-  * admit queued requests into free KV slots (bounded by ``max_prefill_seqs``
-    and ``max_prefill_tokens`` per stage — the usual SLO guard against mixed
-    stages starving decode TBT);
-  * every active request contributes one decode token.
+  * every active request contributes one decode token;
+  * prefill work is emitted as per-request **chunk spans**: with
+    ``prefill_chunk_tokens`` set (Sarathi/SplitFuse-style chunked prefill),
+    each stage carries at most that many prompt tokens, so a long prompt
+    prefills across several stages interleaved with everyone else's decode
+    and the per-stage token count stays near a constant target — the Op/B
+    stabilization argument of ROADMAP "DESIGN: chunked prefill". With
+    ``prefill_chunk_tokens=None`` (legacy), each admitted prompt is one
+    whole-prompt span, bounded by ``max_prefill_tokens`` per stage.
 
-A stage with admissions is a **mixed stage**; otherwise it is a
+A stage with chunk spans is a **mixed stage**; otherwise it is a
 **decoding-only stage** (the dominant kind, paper Fig. 5(a) — the scheduler
-exposes counters so benchmarks can reproduce that ratio).
+exposes counters so benchmarks can reproduce that ratio). In-flight chunked
+prefills always continue before new prompts are admitted (they hold KV
+slots; finishing them fastest frees capacity).
 """
 from __future__ import annotations
 
@@ -22,27 +30,70 @@ from repro.serving.request import Request, RequestState
 
 
 @dataclass
+class ChunkSpan:
+    """One stage's slice of one request's prefill: positions [start, end) of
+    prompt(+recompute-replayed output). ``end == req.prefill_total`` marks
+    the final chunk — the engine samples the request's next token from it."""
+    req: Request
+    start: int
+    end: int
+
+    @property
+    def tokens(self) -> int:
+        return self.end - self.start
+
+    @property
+    def is_first(self) -> bool:
+        return self.start == 0
+
+    @property
+    def is_last(self) -> bool:
+        return self.end >= self.req.prefill_total
+
+
+@dataclass
 class StageDecision:
-    admitted: List[Request]
+    chunks: List[ChunkSpan]
     decoding: List[Request]
+    # migrated-back preempted requests: hold saved KV, need a slot + host
+    # restore but no prefill tokens (paper SVIII-C)
+    restored: List[Request] = field(default_factory=list)
 
     @property
     def is_mixed(self) -> bool:
-        return len(self.admitted) > 0
+        return len(self.chunks) > 0
+
+    @property
+    def admitted(self) -> List[Request]:
+        """Requests entering the engine this stage (first chunk / restore)."""
+        return [c.req for c in self.chunks if c.is_first] + self.restored
 
     def mix(self) -> StageMix:
         return StageMix(
             decode_ctx=tuple(r.l_in + len(r.output) for r in self.decoding),
-            prefill_len=tuple(r.l_in for r in self.admitted))
+            chunk_spans=tuple((c.start, c.end) for c in self.chunks))
 
 
 class ContinuousBatchingScheduler:
     def __init__(self, *, max_prefill_seqs: int = 4,
-                 max_prefill_tokens: int = 8192):
+                 max_prefill_tokens: int = 8192,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 max_prefill_target: Optional[int] = None):
+        assert prefill_chunk_tokens is None or prefill_chunk_tokens >= 1
+        # KV-capacity cap on a request's prefill target: a recompute-
+        # preempted replay covers prompt + generated-so-far, which can
+        # exceed the cache length the engine can hold — positions past the
+        # cap were already clamp-overwritten before the eviction, so the
+        # replay stops there too (the engine passes max_len).
+        self.max_prefill_target = max_prefill_target
         self.queue: Deque[Request] = deque()
         self.running: List[Request] = []
+        # requests mid-chunked-prefill: they own a KV slot but are not yet
+        # decoding; spans continue FIFO until the prompt is covered.
+        self.prefilling: List[Request] = []
         self.max_prefill_seqs = max_prefill_seqs
         self.max_prefill_tokens = max_prefill_tokens
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         self.stage_counts = {"mixed": 0, "decode_only": 0}
 
     # ---- request intake ------------------------------------------------------
@@ -53,8 +104,12 @@ class ContinuousBatchingScheduler:
         """A preempted request re-enters behind the starving head (it keeps
         priority over everything newer)."""
         req.was_preempted = True
+        req.prefill_pos = 0
+        req.prefill_target = None
         if req in self.running:
             self.running.remove(req)
+        if req in self.prefilling:
+            self.prefilling.remove(req)
         if self.queue:
             head = self.queue.popleft()
             self.queue.appendleft(req)
@@ -68,29 +123,76 @@ class ContinuousBatchingScheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.queue) or bool(self.running)
+        return bool(self.queue) or bool(self.running) or bool(self.prefilling)
 
     # ---- stage formation -----------------------------------------------------
     def next_stage(self, free_slots: int) -> Optional[StageDecision]:
-        admitted: List[Request] = []
-        tokens = 0
-        while (self.queue and free_slots > len(admitted)
-               and len(admitted) < self.max_prefill_seqs
-               and tokens + self.queue[0].l_in <= self.max_prefill_tokens):
-            r = self.queue.popleft()
+        chunks: List[ChunkSpan] = []
+        restored: List[Request] = []
+        chunked = self.prefill_chunk_tokens is not None
+        budget = (self.prefill_chunk_tokens if chunked
+                  else self.max_prefill_tokens)
+        used = 0
+        # continue in-flight chunked prefills first (they hold slots)
+        for r in self.prefilling:
+            if len(chunks) >= self.max_prefill_seqs or used >= budget:
+                break
+            n = min(r.prefill_total - r.prefill_pos, budget - used)
+            if n <= 0:
+                continue
+            chunks.append(ChunkSpan(r, r.prefill_pos, r.prefill_pos + n))
+            used += n
+        # admit new work into free slots
+        free = free_slots
+        while self.queue and free > 0:
+            r = self.queue[0]
+            if r.saved_cache is not None:        # migrated-back: restore only
+                self.queue.popleft()
+                restored.append(r)
+                free -= 1
+                continue
+            if len(chunks) >= self.max_prefill_seqs:
+                break
+            total = len(r.prompt) + len(r.output)
+            if self.max_prefill_target is not None:
+                total = min(total, self.max_prefill_target)
+            r.prefill_target = total
+            if chunked:
+                if used >= budget:
+                    break
+                span = ChunkSpan(r, 0, min(total, budget - used))
+            else:
+                if used + total > budget and used > 0:
+                    break
+                # legacy unchunked: the whole prompt in one span (a single
+                # over-budget prompt still runs alone rather than starving)
+                span = ChunkSpan(r, 0, total)
+            self.queue.popleft()
             r.state = RequestState.PREFILL
-            tokens += r.l_in
-            admitted.append(r)
+            chunks.append(span)
+            used += span.tokens
+            free -= 1
         decoding = [r for r in self.running if r.state == RequestState.DECODE]
-        if not admitted and not decoding:
+        if not chunks and not decoding and not restored:
             return None
-        self.stage_counts["mixed" if admitted else "decode_only"] += 1
-        return StageDecision(admitted, decoding)
+        self.stage_counts["mixed" if chunks else "decode_only"] += 1
+        return StageDecision(chunks, decoding, restored)
 
     def commit_stage(self, decision: StageDecision) -> None:
-        """After the engine executes the stage: promote admissions, retire
-        completed requests."""
-        for r in decision.admitted:
+        """After the engine executes the stage: advance chunk positions,
+        promote finished prefills to decode, retire completed requests."""
+        for c in decision.chunks:
+            r = c.req
+            r.prefill_pos = c.end
+            if r.prefill_done:
+                if r in self.prefilling:
+                    self.prefilling.remove(r)
+                if not r.done:
+                    r.state = RequestState.DECODE
+                self.running.append(r)
+            elif r not in self.prefilling:
+                self.prefilling.append(r)
+        for r in decision.restored:
             if not r.done:
                 r.state = RequestState.DECODE
             self.running.append(r)
