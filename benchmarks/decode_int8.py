@@ -1,0 +1,138 @@
+"""int8-KV decode microbenchmark: streamed bytes + capacity, fp16 vs int8.
+
+Decode attention is bandwidth-bound (GQA Op/B ≈ 4-8, paper §III-A), so after
+the paged layout made streamed KV bytes track *live* pages
+(benchmarks/decode_paged.py), the next multiplier is bytes-per-element: int8
+KV pages store 1-byte values plus a fp32 per-(token, kv-head) scale, cutting
+the dominant HBM stream by ~2x at hd=64/fp16 — and, by the same factor,
+doubling the token capacity a fixed page-pool byte budget admits (the
+paper's Fig. 5(c) batch-size argument). This benchmark sweeps
+occupancy × {fp16, int8} × {dense, paged} on identical request sets and
+reports, per row:
+
+  * mean streamed KV bytes per decode stage for all four engines
+    (dtype-aware accounting — int8 counts value + scale bytes);
+  * ``reduction_paged_x`` — fp16-paged / int8-paged streamed bytes at equal
+    occupancy (the acceptance metric, ≥ 1.7x);
+  * greedy-token parity between the dense-int8 and paged-int8 engines
+    (both layouts run the same folded-scale int8 dots);
+  * token capacity a fixed pool byte budget admits under fp16 vs int8 pages
+    (``serving.kvmanager.pages_for_budget``), ~2x at int8.
+
+Emits JSON (stdout, plus ``--out FILE``) for the perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.decode_paged import _drive
+
+
+def _engine(cfg, params, *, max_slots, max_len, page_size, layout, kv_quant):
+    from repro.serving.engine import ServingEngine
+    return ServingEngine(cfg, params, max_slots=max_slots, max_len=max_len,
+                         use_duplex=False, kv_layout=layout,
+                         kv_page_size=page_size, kv_quant=kv_quant,
+                         kv_dtype=None if kv_quant else "bfloat16")
+
+
+def run(quick: bool = True, seed: int = 0) -> List[Dict]:
+    from repro.configs.base import small_test_config
+    from repro.models.model import init_model
+    from repro.serving.kvmanager import pages_for_budget
+    from repro.serving.request import Request
+
+    max_slots = 8 if quick else 16
+    max_len = 128 if quick else 2048
+    page_size = 16 if quick else 64
+    n_decode = 4 if quick else 32
+    # hd = 64: the fp16-vs-int8 stream ratio is 2*64 / (64+4) ≈ 1.88x
+    cfg = small_test_config("bench-int8", num_layers=2 if quick else 4,
+                            d_model=128 if quick else 256, num_heads=4,
+                            num_kv_heads=2, head_dim=64)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+
+    # capacity at a fixed pool byte budget (layout-independent math)
+    budget = 1 << (24 if quick else 30)
+    pages_fp16 = pages_for_budget(cfg, page_size, budget, dtype="bfloat16")
+    pages_int8 = pages_for_budget(cfg, page_size, budget, kv_quant=True)
+
+    rows = []
+    for occupancy in (0.25, 0.5, 1.0):
+        n_active = max(1, round(occupancy * max_slots))
+        lens = rng.integers(max_len // 8, max_len // 2, size=n_active)
+        proto = [Request(rid=i, prompt=list(rng.integers(1, cfg.vocab_size,
+                                                         size=int(l))),
+                         max_new_tokens=n_decode + 2)
+                 for i, l in enumerate(lens)]
+
+        kv_bytes = {}
+        outputs = {}
+        for layout in ("dense", "paged"):
+            for kv_quant in (False, True):
+                eng = _engine(cfg, params, max_slots=max_slots,
+                              max_len=max_len, page_size=page_size,
+                              layout=layout, kv_quant=kv_quant)
+                reqs = copy.deepcopy(proto)
+                _, _, mean_bytes = _drive(eng, reqs, n_decode)
+                key = f"{layout}_{'int8' if kv_quant else 'fp16'}"
+                kv_bytes[key] = int(mean_bytes)
+                outputs[key] = {r.rid: tuple(r.output) for r in reqs}
+
+        rows.append({
+            "occupancy": occupancy,
+            "n_active": int(n_active),
+            "max_slots": max_slots,
+            "max_len": max_len,
+            "page_size": page_size,
+            "kv_bytes_dense_fp16": kv_bytes["dense_fp16"],
+            "kv_bytes_dense_int8": kv_bytes["dense_int8"],
+            "kv_bytes_paged_fp16": kv_bytes["paged_fp16"],
+            "kv_bytes_paged_int8": kv_bytes["paged_int8"],
+            "reduction_paged_x": (kv_bytes["paged_fp16"]
+                                  / max(kv_bytes["paged_int8"], 1)),
+            "reduction_dense_x": (kv_bytes["dense_fp16"]
+                                  / max(kv_bytes["dense_int8"], 1)),
+            # both int8 layouts run the same folded-scale dots on the same
+            # quantized values — greedy tokens must agree
+            "int8_parity": outputs["dense_int8"] == outputs["paged_int8"],
+            "pool_budget_bytes": budget,
+            "pages_fp16": int(pages_fp16),
+            "pages_int8": int(pages_int8),
+            "capacity_tokens_fp16": int(pages_fp16 * page_size),
+            "capacity_tokens_int8": int(pages_int8 * page_size),
+            "capacity_x": pages_int8 / max(pages_fp16, 1),
+            # concurrent sequences the budget admits at this workload's mean
+            # context — the Fig. 5(c) achievable-batch knob
+            "mean_ctx": float(np.mean(lens)) + n_decode / 2,
+            "batch_at_budget_fp16": int(pages_fp16 * page_size
+                                        // (np.mean(lens) + n_decode / 2)),
+            "batch_at_budget_int8": int(pages_int8 * page_size
+                                        // (np.mean(lens) + n_decode / 2)),
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON to this file")
+    args = ap.parse_args()
+    rows = run(quick=not args.full)
+    payload = {"benchmark": "decode_int8", "rows": rows}
+    text = json.dumps(payload, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

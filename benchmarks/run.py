@@ -3,11 +3,15 @@
   PYTHONPATH=src python -m benchmarks.run            # quick mode (CI-sized)
   PYTHONPATH=src python -m benchmarks.run --full     # paper-sized sweeps
   PYTHONPATH=src python -m benchmarks.run --only fig11_throughput
+  PYTHONPATH=src python -m benchmarks.run --only decode_paged \
+      --only decode_int8 --out-dir bench-json   # JSON artifacts (CI upload)
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import time
 import traceback
 
@@ -27,6 +31,7 @@ FIGS = [
     "decode_paged",          # paged vs dense streamed-KV (PR 1 tentpole)
     "moe_ragged",            # ragged vs padded MoE kernels (PR 2 tentpole)
     "prefill_chunked",       # chunked vs monolithic prefill (PR 3 tentpole)
+    "decode_int8",           # int8 vs fp16 KV pages (PR 4 tentpole)
 ]
 
 
@@ -34,13 +39,19 @@ def main() -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--full", action="store_true",
                    help="paper-sized workloads (slow)")
-    p.add_argument("--only", default=None)
+    p.add_argument("--only", action="append", default=None,
+                   help="run only this benchmark (repeatable)")
+    p.add_argument("--out-dir", default=None,
+                   help="also write each benchmark's rows as JSON here "
+                        "(CI uploads these as workflow artifacts)")
     args = p.parse_args()
 
     from benchmarks.common import print_rows
+    if args.out_dir:
+        os.makedirs(args.out_dir, exist_ok=True)
     failures = 0
     for name in FIGS:
-        if args.only and args.only != name:
+        if args.only and name not in args.only:
             continue
         t0 = time.monotonic()
         try:
@@ -49,6 +60,11 @@ def main() -> int:
             print_rows(name, rows)
             print(f"# {name}: {len(rows)} rows in "
                   f"{time.monotonic() - t0:.1f}s\n")
+            if args.out_dir:
+                with open(os.path.join(args.out_dir, f"{name}.json"),
+                          "w") as f:
+                    json.dump({"benchmark": name, "rows": rows}, f, indent=2)
+                    f.write("\n")
         except Exception:
             failures += 1
             print(f"# {name}: FAILED\n{traceback.format_exc()}")

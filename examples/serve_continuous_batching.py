@@ -24,11 +24,14 @@ cfg = small_test_config(
 params = init_model(jax.random.PRNGKey(0), cfg)
 # kv_layout="paged": KV lives in a shared page pool, decode streams only the
 # live pages of the active slots (see ROADMAP.md "DESIGN: paged KV cache").
+# kv_quant=True: the pools store int8 values + fp32 per-token scales — half
+# the streamed decode bytes and ~2x the token capacity per HBM byte
+# (ROADMAP.md "DESIGN: int8 KV pages").
 # prefill_chunk_tokens=32: long prompts prefill across stages interleaved
 # with decode (ROADMAP.md "DESIGN: chunked prefill").
 engine = ServingEngine(cfg, params, max_slots=8, max_len=128,
                        use_duplex=True, max_prefill_seqs=2,
-                       kv_layout="paged", kv_page_size=32,
+                       kv_layout="paged", kv_page_size=32, kv_quant=True,
                        prefill_chunk_tokens=32)
 
 rng = np.random.default_rng(0)
@@ -56,4 +59,7 @@ for r in engine.reports[:6]:
           f"{'mixed ' if r.is_mixed else 'decode'} "
           f"ndec={r.num_decode} npre={r.num_prefill} k_cold={r.k_cold} "
           f"bw_flop_frac={r.bandwidth_flop_fraction:.2f}")
+kvb = [r.kv_bytes_streamed for r in engine.reports if r.kv_bytes_streamed]
+print(f"streamed KV bytes/stage (paged int8+scales): "
+      f"mean={np.mean(kvb)/1e3:.1f}kB total={sum(kvb)/1e6:.2f}MB")
 print("OK")

@@ -97,13 +97,17 @@ _DECODE_BOUND = {"attn_decode", "cross_attn", "mamba_decode"}
 def plan_stage(cfg: ModelConfig, mix: StageMix, *,
                counts: Optional[Sequence[int]] = None,
                threshold: float = OPB_THRESHOLD,
-               duplex: Optional[DuplexSpec] = None) -> StagePlan:
-    """C1: route every component of every (unique) layer kind."""
+               duplex: Optional[DuplexSpec] = None,
+               kv_quant: bool = False) -> StagePlan:
+    """C1: route every component of every (unique) layer kind. ``kv_quant``
+    halves the modeled KV stream (int8 + scales), doubling decode/chunk
+    attention Op/B — which can flip a chunk component back to compute."""
     seen: Dict[LayerKind, Tuple[ComponentRoute, ...]] = {}
     for kind in cfg.layer_kinds():
         if kind in seen:
             continue
-        lc = opb_mod.layer_stage_cost(cfg, kind, mix, counts)
+        lc = opb_mod.layer_stage_cost(cfg, kind, mix, counts,
+                                      kv_quant=kv_quant)
         routes = []
         for c in lc.components:
             if c.name in _ALWAYS_COMPUTE:

@@ -111,23 +111,33 @@ def _gemm(name: str, tokens: int, d_in: int, d_out: int) -> OpCost:
 # Attention (paper §II-B, §III-A)
 # ---------------------------------------------------------------------------
 
-def attention_decode_cost(cfg: ModelConfig, ctx: int, *, window: int = 0) -> OpCost:
+def _kv_elem_bytes(hd: int, kv_quant: bool) -> float:
+    """K-or-V bytes one cached token occupies per kv head: int8 caches
+    stream 1-byte values plus a fp32 per-(token, kv-head) scale, halving
+    the dominant decode stream (and doubling its Op/B) vs bf16."""
+    return hd + 4.0 if kv_quant else float(BYTES * hd)
+
+
+def attention_decode_cost(cfg: ModelConfig, ctx: int, *, window: int = 0,
+                          kv_quant: bool = False) -> OpCost:
     """One decode sequence: 1 query token against `ctx` cached KV entries.
 
     GQA: per KV head, a (deg_grp × hd) Q slab hits (ctx × hd) K and V —
-    a skinny GEMM. KV bytes dominate => Op/B ≈ 2·deg_grp.
+    a skinny GEMM. KV bytes dominate => Op/B ≈ 2·deg_grp, doubled by int8
+    KV (``kv_quant``) since the streamed bytes halve at equal FLOPs.
     """
     eff_ctx = min(ctx, window) if window > 0 else ctx
     hd = cfg.resolved_head_dim
     kv, qpk = cfg.num_kv_heads, cfg.q_per_kv
     flops = 2.0 * kv * qpk * eff_ctx * hd * 2          # QK^T and PV
-    kv_bytes = BYTES * 2 * kv * eff_ctx * hd           # K and V read
+    kv_bytes = 2 * kv * eff_ctx * _kv_elem_bytes(hd, kv_quant)  # K + V read
     act = BYTES * kv * qpk * hd * 2                    # q in, out
     return OpCost("attn_decode", flops, 0.0, kv_bytes + act)
 
 
 def attention_prefill_cost(cfg: ModelConfig, s: int, *, window: int = 0,
-                           causal: bool = True) -> OpCost:
+                           causal: bool = True,
+                           kv_quant: bool = False) -> OpCost:
     """One prefill sequence of length s (triangular / banded score work)."""
     hd = cfg.resolved_head_dim
     h = cfg.num_heads
@@ -138,20 +148,21 @@ def attention_prefill_cost(cfg: ModelConfig, s: int, *, window: int = 0,
     else:
         pairs = s * s
     flops = 2.0 * h * pairs * hd * 2
-    kv_bytes = BYTES * 2 * cfg.num_kv_heads * s * hd
+    kv_bytes = 2 * cfg.num_kv_heads * s * _kv_elem_bytes(hd, kv_quant)
     act = BYTES * h * s * hd * 2
     return OpCost("attn_prefill", flops, 0.0, kv_bytes + act)
 
 
 def attention_chunk_cost(cfg: ModelConfig, start: int, end: int, *,
-                         window: int = 0) -> OpCost:
+                         window: int = 0, kv_quant: bool = False) -> OpCost:
     """One chunked-prefill sequence: queries [start, end) against the written
     [0, start) KV prefix plus the chunk's own causal K/V (banded when the
     layer has a sliding window — only the in-window prefix is read).
 
     Op/B interpolates between prefill (start=0: triangular, compute-bound)
     and decode (end=start+1: one query streaming the whole prefix,
-    bandwidth-bound) — the knob the chunk budget turns.
+    bandwidth-bound) — the knob the chunk budget turns; int8 KV
+    (``kv_quant``) doubles the bandwidth end of the interpolation.
     """
     hd = cfg.resolved_head_dim
     h = cfg.num_heads
@@ -163,7 +174,7 @@ def attention_chunk_cost(cfg: ModelConfig, start: int, end: int, *,
         pairs = (end * (end + 1) - start * (start + 1)) // 2
         kv_read = end
     flops = 2.0 * h * pairs * hd * 2
-    kv_bytes = BYTES * 2 * cfg.num_kv_heads * kv_read * hd
+    kv_bytes = 2 * cfg.num_kv_heads * kv_read * _kv_elem_bytes(hd, kv_quant)
     act = BYTES * h * (end - start) * hd * 2
     return OpCost("attn_chunk", flops, 0.0, kv_bytes + act)
 
@@ -286,7 +297,8 @@ class LayerStageCost:
 
 
 def layer_stage_cost(cfg: ModelConfig, kind: LayerKind, mix: StageMix,
-                     counts: Optional[Sequence[int]] = None) -> LayerStageCost:
+                     counts: Optional[Sequence[int]] = None, *,
+                     kv_quant: bool = False) -> LayerStageCost:
     comps: List[OpCost] = []
     T = mix.num_tokens
     window = cfg.sliding_window if kind.mixer == ATTN_LOCAL else 0
@@ -301,20 +313,23 @@ def layer_stage_cost(cfg: ModelConfig, kind: LayerKind, mix: StageMix,
         comps.append(qkv_proj_cost(cfg, T))
         dec = OpCost("attn_decode", 0.0, 0.0, 0.0)
         for ctx in mix.decode_ctx:
-            dec = dec.merged(attention_decode_cost(cfg, ctx, window=window),
+            dec = dec.merged(attention_decode_cost(cfg, ctx, window=window,
+                                                   kv_quant=kv_quant),
                              "attn_decode")
         if mix.decode_ctx:
             comps.append(dec)
         pre = OpCost("attn_prefill", 0.0, 0.0, 0.0)
         for s in mix.prefill_len:
-            pre = pre.merged(attention_prefill_cost(cfg, s, window=window),
+            pre = pre.merged(attention_prefill_cost(cfg, s, window=window,
+                                                    kv_quant=kv_quant),
                              "attn_prefill")
         if mix.prefill_len:
             comps.append(pre)
         chk = OpCost("attn_chunk", 0.0, 0.0, 0.0)
         for s0, s1 in mix.chunk_spans:
             chk = chk.merged(attention_chunk_cost(cfg, s0, s1,
-                                                  window=window),
+                                                  window=window,
+                                                  kv_quant=kv_quant),
                              "attn_chunk")
         if mix.chunk_spans:
             comps.append(chk)
@@ -329,12 +344,12 @@ def layer_stage_cost(cfg: ModelConfig, kind: LayerKind, mix: StageMix,
 
 
 def stage_cost_breakdown(cfg: ModelConfig, mix: StageMix,
-                         counts: Optional[Sequence[int]] = None
-                         ) -> Dict[str, OpCost]:
+                         counts: Optional[Sequence[int]] = None, *,
+                         kv_quant: bool = False) -> Dict[str, OpCost]:
     """Aggregate component costs over all layers of the model (Fig. 4(a))."""
     agg: Dict[str, OpCost] = {}
     for kind in cfg.layer_kinds():
-        lc = layer_stage_cost(cfg, kind, mix, counts)
+        lc = layer_stage_cost(cfg, kind, mix, counts, kv_quant=kv_quant)
         for c in lc.components:
             key = c.name
             agg[key] = agg[key].merged(c) if key in agg else c

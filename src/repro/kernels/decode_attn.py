@@ -33,7 +33,19 @@ Two variants:
     slicing block tables to the stage's bucketed max live page count; a
     caller holding full-width tables can trim with ``pages_bound`` instead.
 
-Validated in interpret mode against ``ref.decode_attention_ref``.
+int8 KV pages (ROADMAP "DESIGN: int8 KV pages"): both paged kernels accept
+int8 K/V pools plus fp32 per-(token, kv-head) scale pools riding through the
+SAME block-table index maps (so dead-page DMA clamp-elision covers the scale
+stream too). Quantization never leaves the kernel: QK^T runs as an int8×int8
+dot with int32 accumulation (q quantized per row over hd in VMEM), scales
+folded outside the dot — exact, since the per-token scale is constant along
+the contracted hd dim; PV folds the v scales into the probability rows,
+re-quantizes them, and runs a second int8 dot. No fp16/fp32 copy of the
+cache ever materializes in VMEM, so streamed KV bytes per page are
+``2·KV·page·(hd·1B + 4B scale)`` instead of ``2·KV·page·hd·2B``.
+
+Validated in interpret mode against ``ref.decode_attention_ref`` /
+``ref.int8_decode_attention_ref``.
 """
 from __future__ import annotations
 
@@ -45,9 +57,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tpu_compiler_params
+from repro.kernels import int8_quantize, tpu_compiler_params
 
 NEG_INF = -1e30
+
+
+def _quantize_rows(x):
+    """x (rows, n) fp32 -> (int8 values, (rows, 1) fp32 scale over axis -1);
+    delegates to the canonical recipe shared with quantize_kv."""
+    return int8_quantize(x, keepdims=True)
+
+
+def _int8_dot(a8, b8, dims):
+    """int8 × int8 dot with int32 accumulation (MXU-native on TPU)."""
+    return jax.lax.dot_general(a8, b8, dims,
+                               preferred_element_type=jnp.int32)
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
@@ -195,8 +219,67 @@ def _paged_decode_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel_int8(len_ref, bt_ref, q_ref, k_ref, ks_ref, v_ref,
+                              vs_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                              window: int, softcap: float, scale: float,
+                              page: int, npages: int):
+    """int8 variant: k/v refs are int8 page blocks, ks/vs the fp32
+    per-(token, kv-head) scale blocks riding the same index map. Both dots
+    run on int8 operands with int32 accumulation; the folded-scale math is
+    models/attention.py::decode_attention_int8 applied per page block."""
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    k_start = ki * page
+    needed = k_start < length
+    if window > 0:
+        needed = jnp.logical_and(needed,
+                                 k_start + page - 1 > length - 1 - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (qpk, hd)
+        q8, q_sc = _quantize_rows(q)                   # (qpk, hd), (qpk, 1)
+        k8 = k_ref[0, 0]                               # (page, hd) int8
+        ks = ks_ref[0, 0].astype(jnp.float32)          # (page,)
+        s_i32 = _int8_dot(q8, k8, (((1,), (1,)), ((), ())))  # (qpk, page)
+        # exact fold: per-token scales are constant along the contracted hd
+        s = s_i32.astype(jnp.float32) * q_sc * ks[None, :] * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        valid = kpos < length
+        if window > 0:
+            valid = jnp.logical_and(valid, kpos > length - 1 - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_old = m_ref[...]                              # (qpk, 1)
+        m_new = jnp.maximum(m_old, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new)                          # (qpk, page)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        vs = vs_ref[0, 0].astype(jnp.float32)           # (page,)
+        pv8, pv_sc = _quantize_rows(p * vs[None, :])    # fold v scales
+        v8 = v_ref[0, 0]                                # (page, hd) int8
+        pv_i32 = _int8_dot(pv8, v8, (((1,), (0,)), ((), ())))  # (qpk, hd)
+        acc_ref[...] = acc_ref[...] * alpha + pv_i32.astype(jnp.float32) * pv_sc
+        m_ref[...] = m_new
+
+    @pl.when(ki == npages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
 def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, block_tables,
-                                  *, window: int = 0, softcap: float = 0.0,
+                                  *, k_scale_pages=None, v_scale_pages=None,
+                                  window: int = 0, softcap: float = 0.0,
                                   pages_bound: int | None = None,
                                   interpret: bool = False):
     """q: (B, KV, qpk, hd); k_pages, v_pages: (P, KV, page, hd) shared page
@@ -204,6 +287,12 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, block_tables,
     page ids (row b, column j = pool page holding positions
     [j*page, (j+1)*page) of sequence b; unused columns must hold a valid page
     id — conventionally 0, the pool's reserved null page).
+
+    With ``k_scale_pages``/``v_scale_pages`` ((P, KV, page) fp32 per-(token,
+    kv-head) scales) the pools are int8 and the kernel runs the in-kernel
+    scaled-dot path (``_paged_decode_kernel_int8``): scale blocks ride the
+    same clamped block-table index map, so dead pages elide their scale DMAs
+    along with their K/V DMAs.
 
     The kv grid extent is ``pages_bound`` (defaults to maxp — pass it to
     trim a full-width table without slicing it). Out-of-range grid steps are
@@ -214,6 +303,11 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, block_tables,
     B, KV, qpk, hd = q.shape
     P, KVp, page, hdp = k_pages.shape
     assert (KVp, hdp) == (KV, hd), (k_pages.shape, q.shape)
+    quant = k_scale_pages is not None
+    assert quant == (v_scale_pages is not None), "need both scale pools"
+    if quant:
+        assert k_pages.dtype == jnp.int8, k_pages.dtype
+        assert k_scale_pages.shape == (P, KV, page), k_scale_pages.shape
     maxp = block_tables.shape[1]
     npages = maxp if pages_bound is None else pages_bound
     assert 1 <= npages <= maxp, (npages, maxp)
@@ -221,15 +315,15 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, block_tables,
     lengths = lengths.astype(jnp.int32)
     block_tables = block_tables.astype(jnp.int32)
 
-    kernel = functools.partial(_paged_decode_kernel, window=window,
-                               softcap=softcap, scale=scale, page=page,
-                               npages=npages)
+    body = _paged_decode_kernel_int8 if quant else _paged_decode_kernel
+    kernel = functools.partial(body, window=window, softcap=softcap,
+                               scale=scale, page=page, npages=npages)
 
     def q_map(b, g, ki, lens, bt):
         del ki, lens, bt
         return (b, g, 0, 0)
 
-    def kv_map(b, g, ki, lens, bt):
+    def _clamped(b, ki, lens):
         # clamp the kv grid step into the sequence's live page range so the
         # pipeline re-targets an already-resident page (same block index as
         # the previous step -> the DMA is elided entirely).
@@ -241,17 +335,37 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, block_tables,
             first = jnp.maximum((length - 1 - window) // page, 0)
         else:
             first = 0
-        kic = jnp.clip(ki, first, last)
-        return (bt[b, kic], g, 0, 0)
+        return jnp.clip(ki, first, last)
+
+    def kv_map(b, g, ki, lens, bt):
+        return (bt[b, _clamped(b, ki, lens)], g, 0, 0)
+
+    def sc_map(b, g, ki, lens, bt):
+        return (bt[b, _clamped(b, ki, lens)], g, 0)
+
+    if quant:
+        in_specs = [
+            pl.BlockSpec((1, 1, qpk, hd), q_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+            pl.BlockSpec((1, 1, page), sc_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+            pl.BlockSpec((1, 1, page), sc_map),
+        ]
+        operands = (q, k_pages, k_scale_pages, v_pages, v_scale_pages)
+        out_dtype = q.dtype
+    else:
+        in_specs = [
+            pl.BlockSpec((1, 1, qpk, hd), q_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+        ]
+        operands = (q, k_pages, v_pages)
+        out_dtype = q.dtype
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, npages),
-        in_specs=[
-            pl.BlockSpec((1, 1, qpk, hd), q_map),
-            pl.BlockSpec((1, 1, page, hd), kv_map),
-            pl.BlockSpec((1, 1, page, hd), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, qpk, hd), q_map),
         scratch_shapes=[
             pltpu.VMEM((qpk, hd), jnp.float32),   # acc
@@ -263,11 +377,11 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, lengths, block_tables,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_shape=jax.ShapeDtypeStruct(q.shape, out_dtype),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(lengths, block_tables, q, k_pages, v_pages)
+    )(lengths, block_tables, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -329,8 +443,66 @@ def _chunked_prefill_kernel(tot_ref, start_ref, bt_ref, q_ref, k_ref, v_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _chunked_prefill_kernel_int8(tot_ref, start_ref, bt_ref, q_ref, k_ref,
+                                 ks_ref, v_ref, vs_ref, o_ref, acc_ref,
+                                 m_ref, l_ref, *, softcap: float,
+                                 scale: float, page: int, npages: int,
+                                 qpk: int):
+    """int8 variant of the chunked-prefill kernel: the written prefix AND the
+    in-flight chunk stream as int8 pages + fp32 scale riders; QK^T/PV are
+    int8 dots with folded scales (see _paged_decode_kernel_int8)."""
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    total = tot_ref[b]          # prefix + chunk length
+    start = start_ref[b]        # first chunk position
+    k_start = ki * page
+    needed = k_start < total
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (Sc*qpk, hd)
+        q8, q_sc = _quantize_rows(q)
+        rows = q.shape[0]
+        k8 = k_ref[0, 0]                               # (page, hd) int8
+        ks = ks_ref[0, 0].astype(jnp.float32)          # (page,)
+        s_i32 = _int8_dot(q8, k8, (((1,), (1,)), ((), ())))  # (rows, page)
+        s = s_i32.astype(jnp.float32) * q_sc * ks[None, :] * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        # row r holds chunk position r // qpk (heads innermost)
+        qpos = start + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // qpk
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        valid = jnp.logical_and(kpos <= qpos, kpos < total)
+        s = jnp.where(valid, s, NEG_INF)
+        m_old = m_ref[...]                              # (rows, 1)
+        m_new = jnp.maximum(m_old, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_old - m_new)
+        # gate p so a fully-masked padding row cannot alias exp(0) to 1
+        p = jnp.exp(s - m_new) * valid.astype(jnp.float32)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        vs = vs_ref[0, 0].astype(jnp.float32)           # (page,)
+        pv8, pv_sc = _quantize_rows(p * vs[None, :])
+        v8 = v_ref[0, 0]                                # (page, hd) int8
+        pv_i32 = _int8_dot(pv8, v8, (((1,), (0,)), ((), ())))  # (rows, hd)
+        acc_ref[...] = acc_ref[...] * alpha + pv_i32.astype(jnp.float32) * pv_sc
+        m_ref[...] = m_new
+
+    @pl.when(ki == npages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
 def chunked_prefill_attention_kernel(q, k_pages, v_pages, totals, starts,
-                                     block_tables, *, qpk: int = 1,
+                                     block_tables, *, k_scale_pages=None,
+                                     v_scale_pages=None, qpk: int = 1,
                                      softcap: float = 0.0,
                                      pages_bound: int | None = None,
                                      interpret: bool = False):
@@ -338,7 +510,10 @@ def chunked_prefill_attention_kernel(q, k_pages, v_pages, totals, starts,
     r = chunk position r // qpk); k_pages, v_pages: (P, KV, page, hd) shared
     page pool; totals: (B,) prefix+chunk lengths (the chunk K/V must already
     be written); starts: (B,) first chunk position; block_tables: (B, maxp)
-    page ids (unused columns hold the reserved null page 0).
+    page ids (unused columns hold the reserved null page 0). With
+    ``k_scale_pages``/``v_scale_pages`` ((P, KV, page) fp32) the pools are
+    int8 and the in-kernel scaled-dot path runs (scale DMAs clamp-elided
+    exactly like K/V).
 
     The kv grid extent is ``pages_bound`` (default maxp); out-of-range steps
     are clamped by the scalar-prefetch index map to the sequence's last live
@@ -349,6 +524,11 @@ def chunked_prefill_attention_kernel(q, k_pages, v_pages, totals, starts,
     B, KV, rows, hd = q.shape
     P, KVp, page, hdp = k_pages.shape
     assert (KVp, hdp) == (KV, hd), (k_pages.shape, q.shape)
+    quant = k_scale_pages is not None
+    assert quant == (v_scale_pages is not None), "need both scale pools"
+    if quant:
+        assert k_pages.dtype == jnp.int8, k_pages.dtype
+        assert k_scale_pages.shape == (P, KV, page), k_scale_pages.shape
     maxp = block_tables.shape[1]
     npages = maxp if pages_bound is None else pages_bound
     assert 1 <= npages <= maxp, (npages, maxp)
@@ -357,28 +537,47 @@ def chunked_prefill_attention_kernel(q, k_pages, v_pages, totals, starts,
     starts = starts.astype(jnp.int32)
     block_tables = block_tables.astype(jnp.int32)
     assert rows % qpk == 0, (rows, qpk)
-    kernel = functools.partial(_chunked_prefill_kernel, softcap=softcap,
-                               scale=scale, page=page, npages=npages,
-                               qpk=qpk)
+    body = _chunked_prefill_kernel_int8 if quant else _chunked_prefill_kernel
+    kernel = functools.partial(body, softcap=softcap, scale=scale, page=page,
+                               npages=npages, qpk=qpk)
 
     def q_map(b, g, ki, tot, st, bt):
         del ki, tot, st, bt
         return (b, g, 0, 0)
 
+    def _clamped(b, ki, tot):
+        last = jnp.maximum((tot[b] + page - 1) // page - 1, 0)
+        return jnp.clip(ki, 0, last)
+
     def kv_map(b, g, ki, tot, st, bt):
         del st
-        last = jnp.maximum((tot[b] + page - 1) // page - 1, 0)
-        kic = jnp.clip(ki, 0, last)
-        return (bt[b, kic], g, 0, 0)
+        return (bt[b, _clamped(b, ki, tot)], g, 0, 0)
+
+    def sc_map(b, g, ki, tot, st, bt):
+        del st
+        return (bt[b, _clamped(b, ki, tot)], g, 0)
+
+    if quant:
+        in_specs = [
+            pl.BlockSpec((1, 1, rows, hd), q_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+            pl.BlockSpec((1, 1, page), sc_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+            pl.BlockSpec((1, 1, page), sc_map),
+        ]
+        operands = (q, k_pages, k_scale_pages, v_pages, v_scale_pages)
+    else:
+        in_specs = [
+            pl.BlockSpec((1, 1, rows, hd), q_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+            pl.BlockSpec((1, 1, page, hd), kv_map),
+        ]
+        operands = (q, k_pages, v_pages)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, KV, npages),
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, hd), q_map),
-            pl.BlockSpec((1, 1, page, hd), kv_map),
-            pl.BlockSpec((1, 1, page, hd), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rows, hd), q_map),
         scratch_shapes=[
             pltpu.VMEM((rows, hd), jnp.float32),   # acc
@@ -394,4 +593,4 @@ def chunked_prefill_attention_kernel(q, k_pages, v_pages, totals, starts,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(totals, starts, block_tables, q, k_pages, v_pages)
+    )(totals, starts, block_tables, *operands)

@@ -90,11 +90,15 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
 
 
 def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables, *,
+                           k_scales=None, v_scales=None,
                            window: int = 0, softcap: float = 0.0,
                            pages_bound: int | None = None,
                            interpret: bool | None = None):
     """Model layout: q (B, 1, H, hd); page pools (P, KV, page, hd);
     lengths (B,); block_tables (B, maxp) int32. -> (B, 1, H, hd).
+
+    With ``k_scales``/``v_scales`` ((P, KV, page) fp32) the pools are int8
+    and the kernel runs in-kernel scaled dots — streamed KV bytes halve.
 
     The kv grid spans the block-table width (or ``pages_bound`` if given, to
     trim a full-width table); dead pages past each sequence's live length
@@ -107,20 +111,24 @@ def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables, *,
     qg = q.reshape(B, KV, qpk, hd)
     out = paged_decode_attention_kernel(qg, k_pages, v_pages,
                                         lengths.astype(jnp.int32),
-                                        block_tables, window=window,
-                                        softcap=softcap,
+                                        block_tables,
+                                        k_scale_pages=k_scales,
+                                        v_scale_pages=v_scales,
+                                        window=window, softcap=softcap,
                                         pages_bound=pages_bound,
                                         interpret=interpret)
     return out.reshape(B, 1, H, hd)
 
 
 def chunked_prefill_attention(q, k_pages, v_pages, totals, starts,
-                              block_tables, *, softcap: float = 0.0,
+                              block_tables, *, k_scales=None, v_scales=None,
+                              softcap: float = 0.0,
                               pages_bound: int | None = None,
                               interpret: bool | None = None):
     """Model layout: q (B, Sc, H, hd) chunk queries; page pools
     (P, KV, page, hd); totals/starts (B,); block_tables (B, maxp) int32.
-    -> (B, Sc, H, hd).
+    -> (B, Sc, H, hd). ``k_scales``/``v_scales`` select the int8 path as in
+    ``paged_decode_attention``.
 
     The chunk's K/V must already be written into the pool (the model layer
     writes before attending); queries then attend the block-table-addressed
@@ -135,7 +143,8 @@ def chunked_prefill_attention(q, k_pages, v_pages, totals, starts,
     qg = qg.reshape(B, KV, Sc * qpk, hd)
     out = chunked_prefill_attention_kernel(
         qg, k_pages, v_pages, totals.astype(jnp.int32),
-        starts.astype(jnp.int32), block_tables, qpk=qpk, softcap=softcap,
+        starts.astype(jnp.int32), block_tables, k_scale_pages=k_scales,
+        v_scale_pages=v_scales, qpk=qpk, softcap=softcap,
         pages_bound=pages_bound, interpret=interpret)
     out = out.reshape(B, KV, Sc, qpk, hd).transpose(0, 2, 1, 3, 4)
     return out.reshape(B, Sc, H, hd)
@@ -230,6 +239,7 @@ def ssd_decode(state, x, dt, a_log, b, c, d, *, h_block: int = 8,
 # re-exported oracles (tests import from one place)
 flash_attention_ref = ref.flash_attention_ref
 decode_attention_ref = ref.decode_attention_ref
+int8_decode_attention_ref = ref.int8_decode_attention_ref
 moe_ffn_ref = ref.moe_ffn_ref
 ragged_moe_ffn_ref = ref.ragged_moe_ffn_ref
 ssd_decode_ref = ref.ssd_decode_ref

@@ -56,6 +56,19 @@ def decode_attention_ref(q, k, v, lengths, *, window: int = 0,
     return out.astype(q.dtype)
 
 
+def int8_decode_attention_ref(q, k8, k_scale, v8, v_scale, lengths, *,
+                              window: int = 0, softcap: float = 0.0):
+    """Ground truth for the int8 paged decode kernel: dequantize the cache
+    and run the fp oracle. q: (B, KV, qpk, hd) fp; k8, v8: (B, KV, S, hd)
+    int8; k_scale, v_scale: (B, KV, S) fp32 per-(token, kv-head) scales.
+    The kernel's in-kernel scaled dots must land within int8 quantization
+    noise of this (its q/pv requantization adds ~1/254 relative error)."""
+    k = k8.astype(jnp.float32) * k_scale[..., None]
+    v = v8.astype(jnp.float32) * v_scale[..., None]
+    return decode_attention_ref(q.astype(jnp.float32), k, v, lengths,
+                                window=window, softcap=softcap)
+
+
 def moe_ffn_ref(w, x):
     """Grouped expert SwiGLU FFN. x: (E, C, d); w: dict wi_gate/wi_up (E,d,f),
     wo (E,f,d). Returns (E, C, d). Oracle for both moe_gemm and moe_gemv."""

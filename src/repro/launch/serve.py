@@ -33,6 +33,11 @@ def main(argv=None) -> int:
                    help="paged = shared KV page pool; decode streams live "
                         "pages only (full-attention decoder archs)")
     p.add_argument("--kv-page-size", type=int, default=64)
+    p.add_argument("--kv-quant", action="store_true",
+                   help="int8 KV cache (+fp32 per-token scales): halves the "
+                        "streamed decode KV bytes and ~doubles the token "
+                        "capacity per HBM byte; composes with --kv-layout "
+                        "paged (int8 page pools, in-kernel scaled dots)")
     p.add_argument("--prefill-chunk", type=int, default=None,
                    help="chunked prefill token budget per stage (Sarathi-"
                         "style): long prompts prefill across stages "
@@ -57,6 +62,7 @@ def main(argv=None) -> int:
                         max_len=args.max_len,
                         kv_layout=args.kv_layout,
                         kv_page_size=args.kv_page_size,
+                        kv_quant=args.kv_quant,
                         use_duplex=not args.no_duplex,
                         use_kernels=args.kernels,
                         moe_ragged=not args.no_moe_ragged,
@@ -91,6 +97,13 @@ def main(argv=None) -> int:
             else "monolithic")
     print(f"[serve] per-stage tokens ({mode} prefill): "
           f"mean={np.mean(st):.1f} std={np.std(st):.1f} max={max(st)}")
+    kvb = [r.kv_bytes_streamed for r in eng.reports if r.kv_bytes_streamed]
+    flavor = (f"{args.kv_layout}/"
+              f"{'int8+scales' if args.kv_quant else 'fp'}")
+    if kvb:
+        print(f"[serve] streamed KV bytes/stage ({flavor}): "
+              f"mean={np.mean(kvb)/1e3:.1f}kB max={max(kvb)/1e3:.1f}kB "
+              f"total={sum(kvb)/1e6:.2f}MB")
     return 0
 
 

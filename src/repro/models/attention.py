@@ -506,12 +506,13 @@ def cross_kv(params, cfg: ModelConfig, enc_out):
 # ---------------------------------------------------------------------------
 
 def quantize_kv(x, axis: int = -1):
-    """x (..., hd) -> (int8 values, fp32 scale over `axis`)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
-    scale = jnp.maximum(amax / 127.0, 1e-8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale
+    """x (..., hd) -> (int8 values, fp32 scale over the last axis).
+    Delegates to ``kernels.int8_quantize`` — the single recipe the int8
+    paged kernels also requantize with, so dense and paged caches hold
+    bit-identical values."""
+    assert axis in (-1, x.ndim - 1), "per-(token, head) scales are last-axis"
+    from repro.kernels import int8_quantize
+    return int8_quantize(x)
 
 
 def decode_attention_int8(q, k_q, k_scale, v_q, v_scale, cache_len, *,
@@ -652,6 +653,15 @@ def paged_gather_kv(pages, block_tables):
     return g.transpose(0, 1, 3, 2, 4).reshape(B, maxp * page, KV, hd)
 
 
+def paged_gather_scale(scale_pages, block_tables):
+    """Scale-pool counterpart of ``paged_gather_kv``: (P, KV, page) fp32
+    pool -> (B, maxp*page, KV) sequence-contiguous view."""
+    B, maxp = block_tables.shape
+    _, KV, page = scale_pages.shape
+    g = scale_pages[block_tables]                 # (B, maxp, KV, page)
+    return g.transpose(0, 1, 3, 2).reshape(B, maxp * page, KV)
+
+
 def paged_attention_decode_step(params, cfg: ModelConfig, x, cache, attn_ctx,
                                 *, window: int = 0):
     """One-token decode against the paged KV pool (B = active-slot bucket).
@@ -665,6 +675,12 @@ def paged_attention_decode_step(params, cfg: ModelConfig, x, cache, attn_ctx,
     The new token's K/V is written at (block_tables[b, len//page], len%page);
     rows padded up to the batch bucket carry length 0 and write into the
     pool's reserved null page 0, so they never corrupt live pages.
+
+    int8 page pools (``k_scale_pages`` present): the token's K/V is
+    quantized per kv-head before the scatter (value pools int8, fp32 scales
+    into the scale pools), and attention runs the in-kernel scaled-dot
+    paged kernel — or, off the kernel path, ``decode_attention_int8`` over
+    the gathered int8 view. No fp copy of the cache is ever built.
     """
     B = x.shape[0]
     lengths = attn_ctx["lengths"].astype(jnp.int32)      # (B,)
@@ -678,13 +694,38 @@ def paged_attention_decode_step(params, cfg: ModelConfig, x, cache, attn_ctx,
     wpos = jnp.minimum(lengths, bt.shape[1] * page - 1)  # (B,)
     page_ids = bt[bidx, wpos // page]                    # (B,)
     offs = wpos % page                                   # (B,)
+    new_len = lengths + 1
+    from repro.core.execution import current_plan
+    use_kernels = current_plan().use_kernels
+    if "k_scale_pages" in cache:                         # int8 page pools
+        k8, ks = quantize_kv(k[:, 0])                    # (B,KV,hd),(B,KV)
+        v8, vs = quantize_kv(v[:, 0])
+        k_pages = k_pages.at[page_ids, :, offs].set(k8)
+        v_pages = v_pages.at[page_ids, :, offs].set(v8)
+        ks_pages = cache["k_scale_pages"].at[page_ids, :, offs].set(ks)
+        vs_pages = cache["v_scale_pages"].at[page_ids, :, offs].set(vs)
+        if use_kernels:
+            from repro.kernels.ops import paged_decode_attention
+            out = paged_decode_attention(q, k_pages, v_pages, new_len, bt,
+                                         k_scales=ks_pages,
+                                         v_scales=vs_pages, window=window,
+                                         softcap=cfg.attn_logit_softcap)
+        else:
+            out = decode_attention_int8(
+                q, paged_gather_kv(k_pages, bt),
+                paged_gather_scale(ks_pages, bt),
+                paged_gather_kv(v_pages, bt),
+                paged_gather_scale(vs_pages, bt), new_len, window=window,
+                softcap=cfg.attn_logit_softcap)
+        y = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1),
+                       params["wo"]["kernel"])
+        return y, {"k_pages": k_pages, "v_pages": v_pages,
+                   "k_scale_pages": ks_pages, "v_scale_pages": vs_pages}
     k_pages = k_pages.at[page_ids, :, offs].set(
         k[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[page_ids, :, offs].set(
         v[:, 0].astype(v_pages.dtype))
-    new_len = lengths + 1
-    from repro.core.execution import current_plan
-    if current_plan().use_kernels:
+    if use_kernels:
         from repro.kernels.ops import paged_decode_attention
         out = paged_decode_attention(q, k_pages, v_pages, new_len, bt,
                                      window=window,
@@ -710,6 +751,41 @@ def paged_attention_decode_step(params, cfg: ModelConfig, x, cache, attn_ctx,
 # layers — ring (ATTN_LOCAL) caches overwrite prefix slots mid-chunk and
 # mamba needs cross-chunk state carry (ROADMAP open items).
 # ---------------------------------------------------------------------------
+
+def chunk_attention_int8(q, k_q, k_scale, v_q, v_scale, q_positions,
+                         kv_positions, kv_len, *, softcap: float = 0.0):
+    """Chunk queries against an int8 context with folded scales — the chunk
+    counterpart of ``decode_attention_int8``: BOTH dots run on int8 operands
+    with int32 accumulation, so the dequantized fp context never
+    materializes. q: (B, Sc, H, hd) fp; k_q/v_q: (B, Skv, KV, hd) int8;
+    k_scale/v_scale: (B, Skv, KV) fp32. Masking as in ``chunk_attention``.
+    Returns (B, Sc, H, hd)."""
+    B, Sc, H, hd = q.shape
+    Skv, KV = k_q.shape[1], k_q.shape[2]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sc, KV, qpk, hd)
+    q8, q_sc = quantize_kv(qg)                            # (B,Sc,KV,qpk,.)
+    s_i32 = jnp.einsum("bqgph,bkgh->bgpqk", q8.astype(jnp.int32),
+                       k_q.astype(jnp.int32))             # int32 accum
+    s = (s_i32.astype(jnp.float32)
+         * q_sc.transpose(0, 2, 3, 1)[..., None]          # (B,KV,qpk,Sc,1)
+         * k_scale.transpose(0, 2, 1)[:, :, None, None, :]) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (kv_positions[:, None, :] <= q_positions[:, :, None])   # causal
+    valid &= (kv_positions < kv_len[:, None])[:, None, :]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (chunk padding) would softmax to uniform: zero them
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    pv = p * v_scale.transpose(0, 2, 1)[:, :, None, None, :]  # fold v scales
+    pv8, pv_sc = quantize_kv(pv)                          # rowwise over Skv
+    out_i32 = jnp.einsum("bgpqk,bkgh->bqgph", pv8.astype(jnp.int32),
+                         v_q.astype(jnp.int32))
+    out = out_i32.astype(jnp.float32) * pv_sc.transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(B, Sc, H, hd).astype(q.dtype)
+
 
 def chunk_attention(q, k_ctx, v_ctx, q_positions, kv_positions, kv_len, *,
                     softcap: float = 0.0):
@@ -767,24 +843,22 @@ def attention_chunk_step(params, cfg: ModelConfig, x, cache, chunk_ctx):
         v_cache = cache["v"].at[row, idx].set(v8, mode="drop")
         ks_c = cache["k_scale"].at[row, idx].set(ks, mode="drop")
         vs_c = cache["v_scale"].at[row, idx].set(vs, mode="drop")
-        # chunk attention runs on the dequantized gathered context (the
-        # decode half keeps the pure-int8 dot path)
-        kd = (k_cache[slots].astype(jnp.float32)
-              * ks_c[slots][..., None]).astype(q.dtype)
-        vd = (v_cache[slots].astype(jnp.float32)
-              * vs_c[slots][..., None]).astype(q.dtype)
         new_cache = {"k": k_cache, "v": v_cache, "k_scale": ks_c,
                      "v_scale": vs_c, "pos": pos_arr, "len": len_arr}
+        out = chunk_attention_int8(q, k_cache[slots], ks_c[slots],
+                                   v_cache[slots], vs_c[slots], positions,
+                                   pos_arr[slots], total,
+                                   softcap=cfg.attn_logit_softcap)
     else:
         k_cache = cache["k"].at[row, idx].set(
             k.astype(cache["k"].dtype), mode="drop")
         v_cache = cache["v"].at[row, idx].set(
             v.astype(cache["v"].dtype), mode="drop")
-        kd, vd = k_cache[slots], v_cache[slots]
         new_cache = {"k": k_cache, "v": v_cache, "pos": pos_arr,
                      "len": len_arr}
-    out = chunk_attention(q, kd, vd, positions, pos_arr[slots], total,
-                          softcap=cfg.attn_logit_softcap)
+        out = chunk_attention(q, k_cache[slots], v_cache[slots], positions,
+                              pos_arr[slots], total,
+                              softcap=cfg.attn_logit_softcap)
     y = jnp.einsum("bsh,hd->bsd", out.reshape(Bc, Sc, -1),
                    params["wo"]["kernel"])
     return y, new_cache
@@ -799,7 +873,9 @@ def paged_attention_chunk_step(params, cfg: ModelConfig, x, cache, chunk_ctx):
     over the block-table-addressed prefix + chunk: the Pallas
     ``chunked_prefill_attention`` kernel when the plan lowers through
     kernels (scalar-prefetch block tables, dead-page DMAs elided), else the
-    live-page-gather XLA fallback. Returns (y, new_cache)."""
+    live-page-gather XLA fallback. int8 page pools quantize the chunk
+    before the scatter and run the scaled-dot paths (kernel or
+    ``chunk_attention_int8``). Returns (y, new_cache)."""
     Bc, Sc, _ = x.shape
     starts = chunk_ctx["starts"].astype(jnp.int32)
     clens = chunk_ctx["chunk_lens"].astype(jnp.int32)
@@ -813,11 +889,39 @@ def paged_attention_chunk_step(params, cfg: ModelConfig, x, cache, chunk_ctx):
     col = jnp.minimum(positions // page, maxp - 1)
     page_ids = jnp.where(valid, bt[jnp.arange(Bc)[:, None], col], 0)
     offs = positions % page
-    k_pages = k_pages.at[page_ids, :, offs].set(k.astype(k_pages.dtype))
-    v_pages = v_pages.at[page_ids, :, offs].set(v.astype(v_pages.dtype))
     total = starts + clens
     from repro.core.execution import current_plan
-    if current_plan().use_kernels:
+    use_kernels = current_plan().use_kernels
+    if "k_scale_pages" in cache:                         # int8 page pools
+        k8, ks = quantize_kv(k)                          # (Bc,Sc,KV,·)
+        v8, vs = quantize_kv(v)
+        k_pages = k_pages.at[page_ids, :, offs].set(k8)
+        v_pages = v_pages.at[page_ids, :, offs].set(v8)
+        ks_pages = cache["k_scale_pages"].at[page_ids, :, offs].set(ks)
+        vs_pages = cache["v_scale_pages"].at[page_ids, :, offs].set(vs)
+        if use_kernels:
+            from repro.kernels.ops import chunked_prefill_attention
+            out = chunked_prefill_attention(q, k_pages, v_pages, total,
+                                            starts, bt, k_scales=ks_pages,
+                                            v_scales=vs_pages,
+                                            softcap=cfg.attn_logit_softcap)
+        else:
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(maxp * page, dtype=jnp.int32)[None],
+                (Bc, maxp * page))
+            out = chunk_attention_int8(
+                q, paged_gather_kv(k_pages, bt),
+                paged_gather_scale(ks_pages, bt),
+                paged_gather_kv(v_pages, bt),
+                paged_gather_scale(vs_pages, bt), positions, kv_pos, total,
+                softcap=cfg.attn_logit_softcap)
+        y = jnp.einsum("bsh,hd->bsd", out.reshape(Bc, Sc, -1),
+                       params["wo"]["kernel"])
+        return y, {"k_pages": k_pages, "v_pages": v_pages,
+                   "k_scale_pages": ks_pages, "v_scale_pages": vs_pages}
+    k_pages = k_pages.at[page_ids, :, offs].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_ids, :, offs].set(v.astype(v_pages.dtype))
+    if use_kernels:
         from repro.kernels.ops import chunked_prefill_attention
         out = chunked_prefill_attention(q, k_pages, v_pages, total, starts,
                                         bt, softcap=cfg.attn_logit_softcap)

@@ -110,10 +110,23 @@ def block_init_cache(cfg: ModelConfig, kind: LayerKind, batch: int,
             raise ValueError(
                 f"paged KV cache supports full self-attention decoder "
                 f"layers only, got mixer={kind.mixer}")
-        if kv_quant:
-            raise NotImplementedError("paged KV cache + int8 KV quant")
         kv = cfg.num_kv_heads
         hd = cfg.resolved_head_dim
+        if kv_quant:
+            # int8 value pools + fp32 per-(token, kv-head) scale pools
+            # addressed by the SAME block tables (ROADMAP "DESIGN: int8 KV
+            # pages"): per-token bytes drop from 2·hd·itemsize to
+            # 2·(hd + 4) — the scale rider streams with its page.
+            return {
+                "k_pages": jnp.zeros((num_pages, kv, page_size, hd),
+                                     jnp.int8),
+                "v_pages": jnp.zeros((num_pages, kv, page_size, hd),
+                                     jnp.int8),
+                "k_scale_pages": jnp.zeros((num_pages, kv, page_size),
+                                           jnp.float32),
+                "v_scale_pages": jnp.zeros((num_pages, kv, page_size),
+                                           jnp.float32),
+            }
         return {"k_pages": jnp.zeros((num_pages, kv, page_size, hd), dtype),
                 "v_pages": jnp.zeros((num_pages, kv, page_size, hd), dtype)}
     if kind.mixer == MAMBA:

@@ -119,6 +119,7 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_len: int, use_duplex: bool = True,
                  use_kernels: bool = False, kv_quant: bool = False,
+                 kv_dtype: Optional[str] = None,
                  moe_ragged: bool = True, moe_c_block: int = 256,
                  preemption: str = "none", kv_layout: str = "dense",
                  kv_page_size: int = 64, kv_num_pages: Optional[int] = None,
@@ -135,9 +136,12 @@ class ServingEngine:
         self.preemptions = 0
         self.cfg = cfg
         self.params = params
-        self.kv = KVManager(cfg, max_slots, max_len, kv_quant=kv_quant,
-                            layout=kv_layout, page_size=kv_page_size,
-                            num_pages=kv_num_pages)
+        # kv_dtype overrides the cache storage dtype (e.g. a bf16 KV cache
+        # under fp32 compute); kv_quant=True stores int8 + fp32 scales and
+        # wins over kv_dtype for the value pools.
+        self.kv = KVManager(cfg, max_slots, max_len, dtype=kv_dtype,
+                            kv_quant=kv_quant, layout=kv_layout,
+                            page_size=kv_page_size, num_pages=kv_num_pages)
         self.paged = self.kv.paged
         if self.paged and preemption != "none":
             raise NotImplementedError(
@@ -202,9 +206,11 @@ class ServingEngine:
         # decode-attention streamed-bytes accounting (K+V only; mamba mixers
         # hold O(1) state and cross-attn KV is written once, both excluded).
         # Dense streams each layer's whole buffer — max_len for full
-        # attention, the ring (window+1) for ATTN_LOCAL.
-        per_tok = (2 * cfg.num_kv_heads * cfg.resolved_head_dim *
-                   jnp.dtype(cfg.dtype).itemsize)
+        # attention, the ring (window+1) for ATTN_LOCAL. Bytes reflect the
+        # ACTUAL cache dtype: int8 caches stream 1-byte values plus their
+        # fp32 per-(token, kv-head) scales, not the compute dtype.
+        from repro.serving.kvmanager import kv_token_bytes
+        per_tok = kv_token_bytes(cfg, kv_quant=kv_quant, dtype=kv_dtype)
         n_attn = 0
         dense_tokens_per_slot = 0
         for seg in cfg.segments:
@@ -679,7 +685,8 @@ class ServingEngine:
             # counts — only the width is static.
             k_cold = self.planner.k_cold_static(
                 self._expected_counts(mix.num_tokens))
-        splan = plan_stage(self.cfg, mix) if mix.num_tokens else None
+        splan = (plan_stage(self.cfg, mix, kv_quant=self.kv.kv_quant)
+                 if mix.num_tokens else None)
 
         kv_bytes = 0
         counts_sum = None

@@ -41,6 +41,14 @@ re-introduce dead-byte streaming within the last partial page. The default
 (64) matches the engine's context bucketing; see ROADMAP.md "DESIGN: paged
 KV cache".
 
+int8 pages (``kv_quant=True``): the value pools are int8 and each layer
+additionally holds fp32 per-(token, kv-head) scale pools addressed by the
+same block tables, so per-token bytes drop from ``2·KV·hd·itemsize`` to
+``2·KV·(hd + 4)`` — ~2x the token capacity per HBM byte at hd=64/fp16
+(``pages_for_budget`` does the budget math) and ~half the streamed decode
+bytes (``kv_token_bytes`` is the shared conversion factor). Scale bytes are
+counted in ``bytes_per_slot`` automatically (it sums actual cache leaves).
+
 Slot/page id allocation is heap-ordered (lowest id first) and O(log n) per
 allocate/free.
 """
@@ -53,12 +61,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import MAMBA, ModelConfig
 from repro.models.model import init_cache
 
 
 def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def kv_token_bytes(cfg: ModelConfig, *, kv_quant: bool = False,
+                   dtype=None) -> int:
+    """K+V bytes one cached token occupies per attention layer, including
+    the fp32 per-(token, kv-head) scales when quantized. This is THE
+    conversion factor for both capacity math and streamed-bytes accounting
+    — int8 turns ``2·KV·hd·itemsize`` into ``2·KV·(hd + 4)``."""
+    item = 1 if kv_quant else jnp.dtype(dtype or cfg.dtype).itemsize
+    scale_bytes = 4 if kv_quant else 0
+    return 2 * cfg.num_kv_heads * (cfg.resolved_head_dim * item + scale_bytes)
+
+
+def pages_for_budget(cfg: ModelConfig, page_size: int, budget_bytes: int, *,
+                     kv_quant: bool = False, dtype=None) -> int:
+    """How many pool pages (excluding the reserved null page) fit a given
+    HBM budget across all attention layers — the paper's Fig. 5(c) capacity
+    knob. int8 pools admit ~2x the pages (and therefore ~2x the concurrent
+    tokens) of fp16 pools at the same budget."""
+    n_attn = sum(seg.repeats
+                 for seg in cfg.segments
+                 for kind in seg.pattern if kind.mixer != MAMBA)
+    per_page = n_attn * page_size * kv_token_bytes(cfg, kv_quant=kv_quant,
+                                                   dtype=dtype)
+    return max(budget_bytes // per_page, 0)
 
 
 class KVManager:
@@ -76,8 +109,6 @@ class KVManager:
         heapq.heapify(self._free)
         self._active: set = set()
         if self.paged:
-            if kv_quant:
-                raise NotImplementedError("paged KV cache + int8 KV quant")
             self.page_size = page_size
             self.max_pages_per_slot = _cdiv(max_len, page_size)
             if num_pages is None:
@@ -87,7 +118,7 @@ class KVManager:
                 num_pages = 1 + max_slots * self.max_pages_per_slot
             assert num_pages >= 2, "need at least the null page + one page"
             self.num_pages = num_pages
-            self.cache = init_cache(cfg, max_slots, max_len, dtype, False,
+            self.cache = init_cache(cfg, max_slots, max_len, dtype, kv_quant,
                                     paged=True, page_size=page_size,
                                     num_pages=num_pages)
             self._page_free: List[int] = list(range(1, num_pages))
