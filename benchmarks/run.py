@@ -32,6 +32,7 @@ FIGS = [
     "moe_ragged",            # ragged vs padded MoE kernels (PR 2 tentpole)
     "prefill_chunked",       # chunked vs monolithic prefill (PR 3 tentpole)
     "decode_int8",           # int8 vs fp16 KV pages (PR 4 tentpole)
+    "prefix_share",          # prefix sharing + preemption (PR 5 tentpole)
 ]
 
 

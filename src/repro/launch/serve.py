@@ -33,6 +33,21 @@ def main(argv=None) -> int:
                    help="paged = shared KV page pool; decode streams live "
                         "pages only (full-attention decoder archs)")
     p.add_argument("--kv-page-size", type=int, default=64)
+    p.add_argument("--prefix-share", action="store_true",
+                   help="refcounted copy-on-write prefix sharing (paged "
+                        "only): prompts sharing a full-page prefix map the "
+                        "resident pages at refcount+1 and skip those "
+                        "prefill stages")
+    p.add_argument("--oversubscribe", type=float, default=None, metavar="F",
+                   help="paged only: size the page pool at F x the dense "
+                        "worst case (e.g. 0.5) and enable recompute "
+                        "preemption — page-granular eviction reclaims "
+                        "capacity when the pool runs out")
+    p.add_argument("--preemption", choices=("none", "migrate", "recompute"),
+                   default=None,
+                   help="eviction policy under capacity pressure (default: "
+                        "none, or recompute when --oversubscribe is set; "
+                        "migrate is dense-only)")
     p.add_argument("--kv-quant", action="store_true",
                    help="int8 KV cache (+fp32 per-token scales): halves the "
                         "streamed decode KV bytes and ~doubles the token "
@@ -57,21 +72,44 @@ def main(argv=None) -> int:
     cfg = resolve_config(args.arch, args.reduced)
     if cfg.is_encoder_decoder:
         raise SystemExit("enc-dec archs serve via serve_step (see dryrun)")
+    if ((args.prefix_share or args.oversubscribe is not None)
+            and args.kv_layout != "paged"):
+        raise SystemExit("--prefix-share/--oversubscribe need "
+                         "--kv-layout paged")
+    num_pages = None
+    preemption = args.preemption or "none"
+    if args.oversubscribe is not None:
+        if args.oversubscribe <= 0:
+            raise SystemExit("--oversubscribe needs a positive pool factor")
+        dense_pages = args.max_slots * (-(-args.max_len // args.kv_page_size))
+        num_pages = 1 + max(2, int(args.oversubscribe * dense_pages))
+        if args.preemption is None:
+            preemption = "recompute"
     params = init_model(jax.random.PRNGKey(args.seed), cfg)
     eng = ServingEngine(cfg, params, max_slots=args.max_slots,
                         max_len=args.max_len,
                         kv_layout=args.kv_layout,
                         kv_page_size=args.kv_page_size,
+                        kv_num_pages=num_pages,
                         kv_quant=args.kv_quant,
+                        prefix_share=args.prefix_share,
+                        preemption=preemption,
                         use_duplex=not args.no_duplex,
                         use_kernels=args.kernels,
                         moe_ragged=not args.no_moe_ragged,
                         prefill_chunk_tokens=args.prefill_chunk)
     rng = np.random.default_rng(args.seed)
+    # with --prefix-share, most requests open with a common full-page
+    # system prefix (the workload sharing exploits)
+    sys_prefix = (rng.integers(0, cfg.vocab_size,
+                               2 * args.kv_page_size).tolist()
+                  if args.prefix_share else [])
     reqs = []
     for i in range(args.requests):
         l_in = max(4, int(rng.normal(args.l_in, args.l_in * 0.2)))
         prompt = rng.integers(0, cfg.vocab_size, l_in).tolist()
+        if args.prefix_share and i % 10 != 0:
+            prompt = (sys_prefix + prompt)[:args.max_len - args.l_out - 1]
         reqs.append(Request(rid=i, prompt=prompt,
                             max_new_tokens=args.l_out))
     done = eng.run(reqs)
@@ -104,6 +142,14 @@ def main(argv=None) -> int:
         print(f"[serve] streamed KV bytes/stage ({flavor}): "
               f"mean={np.mean(kvb)/1e3:.1f}kB max={max(kvb)/1e3:.1f}kB "
               f"total={sum(kvb)/1e6:.2f}MB")
+    if args.prefix_share:
+        shp = max((r.shared_kv_pages for r in eng.reports), default=0)
+        print(f"[serve] prefix sharing: {eng.shared_tokens_skipped} prefill "
+              f"positions skipped, peak shared pages={shp}, "
+              f"COW copies={eng.kv.cow_copies}")
+    if preemption != "none" or args.oversubscribe is not None:
+        print(f"[serve] preemption({preemption}): {eng.preemptions} "
+              f"evictions, peak concurrent batch={eng.peak_active}")
     return 0
 
 

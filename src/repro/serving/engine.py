@@ -40,10 +40,23 @@ cannot serve yet — mamba / windowed / cross-attention mixers).
 KV layouts: ``kv_layout="dense"`` decodes over all slots against the
 ``max_slots × max_len`` cache (seed behavior); ``kv_layout="paged"`` decodes
 a gathered active-slot batch against a shared KV page pool, so per-stage HBM
-traffic scales with occupancy × live context (ROADMAP.md "DESIGN: paged KV
-cache"). Chunk rows address the same cache: dense chunks write their span
-into their slot's row; paged chunks grow their block table (``ensure_len``)
-and write into their pages.
+traffic scales with occupancy × live context (docs/architecture.md). Chunk
+rows address the same cache: dense chunks write their span into their slot's
+row; paged chunks grow their block table (``ensure_len``) and write into
+their pages.
+
+Pages are refcounted and copy-on-write (PR 5): with ``prefix_share=True``,
+prompts whose full-page token prefix is already resident map those pages at
+refcount+1 and their chunk spans start at the first unshared position
+(shared prefill stages are skipped outright; a shared page is
+copied-on-write before any scatter targets it). With
+``preemption="recompute"``, paged pools may be oversubscribed
+(``kv_num_pages`` below worst case): when the next stage's growth would
+exhaust the pool, the lowest-priority request's pages are decref'd — shared
+pages survive under their other owners — and it replays through the
+recompute path. Accounting (``kv_bytes_streamed``, ``live_pages``) counts a
+shared page once. The kernels need no changes: block tables already
+indirect every access.
 """
 from __future__ import annotations
 
@@ -113,6 +126,9 @@ class StageReport:
     # MoE stream (decode + chunk) — the quantity chunking stabilizes
     chunk_tokens: int = 0
     stage_tokens: int = 0
+    # pages mapped by >1 owner after this stage (paged + prefix_share);
+    # kv_bytes_streamed already counts each unique page once
+    shared_kv_pages: int = 0
 
 
 class ServingEngine:
@@ -123,6 +139,7 @@ class ServingEngine:
                  moe_ragged: bool = True, moe_c_block: int = 256,
                  preemption: str = "none", kv_layout: str = "dense",
                  kv_page_size: int = 64, kv_num_pages: Optional[int] = None,
+                 prefix_share: bool = False,
                  sampling: SamplingParams = SamplingParams(),
                  max_prefill_seqs: int = 4, max_prefill_tokens: int = 8192,
                  prefill_chunk_tokens: Optional[int] = None,
@@ -143,10 +160,19 @@ class ServingEngine:
                             kv_quant=kv_quant, layout=kv_layout,
                             page_size=kv_page_size, num_pages=kv_num_pages)
         self.paged = self.kv.paged
-        if self.paged and preemption != "none":
+        if self.paged and preemption == "migrate":
             raise NotImplementedError(
-                "preemption gathers dense slot rows; paged eviction is "
-                "page-table surgery and not implemented yet")
+                "migrate gathers dense slot rows to host; paged preemption "
+                "uses the recompute-replay path (preemption='recompute')")
+        if prefix_share and not self.paged:
+            raise ValueError(
+                "prefix_share needs kv_layout='paged' (sharing maps "
+                "refcounted pages between block tables)")
+        self.prefix_share = bool(prefix_share)
+        # prefill positions skipped because their KV was already resident
+        # (shared-prefix admissions + post-eviction replays that re-matched)
+        self.shared_tokens_skipped = 0
+        self.peak_active = 0
         # the unified token-stream stage covers full self-attention decoder
         # stacks; mamba needs cross-chunk state carry and ring (ATTN_LOCAL)
         # caches overwrite prefix slots mid-chunk (ROADMAP open items) —
@@ -400,7 +426,44 @@ class ServingEngine:
                 f"prompt of {req.l_in} tokens cannot fit max_len="
                 f"{self.kv.max_len} KV (plus at least one generated token); "
                 f"raise max_len — prompts are never silently truncated")
+        self._match_prefix(req)
         self.scheduler.submit(req)
+
+    def _match_prefix(self, req: Request) -> None:
+        """Prefix sharing: match the request's full-page token prefix
+        against resident pages and pin the hits, so they survive the queue
+        wait. ``prefill_pos`` moves to the first unshared position — capped
+        at target-1 so the final position is always processed (the engine
+        samples the first token from its logits; its page, shared, is
+        copied-on-write before the write). Idempotent and monotonic: called
+        at submit AND again while queued (the index grows as earlier
+        admissions prefill), it only ever upgrades to a longer match,
+        releasing the shorter pin. Also used for recompute-replays, whose
+        token stream is prompt + generated-so-far. Cheap in steady state:
+        an unchanged index (kv.index_version) skips the walk entirely, as
+        does a request already matched to its cap."""
+        if not (self.paged and self.prefix_share):
+            return
+        if req.match_version == self.kv.index_version:
+            return
+        req.match_version = self.kv.index_version
+        total = min(req.l_in + len(req.output), self.kv.max_len)
+        if req.shared_pages is not None and \
+                len(req.shared_pages) >= total // self.kv.page_size:
+            return                          # every full page already matched
+        tokens = req.token_stream(total)
+        pids = self.kv.pin_prefix(tokens)
+        old = req.shared_pages or []
+        if len(pids) <= len(old):
+            self.kv.unpin(pids)
+            return
+        if old:
+            self.kv.unpin(old)
+        prev_start = req.prefill_pos
+        start = min(len(pids) * self.kv.page_size, total - 1)
+        req.shared_pages = pids
+        req.prefill_pos = start
+        self.shared_tokens_skipped += start - prev_start
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -436,11 +499,18 @@ class ServingEngine:
 
     # ------------------------------------------------------------ preemption
     def _maybe_preempt(self) -> None:
-        """SVIII-C: if a fresh request is starving with zero free slots,
-        evict a running request (migrate its KV to host, or drop it for
-        later recomputation) to reclaim capacity."""
+        """SVIII-C: reclaim capacity under pressure. Slot pressure (both
+        layouts): a fresh request starving with zero free slots evicts a
+        running request (migrate its KV to host, or drop it for later
+        recomputation). Page pressure (paged): if the pool cannot cover the
+        next stage's growth, evict lowest-priority requests page-granularly
+        first — this is what makes pool oversubscription safe."""
         from repro.serving import preemption as pre
-        if self.preemption == "none" or self.kv.free_slots > 0:
+        if self.preemption == "none":
+            return
+        if self.paged:
+            self._preempt_for_pages()
+        if self.kv.free_slots > 0:
             return
         q = self.scheduler.queue
         if not q or q[0].was_preempted:
@@ -448,13 +518,83 @@ class ServingEngine:
         victim = pre.pick_victim(self.scheduler.running)
         if victim is None:
             return
+        self._evict(victim)
+
+    def _evict(self, victim: Request) -> None:
+        from repro.serving import preemption as pre
         self._slot_req.pop(victim.slot, None)
         if self.preemption == "migrate":
             pre.migrate_out(self.kv, victim)
         else:
             pre.recompute_out(self.kv, victim)
         self.scheduler.resubmit_preempted(victim)
+        # the replay can re-match whatever shared prefix pages survived the
+        # eviction under their other owners (eviction may not change the
+        # index, so force a fresh walk)
+        victim.match_version = -1
+        self._match_prefix(victim)
         self.preemptions += 1
+
+    def _stage_page_need(self) -> int:
+        """Worst-case fresh pages the NEXT stage's already-admitted work
+        needs: one per decoding slot whose next token opens a page, the
+        next chunk's growth per in-flight prefill, plus one COW page of
+        slack per prefill (a shared capped last page copies on write)."""
+        page = self.kv.page_size
+        need = 0
+        for r in self.scheduler.running:
+            if r.slot >= 0 and int(self.kv.lens[r.slot]) % page == 0:
+                need += 1
+        budget = self.prefill_chunk_tokens or self.kv.max_len
+        for r in self.scheduler.prefilling:
+            if r.slot < 0:
+                continue
+            end = min(r.prefill_pos + budget, r.prefill_total)
+            need += max(-(-end // page) - self.kv.slot_page_count(r.slot), 0)
+            if self.prefix_share:
+                need += 1
+        return need
+
+    def _lifetime_pages(self, req: Request) -> int:
+        """Pages ``req`` needs by the time it finishes generating (its
+        final decode write covers position l_in + max_new_tokens - 1),
+        capped at max_len."""
+        total = min(req.l_in + req.max_new_tokens, self.kv.max_len)
+        return -(-total // self.kv.page_size)
+
+    def _remaining_demand_pages(self) -> int:
+        """Fresh pages the already-admitted work still needs over its whole
+        REMAINING LIFETIME (prefill + every future decode token), plus COW
+        slack per shared prefill. With preemption disabled this is what
+        admission must reserve so ``ensure_len`` can never fail."""
+        need = 0
+        for r in self.scheduler.running + self.scheduler.prefilling:
+            if r.slot < 0:
+                continue
+            need += max(self._lifetime_pages(r)
+                        - self.kv.slot_page_count(r.slot), 0)
+        if self.prefix_share:
+            need += len(self.scheduler.prefilling)
+        return need
+
+    def _preempt_for_pages(self) -> None:
+        """Evict until the pool covers the next stage's growth ("alloc
+        would fail" → page-granular eviction, ISSUE/paper SVIII-C). Shared
+        pages survive eviction under their other owners, so evicting one
+        branch of a shared prefix reclaims only its private tail. Never
+        evicts the last resident request — a single context that outgrows
+        the pool cannot be saved by eviction, and ensure_len's error is the
+        honest outcome."""
+        from repro.serving import preemption as pre
+        while self.kv.free_pages < self._stage_page_need():
+            cands = [r for r in (self.scheduler.running
+                                 + self.scheduler.prefilling) if r.slot >= 0]
+            if len(cands) <= 1:
+                return
+            victim = pre.pick_victim_paged(cands)
+            if victim is None:
+                return
+            self._evict(victim)
 
     def _admit_restored(self, req, tnow: float) -> None:
         """Re-admit a migrated request: scatter its host-saved KV back into
@@ -469,6 +609,18 @@ class ServingEngine:
         req.state = RequestState.DECODE
 
     # ---------------------------------------------------------------- stages
+    def _unique_page_bytes(self, slot_pages) -> int:
+        """Streamed-KV bytes for a paged stage: UNIQUE pages across all the
+        stage's readers (slot_pages = [(slot, live page count)]). A
+        shared-prefix page read by N rows is resident once and counted
+        once, so sharing shows up in the accounting exactly as it does in
+        the pool."""
+        seen = set()
+        for s, n in slot_pages:
+            seen.update(self.kv.block_tables[s, :n].tolist())
+        seen.discard(0)
+        return len(seen) * self.kv.page_size * self._kv_bytes_per_token
+
     def _run_decode_only(self, decision: StageDecision, k_cold: int,
                          tnow: float):
         """Decoding-only stage (the dominant kind). Returns
@@ -478,10 +630,21 @@ class ServingEngine:
             slots = [r.slot for r in decision.decoding]
             live_pages = []                # per-slot pages after this write
             for s in slots:
-                target = min(int(self.kv.lens[s]) + 1, self.kv.max_len)
+                cur = int(self.kv.lens[s])
+                target = min(cur + 1, self.kv.max_len)
                 self.kv.ensure_len(s, target)
+                if self.prefix_share:
+                    # a decode write never targets a full shared page in
+                    # steady state (sharing is full-page only), but the
+                    # invariant "no scatter into refcount>1 pages" is
+                    # enforced here, not assumed. The write position clamps
+                    # to max_len-1 at capacity (the kernel clamps the same
+                    # way), so a capped sequence's overwrite COWs/deindexes
+                    # its last page instead of mutating an indexed one.
+                    wpos = min(cur, self.kv.max_len - 1)
+                    self.kv.ensure_writable(s, wpos, wpos + 1)
                 live_pages.append(-(-target // page))
-            kv_bytes = sum(live_pages) * page * self._kv_bytes_per_token
+            kv_bytes = self._unique_page_bytes(zip(slots, live_pages))
             nb = _bucket(len(slots), self.decode_bs_buckets)
             mp = _bucket(max(live_pages), self.pages_buckets)
             tokens = np.zeros((nb, 1), np.int32)
@@ -533,13 +696,19 @@ class ServingEngine:
                 s = self.kv.allocate()
                 c.req.slot = s
                 self._slot_req[s] = c.req
+                if c.req.shared_pages:
+                    # transfer the submit-time pin into the block table:
+                    # the shared prefix is mapped at refcount+1, and this
+                    # chunk starts at the first unshared position
+                    self.kv.adopt_prefix(s, c.req.shared_pages)
+                    c.req.shared_pages = None
         nc_b = _bucket(len(chunks), self.seq_buckets)
         sc_b = _bucket(max(c.tokens for c in chunks), self.chunk_len_buckets)
         ctokens = np.zeros((nc_b, sc_b), np.int32)
         starts = np.zeros((nc_b,), np.int32)
         clens = np.zeros((nc_b,), np.int32)
         for i, c in enumerate(chunks):
-            seq = (list(c.req.prompt) + list(c.req.output))[c.start:c.end]
+            seq = c.req.token_stream(c.end)[c.start:]
             ctokens[i, :len(seq)] = seq
             starts[i] = c.start
             clens[i] = c.tokens
@@ -548,8 +717,15 @@ class ServingEngine:
             dslots = [r.slot for r in decision.decoding]
             live_pages = [1]
             for s in dslots:
-                target = min(int(self.kv.lens[s]) + 1, self.kv.max_len)
+                cur = int(self.kv.lens[s])
+                target = min(cur + 1, self.kv.max_len)
                 self.kv.ensure_len(s, target)
+                if self.prefix_share:
+                    # same no-scatter-into-shared-pages invariant as the
+                    # decode-only stage (incl. the max_len-1 write clamp)
+                    # — enforced on BOTH decode paths
+                    wpos = min(cur, self.kv.max_len - 1)
+                    self.kv.ensure_writable(s, wpos, wpos + 1)
                 live_pages.append(-(-target // page))
             nb = _bucket(max(len(dslots), 1), self.decode_bs_buckets)
             mp = _bucket(max(live_pages), self.pages_buckets)
@@ -563,13 +739,18 @@ class ServingEngine:
             cpages = []
             for c in chunks:
                 self.kv.ensure_len(c.req.slot, c.end)
+                if self.prefix_share:
+                    # copy-on-write any shared page this chunk scatters
+                    # into (the capped last page of a fully-shared prompt)
+                    self.kv.ensure_writable(c.req.slot, c.start, c.end)
                 cpages.append(-(-c.end // page))
             mpc = _bucket(max(cpages), self.pages_buckets)
             bt_c = np.zeros((nc_b, mpc), np.int32)
             for i, c in enumerate(chunks):
                 bt_c[i] = self.kv.block_tables[c.req.slot, :mpc]
-            kv_bytes = ((sum(live_pages[1:]) + sum(cpages)) * page
-                        * self._kv_bytes_per_token)
+            kv_bytes = self._unique_page_bytes(
+                list(zip(dslots, live_pages[1:]))
+                + [(c.req.slot, n) for c, n in zip(chunks, cpages)])
             moe_caps = self._moe_caps(nb + nc_b * sc_b, k_cold)
             fn = self._mixed_fn(k_cold, *moe_caps, nc_b, sc_b, nb, mp, mpc)
             dn, cn, self.kv.cache, counts = fn(
@@ -586,6 +767,11 @@ class ServingEngine:
                 self.kv.lens[np.asarray(dslots)] += 1
             for c in chunks:
                 self.kv.lens[c.req.slot] = c.end
+                if self.prefix_share:
+                    # index the newly-full pages under their token ids so
+                    # later prompts (and post-eviction replays) can share
+                    toks = c.req.token_stream(c.end)
+                    self.kv.register_prefix(c.req.slot, toks)
         else:
             cslots = np.zeros((nc_b,), np.int32)   # dense chunk -> cache row
             for i, c in enumerate(chunks):
@@ -627,7 +813,7 @@ class ServingEngine:
         # whole-prompt spans; a recompute-preempted replay covers prompt +
         # generated, capped at max_len by the scheduler — and max_len is
         # always a bucket, so no sequence outgrows its slab.
-        seqs = [(list(c.req.prompt) + list(c.req.output))[:c.end]
+        seqs = [c.req.token_stream(c.end)
                 for c in decision.chunks]
         max_l = max(len(sq) for sq in seqs)
         l_b = _bucket(max_l, self.prefill_len_buckets)
@@ -657,21 +843,48 @@ class ServingEngine:
         t0 = time.monotonic()
         self._maybe_preempt()
         free = self.kv.free_slots
+        if self.paged and self.prefix_share:
+            # refresh admissible queue heads against the CURRENT index —
+            # requests submitted together find nothing at submit time; by
+            # their admission stage the donor's prefix pages are resident
+            for r in list(self.scheduler.queue
+                          )[:self.scheduler.max_prefill_seqs]:
+                if r.saved_cache is None:
+                    self._match_prefix(r)
         if self.paged:
-            # admission backpressure for oversubscribed pools: only admit
-            # when the pool can still hold one worst-case prompt plus a page
-            # of decode growth per running sequence and a chunk of growth
-            # per in-flight prefill. Running sequences can still exhaust a
-            # badly undersized pool (ensure_len raises — there is no paged
-            # preemption yet), but admissions won't cause it.
+            # admission backpressure: walk the queue in admission order,
+            # accumulating each candidate's demand minus the prefix pages
+            # it already shares (sharing directly raises the admitted
+            # batch), and cap this stage's admissions at the prefix that
+            # still fits. Without preemption the demand is the WHOLE
+            # LIFETIME (prompt + every future decode token) of admitted and
+            # candidate work, so ensure_len can never fail; with preemption
+            # enabled, admission is aggressive — only the next stage's
+            # growth plus the candidate's first chunk — and page-granular
+            # eviction reclaims capacity when generation outruns the pool
+            # (that is the oversubscription contract).
             page = self.kv.page_size
+            conservative = self.preemption == "none"
             budget = self.prefill_chunk_tokens or self.kv.max_len
-            chunk_pages = -(-min(budget, self.kv.max_len) // page)
-            reserve = (len(self.scheduler.running)
-                       + len(self.scheduler.prefilling) * chunk_pages
-                       + self.kv.max_pages_per_slot)
-            if self.kv.free_pages < reserve:
-                free = 0
+            need = (self._remaining_demand_pages() if conservative
+                    else self._stage_page_need())
+            admit = 0
+            for r in list(self.scheduler.queue
+                          )[:self.scheduler.max_prefill_seqs]:
+                shared = len(r.shared_pages or ())
+                if conservative:
+                    d = max(self._lifetime_pages(r) - shared, 0)
+                else:
+                    # the candidate's first chunk: starts at its first
+                    # unshared position, ends a budget later
+                    total = min(r.l_in + len(r.output), self.kv.max_len)
+                    end = min(r.prefill_pos + budget, total)
+                    d = max(-(-end // page) - shared, 0)
+                need += d + (1 if shared and self.prefix_share else 0)
+                if self.kv.free_pages < need:
+                    break
+                admit += 1
+            free = min(free, admit)
         decision = self.scheduler.next_stage(free)
         if decision is None:
             return None
@@ -755,8 +968,12 @@ class ServingEngine:
             moe_flops_live=int(moe_flops_live),
             moe_flops_padded=int(moe_flops_padded),
             chunk_tokens=int(chunk_tokens),
-            stage_tokens=int(live_moe))
+            stage_tokens=int(live_moe),
+            shared_kv_pages=self.kv.shared_pages)
         self.reports.append(report)
+        self.peak_active = max(self.peak_active,
+                               len(decision.decoding) + len(decision.chunks)
+                               + len(decision.restored))
         self._stage_idx += 1
         return report
 

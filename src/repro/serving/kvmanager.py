@@ -22,32 +22,44 @@ Two layouts:
     against expected context lengths instead of provisioning every slot at
     ``max_len``.
 
+Refcounted, copy-on-write pages (PR 5): every allocated page carries a
+refcount. A page with refcount 1 is privately owned and may be written in
+place; a page with refcount > 1 is *shared* — mapped into several block
+tables at once — and is immutable: any write must go through
+``ensure_writable``, which copies the page into a private one first
+(copy-on-write) and swaps the block-table entry. Two mechanisms build on
+this:
+
+  * **prefix sharing** — full pages are registered in a token-id-keyed
+    prefix index (each page's key is the hash of its token ids chained on
+    its predecessor's key, vLLM-style). ``match_prefix``/``pin_prefix``
+    look a new prompt's full-page prefix up in the index; matched pages are
+    mapped into the new slot's block table at refcount+1
+    (``adopt_prefix``) so the prompt skips prefilling those positions
+    entirely. Shared pages are counted ONCE in ``live_pages`` and
+    byte accounting.
+  * **page-granular preemption** — ``free``/eviction decrefs instead of
+    unconditionally recycling, so evicting one owner of a shared prefix
+    leaves the pages resident under their other owners; only pages whose
+    last reference drops return to the free heap (and leave the index).
+
 Memory note (paper §III-B / Fig. 5(c)): the KV cache is the capacity item
-that limits batch size — Duplex's single-device design wins over hetero
-systems precisely because it does not duplicate MoE weights and can spend
-that capacity on KV. With the dense layout, "capacity" means
+that limits batch size. With the dense layout, "capacity" means
 ``max_slots × max_len`` whether or not the tokens exist; with the paged
-layout it means *live pages*, so the achievable batch size scales with the
-actual context-length distribution, which is exactly the Fig. 5(c) argument:
-more concurrent sequences per GB, higher decode-stage batch, better
-bandwidth amortization. ``bytes_per_slot`` reports the *live* per-sequence
-footprint in paged mode (configured footprint in dense mode) so deployments
-can size ``num_pages`` against device HBM.
+layout it means *unique live pages*, so the achievable batch size scales
+with the actual context-length distribution — and with prefix sharing the
+N copies of a popular system prompt cost one copy's pages.
 
 Page size choice: ``page_size`` should divide (or equal) the decode kernel's
-kv block — each kernel grid step streams exactly one page, so pages that are
-too small under-utilize the DMA pipeline while pages that are too large
-re-introduce dead-byte streaming within the last partial page. The default
-(64) matches the engine's context bucketing; see ROADMAP.md "DESIGN: paged
-KV cache".
+kv block — each kernel grid step streams exactly one page. Larger pages
+also make prefix matches coarser (only full pages shared). The default
+(64) matches the engine's context bucketing; see docs/architecture.md.
 
-int8 pages (``kv_quant=True``): the value pools are int8 and each layer
-additionally holds fp32 per-(token, kv-head) scale pools addressed by the
-same block tables, so per-token bytes drop from ``2·KV·hd·itemsize`` to
-``2·KV·(hd + 4)`` — ~2x the token capacity per HBM byte at hd=64/fp16
-(``pages_for_budget`` does the budget math) and ~half the streamed decode
-bytes (``kv_token_bytes`` is the shared conversion factor). Scale bytes are
-counted in ``bytes_per_slot`` automatically (it sums actual cache leaves).
+int8 pages (``kv_quant=True``): value pools are int8 with fp32
+per-(token, kv-head) scale pools addressed by the same block tables
+(``kv_token_bytes`` is the shared conversion factor, ``pages_for_budget``
+the budget math). Sharing/COW/preemption are dtype-blind: they move page
+ids and copy whole pages, scales ride along.
 
 Slot/page id allocation is heap-ordered (lowest id first) and O(log n) per
 allocate/free.
@@ -55,7 +67,7 @@ allocate/free.
 from __future__ import annotations
 
 import heapq
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,7 +97,8 @@ def pages_for_budget(cfg: ModelConfig, page_size: int, budget_bytes: int, *,
     """How many pool pages (excluding the reserved null page) fit a given
     HBM budget across all attention layers — the paper's Fig. 5(c) capacity
     knob. int8 pools admit ~2x the pages (and therefore ~2x the concurrent
-    tokens) of fp16 pools at the same budget."""
+    tokens) of fp16 pools at the same budget; prefix sharing multiplies the
+    *sequences* those pages admit on top."""
     n_attn = sum(seg.repeats
                  for seg in cfg.segments
                  for kind in seg.pattern if kind.mixer != MAMBA)
@@ -95,6 +108,31 @@ def pages_for_budget(cfg: ModelConfig, page_size: int, budget_bytes: int, *,
 
 
 class KVManager:
+    """Owns KV capacity for the serving engine.
+
+    Public API (see method docstrings):
+
+      * ``allocate()`` / ``free(slot)`` — sequence-slot lifecycle. Paged
+        ``free`` *decrefs* the slot's pages; shared pages survive under
+        their other owners.
+      * ``ensure_len(slot, target)`` — grow a slot's block table to cover
+        ``target`` positions (paged only; raises ``RuntimeError`` on pool
+        exhaustion, which callers treat as preemption/backpressure).
+      * ``ensure_writable(slot, start, end)`` — copy-on-write any shared
+        page overlapping write positions ``[start, end)``; must precede
+        every scatter when prefix sharing is on.
+      * ``match_prefix`` / ``pin_prefix`` / ``unpin`` / ``adopt_prefix`` /
+        ``register_prefix`` — the token-id-keyed prefix index.
+      * ``page_ref(pid)`` — a page's current refcount (0 = free).
+      * ``block_tables`` / ``lens`` — (max_slots, max_pages_per_slot) int32
+        page-id table and per-slot valid-token counts, passed straight into
+        the paged attention kernels as scalar-prefetch operands.
+      * ``scatter`` — dense-layout prefill insertion (paged prefill writes
+        pages in-stage instead; see NOTE at ``scatter``).
+      * ``bytes_per_slot`` / ``stats`` / ``pages_for_budget`` — sizing and
+        reporting; shared pages are counted once.
+    """
+
     def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int,
                  dtype=None, kv_quant: bool = False, layout: str = "dense",
                  page_size: int = 64, num_pages: Optional[int] = None):
@@ -124,6 +162,20 @@ class KVManager:
             self._page_free: List[int] = list(range(1, num_pages))
             heapq.heapify(self._page_free)
             self._slot_pages: Dict[int, List[int]] = {}
+            # page id -> refcount (>= 1 for every allocated page; absent =
+            # free). A pinned-but-unadopted prefix match also holds a ref.
+            self._page_refs: Dict[int, int] = {}
+            # prefix index: chain key -> page id, plus the reverse map and
+            # the exact (prev_key, token-tuple) each key stands for, so a
+            # hash collision can never alias two different prefixes.
+            self._hash_page: Dict[int, int] = {}
+            self._page_hash: Dict[int, int] = {}
+            self._page_key: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+            # bumped whenever the index gains or loses an entry — lets the
+            # engine skip re-matching queued prompts against an unchanged
+            # index (Request.match_version caches the version last tried)
+            self.index_version = 0
+            self.cow_copies = 0
             self.block_tables = np.zeros((max_slots, self.max_pages_per_slot),
                                          np.int32)
             self.lens = np.zeros((max_slots,), np.int32)
@@ -145,11 +197,32 @@ class KVManager:
 
     @property
     def live_pages(self) -> int:
+        """UNIQUE allocated pages (refcount >= 1). A page mapped into five
+        block tables counts once — sharing reduces this, duplication never
+        inflates it."""
         if not self.paged:
             return 0
-        return sum(len(p) for p in self._slot_pages.values())
+        return len(self._page_refs)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently mapped by more than one owner (refcount > 1)."""
+        if not self.paged:
+            return 0
+        return sum(1 for c in self._page_refs.values() if c > 1)
+
+    def page_ref(self, pid: int) -> int:
+        """Refcount of page ``pid`` (0 when free / never allocated)."""
+        return self._page_refs.get(pid, 0)
+
+    def slot_page_count(self, slot: int) -> int:
+        """Pages currently mapped in ``slot``'s block table."""
+        return len(self._slot_pages.get(slot, ()))
 
     def allocate(self) -> int:
+        """Claim the lowest free sequence slot. Paged slots start with an
+        empty block table; map a shared prefix with ``adopt_prefix`` and/or
+        grow it with ``ensure_len``."""
         slot = heapq.heappop(self._free)
         self._active.add(slot)
         if self.paged:
@@ -157,34 +230,183 @@ class KVManager:
         return slot
 
     def free(self, slot: int) -> None:
+        """Release a slot. Paged: *decref* each page in its block table —
+        pages shared with other slots (or pinned by queued requests) stay
+        resident and indexed; only pages whose last reference drops return
+        to the free heap. Idempotent."""
         if slot not in self._active:
             return
         self._active.discard(slot)
         heapq.heappush(self._free, slot)
         if self.paged:
             for pid in self._slot_pages.pop(slot, []):
-                heapq.heappush(self._page_free, pid)
+                self._decref(pid)
             self.block_tables[slot] = 0
             self.lens[slot] = 0
 
+    # ---- page refcounts ------------------------------------------------------
+    def _alloc_page(self) -> int:
+        if not self._page_free:
+            raise RuntimeError(
+                f"KV page pool exhausted ({self.num_pages} pages, "
+                f"{self.live_pages} live) — raise num_pages, enable "
+                f"preemption, or free sequences first")
+        pid = heapq.heappop(self._page_free)
+        self._page_refs[pid] = 1
+        return pid
+
+    def _decref(self, pid: int) -> None:
+        refs = self._page_refs.get(pid, 0)
+        assert refs > 0, f"double free of page {pid}"
+        if refs > 1:
+            self._page_refs[pid] = refs - 1
+            return
+        del self._page_refs[pid]
+        self._deindex(pid)
+        heapq.heappush(self._page_free, pid)
+
+    def _deindex(self, pid: int) -> None:
+        h = self._page_hash.pop(pid, None)
+        if h is not None:
+            self._hash_page.pop(h, None)
+            self._page_key.pop(pid, None)
+            self.index_version += 1
+
     # ---- paged capacity ------------------------------------------------------
     def ensure_len(self, slot: int, target_len: int) -> None:
-        """Grow slot's block table until it covers ``target_len`` positions.
-        Raises RuntimeError when the pool is exhausted (callers can treat it
-        as admission-control backpressure)."""
+        """Grow ``slot``'s block table until it covers ``target_len``
+        positions (monotonic; smaller targets are a no-op). Fresh pages are
+        privately owned (refcount 1). Raises ``RuntimeError`` when the pool
+        is exhausted — the engine treats that as admission backpressure or,
+        with preemption enabled, evicts a victim first so it never fires."""
         assert self.paged and slot in self._active, slot
         pages = self._slot_pages[slot]
         need = _cdiv(max(target_len, 1), self.page_size)
         assert need <= self.max_pages_per_slot, (target_len, self.max_len)
         while len(pages) < need:
-            if not self._page_free:
-                raise RuntimeError(
-                    f"KV page pool exhausted ({self.num_pages} pages, "
-                    f"{self.live_pages} live) — raise num_pages or free "
-                    f"sequences before growing slot {slot}")
-            pid = heapq.heappop(self._page_free)
+            pid = self._alloc_page()
             self.block_tables[slot, len(pages)] = pid
             pages.append(pid)
+
+    def ensure_writable(self, slot: int, start: int, end: int) -> int:
+        """Make write positions ``[start, end)`` of ``slot`` safe to
+        scatter into: any overlapped page with refcount > 1 is
+        copied-on-write into a fresh private page (block-table entry
+        swapped, original decref'd), and a privately-owned page that is
+        still in the prefix index is deindexed (indexed pages are
+        immutable — their content must keep matching their token key).
+        Returns the number of pages copied. Requires ``ensure_len`` to have
+        covered ``end`` already."""
+        if end <= start:
+            return 0
+        assert self.paged and slot in self._active, slot
+        pages = self._slot_pages[slot]
+        first = start // self.page_size
+        last = _cdiv(end, self.page_size)
+        assert last <= len(pages), (slot, start, end, len(pages))
+        copied = 0
+        for idx in range(first, last):
+            pid = pages[idx]
+            if self._page_refs.get(pid, 0) > 1:
+                new = self._alloc_page()
+                self._copy_page(pid, new)
+                pages[idx] = new
+                self.block_tables[slot, idx] = new
+                self._decref(pid)
+                self.cow_copies += 1
+                copied += 1
+            else:
+                self._deindex(pid)
+        return copied
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Device-side copy of one pool page (all layers, K/V and scale
+        leaves — every paged cache leaf is (layers, num_pages, ...))."""
+        self.cache = [jax.tree_util.tree_map(
+            lambda a: a.at[:, dst].set(a[:, src]), seg)
+            for seg in self.cache]
+
+    # ---- prefix sharing ------------------------------------------------------
+    def _chain_keys(self, tokens: Sequence[int]):
+        """Yield (page_index, chain_key, token_tuple) for each FULL page of
+        ``tokens``. The key chains on the predecessor page's key, so equal
+        keys mean equal full token prefixes (verified exactly on lookup)."""
+        page = self.page_size
+        prev = 0
+        for i in range(len(tokens) // page):
+            tup = tuple(tokens[i * page:(i + 1) * page])
+            key = hash((prev, tup))
+            yield i, key, (prev, tup)
+            prev = key
+
+    def match_prefix(self, tokens: Sequence[int]) -> List[int]:
+        """Longest resident full-page prefix of ``tokens``: walk the chain
+        of page keys through the index, stop at the first miss. Returns the
+        matched page ids in position order (possibly empty). Exact — a key
+        hit is verified against the stored (prev_key, token) pair."""
+        if not self.paged:
+            return []
+        out: List[int] = []
+        for _, key, exact in self._chain_keys(tokens):
+            pid = self._hash_page.get(key)
+            if pid is None or self._page_key.get(pid) != exact:
+                break
+            out.append(pid)
+        return out
+
+    def pin_prefix(self, tokens: Sequence[int]) -> List[int]:
+        """``match_prefix`` + incref each matched page, so the pages stay
+        resident while the request waits in the queue (even if every
+        current owner retires meanwhile). Transfer the pin to a slot with
+        ``adopt_prefix`` (no extra ref) or release it with ``unpin``."""
+        pids = self.match_prefix(tokens)
+        for pid in pids:
+            self._page_refs[pid] += 1
+        return pids
+
+    def unpin(self, pids: Sequence[int]) -> None:
+        """Release a ``pin_prefix`` hold that will not be adopted."""
+        for pid in pids:
+            self._decref(pid)
+
+    def adopt_prefix(self, slot: int, pids: Sequence[int]) -> int:
+        """Map pinned prefix pages into a freshly allocated slot's block
+        table, transferring the pin's refcount (no additional incref).
+        Returns the token positions covered (len(pids) × page_size). The
+        slot's prefill can then start at the first unshared position."""
+        assert self.paged and slot in self._active, slot
+        pages = self._slot_pages[slot]
+        assert not pages, "adopt_prefix needs an empty block table"
+        for i, pid in enumerate(pids):
+            self.block_tables[slot, i] = pid
+            pages.append(pid)
+        return len(pages) * self.page_size
+
+    def register_prefix(self, slot: int, tokens: Sequence[int]) -> int:
+        """Index ``slot``'s full pages under the token ids they hold
+        (``tokens`` = the slot's processed token stream, trimmed to its
+        valid length). Pages already indexed — or whose key is taken by an
+        identical-content page from another slot — are skipped; the chain
+        continues either way because keys are content-based. Returns the
+        number of pages newly indexed."""
+        assert self.paged and slot in self._active, slot
+        pages = self._slot_pages[slot]
+        added = 0
+        for i, key, exact in self._chain_keys(tokens):
+            if i >= len(pages):
+                break
+            pid = pages[i]
+            if self._page_hash.get(pid) is not None:
+                continue                     # already indexed (maybe shared)
+            if key in self._hash_page:
+                continue                     # another page owns this prefix
+            self._hash_page[key] = pid
+            self._page_hash[pid] = key
+            self._page_key[pid] = exact
+            added += 1
+        if added:
+            self.index_version += 1
+        return added
 
     # ---- cache ops -----------------------------------------------------------
     def scatter(self, local_cache, slots: Sequence[int]) -> None:
@@ -214,8 +436,8 @@ class KVManager:
 
     def bytes_per_slot(self) -> int:
         """Dense: configured per-slot footprint. Paged: *live* per-sequence
-        footprint (live pages / active sequences; one full-length slot's
-        worth when idle, for sizing)."""
+        footprint (unique live pages / active sequences — shared pages
+        counted once; one full-length slot's worth when idle, for sizing)."""
         total = self._total_bytes()
         if not self.paged:
             return total // self.max_slots
@@ -233,5 +455,8 @@ class KVManager:
             out.update({"num_pages": self.num_pages,
                         "page_size": self.page_size,
                         "live_pages": self.live_pages,
-                        "free_pages": self.free_pages})
+                        "free_pages": self.free_pages,
+                        "shared_pages": self.shared_pages,
+                        "indexed_pages": len(self._hash_page),
+                        "cow_copies": self.cow_copies})
         return out

@@ -11,8 +11,17 @@ paper's discussion of PagedAttention:
     queue with prompt = original prompt + generated-so-far and is
     re-prefilled later (trades compute for host memory/PCIe).
 
-The mechanics here are exactly the cache-slot gather/scatter the paper's
-Duplex device would do against CPU memory.
+Paged layout (PR 5): eviction is page-granular — ``KVManager.free`` decrefs
+the victim's block-table pages, so a shared prefix survives under its other
+owners and only privately-owned pages return to the pool. Paged uses the
+``recompute`` path (``migrate`` gathers dense slot rows and is dense-only);
+with prefix sharing on, the replay re-matches whatever prefix pages are
+still resident and skips re-prefilling them. This brings paged to parity
+with dense preemption and lets a deployment oversubscribe ``num_pages``
+against expected context lengths.
+
+The migrate mechanics here are exactly the cache-slot gather/scatter the
+paper's Duplex device would do against CPU memory.
 """
 from __future__ import annotations
 
@@ -66,3 +75,16 @@ def pick_victim(running: List[Request]) -> Optional[Request]:
     if not decoding:
         return None
     return min(decoding, key=lambda r: len(r.output))
+
+
+def pick_victim_paged(candidates: List[Request]) -> Optional[Request]:
+    """Page-pressure victim: lowest priority = fewest generated tokens,
+    ties broken by latest arrival. Unlike ``pick_victim``, mid-prefill
+    requests are eligible — they hold pages too and have the least sunk
+    work of all."""
+    pool = [r for r in candidates
+            if r.slot >= 0 and r.state in (RequestState.DECODE,
+                                           RequestState.PREFILL)]
+    if not pool:
+        return None
+    return min(pool, key=lambda r: (len(r.output), -r.arrival_time, -r.rid))

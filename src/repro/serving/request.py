@@ -33,6 +33,14 @@ class Request:
     # preemption (paper SVIII-C): host-saved KV (migrate) / retry marker
     saved_cache: Optional[list] = None
     was_preempted: bool = False
+    # prefix sharing (paged + prefix_share): page ids matched & pinned at
+    # submit time — mapped into the slot's block table at admission
+    # (KVManager.adopt_prefix), after which this clears. prefill_pos is set
+    # to the first unshared position so chunk spans skip the shared prefix.
+    # match_version caches the KVManager.index_version the last match ran
+    # against, so queued heads are only re-matched when the index changed.
+    shared_pages: Optional[List[int]] = None
+    match_version: int = -1
     # latency bookkeeping (T2FT / TBT / E2E, paper Fig. 2)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -41,6 +49,13 @@ class Request:
     @property
     def l_in(self) -> int:
         return len(self.prompt)
+
+    def token_stream(self, upto: Optional[int] = None) -> List[int]:
+        """The request's processed token stream — prompt followed by
+        generated tokens (what prefill/replay covers and what the prefix
+        index keys on). One definition for every consumer."""
+        toks = list(self.prompt) + list(self.output)
+        return toks if upto is None else toks[:upto]
 
     @property
     def prefill_total(self) -> int:

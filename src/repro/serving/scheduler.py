@@ -33,10 +33,14 @@ from repro.serving.request import Request, RequestState
 class ChunkSpan:
     """One stage's slice of one request's prefill: positions [start, end) of
     prompt(+recompute-replayed output). ``end == req.prefill_total`` marks
-    the final chunk — the engine samples the request's next token from it."""
+    the final chunk — the engine samples the request's next token from it.
+    ``first`` marks the admission chunk (the one that claims a KV slot);
+    with prefix sharing its ``start`` is the first *unshared* position, not
+    necessarily 0."""
     req: Request
     start: int
     end: int
+    first: bool = False
 
     @property
     def tokens(self) -> int:
@@ -44,7 +48,7 @@ class ChunkSpan:
 
     @property
     def is_first(self) -> bool:
-        return self.start == 0
+        return self.first or self.start == 0
 
     @property
     def is_last(self) -> bool:
@@ -157,16 +161,23 @@ class ContinuousBatchingScheduler:
             if self.max_prefill_target is not None:
                 total = min(total, self.max_prefill_target)
             r.prefill_target = total
+            # with prefix sharing, the engine set prefill_pos to the first
+            # unshared position at submit — those positions' KV is already
+            # resident, so spans start there and the shared prefix skips
+            # its prefill stages entirely (prefill_pos == 0 otherwise).
+            start = min(r.prefill_pos, total - 1) if total > 0 else 0
             if chunked:
                 if used >= budget:
                     break
-                span = ChunkSpan(r, 0, min(total, budget - used))
+                span = ChunkSpan(r, start, min(total, start + budget - used),
+                                 first=True)
             else:
-                if used + total > budget and used > 0:
+                if used + (total - start) > budget and used > 0:
                     break
-                # legacy unchunked: the whole prompt in one span (a single
-                # over-budget prompt still runs alone rather than starving)
-                span = ChunkSpan(r, 0, total)
+                # legacy unchunked: the whole remaining prompt in one span
+                # (a single over-budget prompt still runs alone rather than
+                # starving)
+                span = ChunkSpan(r, start, total, first=True)
             self.queue.popleft()
             r.state = RequestState.PREFILL
             chunks.append(span)

@@ -18,9 +18,9 @@ def setup():
     return cfg, params
 
 
-def _run(cfg, params, policy, n=5, slots=2):
+def _run(cfg, params, policy, n=5, slots=2, **kw):
     eng = ServingEngine(cfg, params, max_slots=slots, max_len=64,
-                        preemption=policy)
+                        preemption=policy, **kw)
     reqs = [Request(rid=i, prompt=list(range(1, 6)), max_new_tokens=8)
             for i in range(n)]
     eng.run(reqs)
@@ -60,6 +60,55 @@ def test_victim_is_least_progressed():
         r.output = list(range(n_out))
         rs.append(r)
     assert pick_victim(rs).rid == 1
+
+
+def test_paged_preemption_matches_dense(setup):
+    """PR 5: paged preemption (page-granular decref eviction + recompute
+    replay) emits the same greedy tokens as dense recompute preemption AND
+    as the pressure-free baseline — evictions are invisible to sampling."""
+    cfg, params = setup
+    _, base = _run(cfg, params, "none", n=2, slots=2)      # no pressure
+    ed, dense = _run(cfg, params, "recompute", n=5, slots=2)
+    ep, paged = _run(cfg, params, "recompute", n=5, slots=2,
+                     kv_layout="paged", kv_page_size=8)
+    assert ed.preemptions > 0 and ep.preemptions > 0
+    assert [r.output for r in paged] == [r.output for r in dense]
+    base_out = {r.rid: r.output for r in base}
+    for r in paged:
+        if r.rid in base_out:
+            assert r.output == base_out[r.rid], r.rid
+    assert all(r.done for r in paged)
+    assert ep.kv.live_pages == 0 and ep.kv.free_slots == 2
+
+
+def test_paged_migrate_rejected(setup):
+    cfg, params = setup
+    with pytest.raises(NotImplementedError, match="recompute"):
+        ServingEngine(cfg, params, max_slots=2, max_len=64,
+                      kv_layout="paged", preemption="migrate")
+
+
+def test_paged_oversubscribed_pool_parity(setup):
+    """A pool sized below the concurrent demand completes every request via
+    page-granular eviction, with outputs identical to a full-size pool."""
+    cfg, params = setup
+
+    def run(num_pages, policy):
+        eng = ServingEngine(cfg, params, max_slots=4, max_len=64,
+                            kv_layout="paged", kv_page_size=8,
+                            kv_num_pages=num_pages, preemption=policy,
+                            prefill_chunk_tokens=16)
+        reqs = [Request(rid=i, prompt=list(range(1, 14)), max_new_tokens=10)
+                for i in range(6)]
+        eng.run(reqs)
+        return eng, reqs
+
+    e_full, full = run(None, "none")
+    e_tight, tight = run(9, "recompute")    # 8 usable pages, demand ~18
+    assert e_tight.preemptions > 0
+    assert all(r.done for r in tight)
+    assert [r.output for r in tight] == [r.output for r in full]
+    assert e_tight.kv.live_pages == 0
 
 
 def test_no_thrash_between_preempted(setup):

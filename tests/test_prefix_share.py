@@ -1,0 +1,384 @@
+"""PR 5: refcounted copy-on-write KV pages — prefix sharing + invariants.
+
+Covers (a) the KVManager refcount/prefix-index/COW primitives, (b) a
+hypothesis property over random alloc/share/COW/evict sequences (no page is
+ever double-freed or orphaned), and (c) engine-level greedy-token parity:
+shared-prefix serving must be bit-invisible to sampling."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.engine import ServingEngine
+from repro.serving.kvmanager import KVManager
+from repro.serving.request import Request
+
+
+# ---------------------------------------------------------------------------
+# KVManager primitives
+# ---------------------------------------------------------------------------
+
+def _kv(cfg, **kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("layout", "paged")
+    kw.setdefault("page_size", 8)
+    return KVManager(cfg, **kw)
+
+
+def test_register_and_match_prefix(tiny_dense):
+    kv = _kv(tiny_dense)
+    a = kv.allocate()
+    toks = list(range(100, 120))            # 2 full pages + 4 tokens
+    kv.ensure_len(a, len(toks))
+    assert kv.register_prefix(a, toks) == 2
+    # full-page prefix matches, partial third page does not
+    assert kv.match_prefix(toks) == list(kv.block_tables[a, :2])
+    assert kv.match_prefix(toks[:8]) == [kv.block_tables[a, 0]]
+    # divergence inside the first page -> no match
+    assert kv.match_prefix([999] + toks[1:]) == []
+    # divergence in the second page -> only the first matches
+    assert kv.match_prefix(toks[:8] + [999] + toks[9:]) == \
+        [kv.block_tables[a, 0]]
+
+
+def test_adopt_prefix_refcounts_and_free(tiny_dense):
+    kv = _kv(tiny_dense)
+    a = kv.allocate()
+    toks = list(range(50, 66))              # 2 full pages
+    kv.ensure_len(a, 16)
+    kv.register_prefix(a, toks)
+    shared = kv.pin_prefix(toks)
+    assert len(shared) == 2
+    assert all(kv.page_ref(p) == 2 for p in shared)
+    b = kv.allocate()
+    assert kv.adopt_prefix(b, shared) == 16
+    assert all(kv.page_ref(p) == 2 for p in shared)    # pin transferred
+    assert list(kv.block_tables[b, :2]) == shared
+    assert kv.live_pages == 2               # shared pages counted ONCE
+    # freeing one owner keeps the pages resident and indexed
+    kv.free(a)
+    assert all(kv.page_ref(p) == 1 for p in shared)
+    assert kv.live_pages == 2
+    assert kv.match_prefix(toks) == shared
+    # freeing the last owner recycles and deindexes
+    kv.free(b)
+    assert kv.live_pages == 0
+    assert kv.match_prefix(toks) == []
+    assert kv.free_pages == kv.num_pages - 1
+
+
+def test_pin_survives_owner_retirement(tiny_dense):
+    kv = _kv(tiny_dense)
+    a = kv.allocate()
+    toks = list(range(8))
+    kv.ensure_len(a, 8)
+    kv.register_prefix(a, toks)
+    pin = kv.pin_prefix(toks)
+    kv.free(a)                              # owner gone, pin holds the page
+    assert kv.page_ref(pin[0]) == 1
+    assert kv.match_prefix(toks) == pin     # still indexed
+    kv.unpin(pin)
+    assert kv.free_pages == kv.num_pages - 1
+
+
+def test_cow_copies_shared_page(tiny_dense):
+    kv = _kv(tiny_dense)
+    a = kv.allocate()
+    toks = list(range(200, 216))
+    kv.ensure_len(a, 16)
+    kv.register_prefix(a, toks)
+    b = kv.allocate()
+    kv.adopt_prefix(b, kv.pin_prefix(toks))
+    orig = list(kv.block_tables[b, :2])
+    assert kv.ensure_writable(b, 15, 16) == 1       # last shared page copies
+    new = kv.block_tables[b, 1]
+    assert new != orig[1]
+    assert kv.page_ref(orig[1]) == 1 and kv.page_ref(new) == 1
+    assert kv.block_tables[b, 0] == orig[0]         # untouched page shared
+    assert kv.cow_copies == 1
+    # the original stays indexed; the private copy is not
+    assert kv.match_prefix(toks) == orig
+    # writable ranges over private pages are no-ops (but deindex)
+    assert kv.ensure_writable(b, 15, 16) == 0
+
+
+def test_ensure_writable_deindexes_private_page(tiny_dense):
+    kv = _kv(tiny_dense)
+    a = kv.allocate()
+    toks = list(range(8))
+    kv.ensure_len(a, 8)
+    kv.register_prefix(a, toks)
+    assert kv.match_prefix(toks)
+    kv.ensure_writable(a, 7, 8)             # refcount 1: write in place...
+    assert kv.match_prefix(toks) == []      # ...but the index entry dies
+
+
+def test_exhaustion_message_mentions_preemption(tiny_dense):
+    kv = _kv(tiny_dense, max_slots=2, max_len=32, num_pages=2)
+    s = kv.allocate()
+    kv.ensure_len(s, 8)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        kv.ensure_len(s, 16)
+
+
+# ---------------------------------------------------------------------------
+# refcount invariants under random operation sequences (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _check_invariants(kv):
+    mapped = [p for pages in kv._slot_pages.values() for p in pages]
+    refs = kv._page_refs
+    free = set(kv._page_free)
+    # a page is free XOR allocated; never both, never neither, never page 0
+    assert 0 not in free and 0 not in refs
+    assert not free & set(refs)
+    assert len(free) + len(refs) == kv.num_pages - 1
+    # every mapped page is allocated, and refcounts >= its mapping count
+    # (pins may add more); no allocated page has refcount < 1
+    counts = {}
+    for p in mapped:
+        counts[p] = counts.get(p, 0) + 1
+    for p, c in counts.items():
+        assert refs.get(p, 0) >= c, (p, c, refs.get(p))
+    assert all(c >= 1 for c in refs.values())
+    # the index only points at allocated pages, bijectively
+    assert set(kv._hash_page.values()) <= set(refs)
+    assert len(kv._hash_page) == len(kv._page_hash)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_refcount_invariants_property(tiny_dense, data):
+    """Random alloc/grow/register/share/COW/evict sequences never
+    double-free or orphan a page, and releasing everything returns the
+    whole pool to the free heap."""
+    kv = KVManager(tiny_dense, max_slots=4, max_len=32, layout="paged",
+                   page_size=4, num_pages=data.draw(st.integers(8, 24)))
+    slots, pins = {}, []
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    for _ in range(data.draw(st.integers(5, 40))):
+        ops = ["alloc", "grow", "register", "share", "cow", "evict", "unpin"]
+        op = data.draw(st.sampled_from(ops))
+        try:
+            if op == "alloc" and kv.free_slots:
+                s = kv.allocate()
+                slots[s] = rng.integers(0, 50, 32).tolist()
+            elif op == "grow" and slots:
+                s = data.draw(st.sampled_from(sorted(slots)))
+                kv.ensure_len(s, data.draw(st.integers(1, 32)))
+            elif op == "register" and slots:
+                s = data.draw(st.sampled_from(sorted(slots)))
+                n = kv.slot_page_count(s) * kv.page_size
+                kv.register_prefix(s, slots[s][:n])
+            elif op == "share" and slots and kv.free_slots:
+                s = data.draw(st.sampled_from(sorted(slots)))
+                pids = kv.pin_prefix(slots[s])
+                t = kv.allocate()
+                covered = kv.adopt_prefix(t, pids)
+                slots[t] = slots[s][:covered] + rng.integers(
+                    0, 50, 32 - covered).tolist()
+            elif op == "cow" and slots:
+                s = data.draw(st.sampled_from(sorted(slots)))
+                n = kv.slot_page_count(s) * kv.page_size
+                if n:
+                    end = data.draw(st.integers(1, n))
+                    kv.ensure_writable(s, max(end - 3, 0), end)
+            elif op == "evict" and slots:
+                s = data.draw(st.sampled_from(sorted(slots)))
+                kv.free(s)
+                del slots[s]
+            elif op == "unpin" and pins:
+                kv.unpin(pins.pop())
+        except RuntimeError:
+            pass                            # pool exhausted mid-op is legal
+        _check_invariants(kv)
+    for s in list(slots):
+        kv.free(s)
+    for p in pins:
+        kv.unpin(p)
+    _check_invariants(kv)
+    assert kv.live_pages == 0
+    assert kv.free_pages == kv.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    from repro.configs.base import MoEConfig, small_test_config
+    from repro.models.model import init_model
+    cfg = small_test_config(
+        "share-moe", family="moe", num_layers=2, d_model=64,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64))
+    return cfg, init_model(jax.random.PRNGKey(0), cfg)
+
+
+def _serve(cfg, params, reqs, *, share, chunk=16, **kw):
+    eng = ServingEngine(cfg, params, max_slots=4, max_len=64,
+                        kv_layout="paged", kv_page_size=8,
+                        prefix_share=share, prefill_chunk_tokens=chunk, **kw)
+    eng.run(reqs)
+    return eng
+
+
+def _mk(prompts, l_out=6):
+    return [Request(rid=i, prompt=list(p), max_new_tokens=l_out)
+            for i, p in enumerate(prompts)]
+
+
+def test_shared_prefix_greedy_parity(moe_setup):
+    """Prompts sharing a 3-page prefix: sharing skips those prefill
+    positions but every greedy token matches the unshared run."""
+    cfg, params = moe_setup
+    sysp = list(range(1, 25))               # 3 full pages of 8
+    prompts = [sysp + [100 + i, 101 + i] for i in range(4)]
+    e0 = _serve(cfg, params, base := _mk(prompts), share=False)
+    e1 = _serve(cfg, params, shared := _mk(prompts), share=True)
+    assert [r.output for r in shared] == [r.output for r in base]
+    assert e1.shared_tokens_skipped > 0
+    assert sum(r.chunk_tokens for r in e1.reports) < \
+        sum(r.chunk_tokens for r in e0.reports)
+    assert max(r.shared_kv_pages for r in e1.reports) >= 3
+    assert e0.kv.cow_copies == 0
+
+
+def test_fully_shared_prompt_cow_parity(moe_setup):
+    """Identical prompts of an exact page multiple: the capped last page is
+    copied-on-write before the final position rewrites it, and outputs
+    still match."""
+    cfg, params = moe_setup
+    prompts = [list(range(1, 25))] * 3
+    e0 = _serve(cfg, params, base := _mk(prompts), share=False)
+    e1 = _serve(cfg, params, shared := _mk(prompts), share=True)
+    assert [r.output for r in shared] == [r.output for r in base]
+    assert e1.kv.cow_copies >= 1
+    assert e1.kv.live_pages == 0            # nothing leaks after retire
+
+
+def test_shared_prefix_monolithic_spans(moe_setup):
+    """prefill_chunk_tokens=None (whole-prompt spans) shares too: the span
+    starts at the first unshared position."""
+    cfg, params = moe_setup
+    sysp = list(range(1, 17))
+    prompts = [sysp + [100 + i] for i in range(3)]
+    # one admission per stage: sharing needs the donor resident first
+    e0 = _serve(cfg, params, base := _mk(prompts), share=False, chunk=None,
+                max_prefill_seqs=1)
+    e1 = _serve(cfg, params, shared := _mk(prompts), share=True, chunk=None,
+                max_prefill_seqs=1)
+    assert [r.output for r in shared] == [r.output for r in base]
+    assert e1.shared_tokens_skipped > 0
+
+
+def test_shared_bytes_accounting_counts_pages_once(moe_setup):
+    """Streamed-KV accounting counts a page once however many block tables
+    map it, so decode stages of shared-prefix batches report fewer bytes."""
+    cfg, params = moe_setup
+    sysp = list(range(1, 25))
+    prompts = [sysp + [100 + i, 101 + i] for i in range(4)]
+    e0 = _serve(cfg, params, _mk(prompts), share=False)
+    e1 = _serve(cfg, params, _mk(prompts), share=True)
+
+    def decode_bytes(eng):
+        b = [r.kv_bytes_streamed for r in eng.reports
+             if r.num_decode >= 3 and not r.is_mixed]
+        return np.mean(b) if b else 0.0
+
+    assert decode_bytes(e1) < decode_bytes(e0)
+
+
+def test_prefix_share_needs_paged(moe_setup):
+    cfg, params = moe_setup
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg, params, max_slots=2, max_len=32,
+                      prefix_share=True)
+
+
+def test_capped_stream_sharing_preemption_parity(moe_setup):
+    """l_in + max_new_tokens > max_len: recompute replays prefill to the
+    cap (indexing every full page, including the last), and the continued
+    decode writes clamp to position max_len-1 — those overwrites must
+    COW/deindex the last page, never mutate an indexed/shared one. Greedy
+    outputs must match the dense engine under the same preemption."""
+    cfg, params = moe_setup
+    prompts = [list(range(1, 11))] * 4      # identical: maximal sharing
+
+    def run(layout, share):
+        eng = ServingEngine(cfg, params, max_slots=2, max_len=16,
+                            kv_layout=layout, kv_page_size=8,
+                            prefix_share=share, preemption="recompute",
+                            prefill_chunk_tokens=8)
+        reqs = _mk(prompts, l_out=10)
+        eng.run(reqs)
+        return eng, reqs
+
+    e0, rd = run("dense", False)
+    e1, rp = run("paged", True)
+    assert [r.output for r in rp] == [r.output for r in rd]
+    assert all(r.done for r in rp)
+    assert e1.kv.live_pages == 0
+
+
+def test_admission_caps_multi_admit_to_pool(moe_setup):
+    """Admission accounting walks the queue cumulatively: a pool that only
+    covers one of two same-stage admission candidates admits one — the
+    second waits instead of exhausting the pool mid-stage (no preemption
+    enabled, so an over-admission would raise RuntimeError)."""
+    cfg, params = moe_setup
+    eng = ServingEngine(cfg, params, max_slots=4, max_len=64,
+                        kv_layout="paged", kv_page_size=8,
+                        kv_num_pages=1 + 7, preemption="none")
+    reqs = [Request(rid=i, prompt=list(range(1, 24)), max_new_tokens=4)
+            for i in range(2)]
+    eng.run(reqs)                           # must not raise
+    assert all(r.done for r in reqs)
+    assert eng.kv.live_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# benchmark smoke (the acceptance metrics)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_prefix_share_benchmark_acceptance():
+    import benchmarks.prefix_share as bench
+    rows = bench.run(quick=True)
+    at90 = [r for r in rows if r["share_frac"] == 0.9
+            and not r.get("preempted") and not r["kv_quant"]]
+    assert at90 and all(r["admitted_ratio"] >= 1.5 for r in at90)
+    # fp sharing rows are sampling-invisible; int8 pools hold more pages
+    # at the same byte budget (the two capacity multipliers stack)
+    assert all(r["tokens_match"] for r in rows
+               if not r["kv_quant"] and not r.get("preempted"))
+    fp = {r["share_frac"]: r for r in rows
+          if not r["kv_quant"] and not r.get("preempted")}
+    i8 = {r["share_frac"]: r for r in rows
+          if r["kv_quant"] and not r.get("preempted")}
+    assert i8[0.9]["pool_pages"] > 1.5 * fp[0.9]["pool_pages"]
+    assert i8[0.9]["peak_batch_on"] >= fp[0.9]["peak_batch_on"]
+    pre = [r for r in rows if r.get("preempted")]
+    assert pre and all(r["all_done"] and r["tokens_match"] for r in pre)
+    assert all(r["preemptions"] > 0 for r in pre)
+
+
+def test_oversubscribed_pool_admits_more_with_sharing(moe_setup):
+    """At a fixed (tight) pool, sharing raises the peak admitted batch —
+    the Fig. 5(c) capacity argument this PR targets."""
+    cfg, params = moe_setup
+    sysp = list(range(1, 25))
+    prompts = [sysp + [100 + i] for i in range(8)]
+
+    def peak(share):
+        eng = ServingEngine(cfg, params, max_slots=8, max_len=64,
+                            kv_layout="paged", kv_page_size=8,
+                            kv_num_pages=1 + 16, prefix_share=share,
+                            prefill_chunk_tokens=16)
+        reqs = _mk(prompts)
+        eng.run(reqs)
+        assert all(r.done for r in reqs)
+        return eng.peak_active
+
+    assert peak(True) > peak(False)

