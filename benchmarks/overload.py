@@ -1,0 +1,174 @@
+"""Goodput under overload: deadline shedding vs. the no-shedding baseline.
+
+Duplex's setting is sustained heavy traffic (paper §II / ROADMAP north
+star), where offered load routinely exceeds capacity. An engine without
+admission control serves FCFS anyway: the queue grows without bound, every
+request waits behind the backlog, and almost nothing finishes inside its
+deadline — work the engine *does* complete is already worthless. PR 6's
+overload policies shed dead work instead; this benchmark measures what that
+buys.
+
+Setup: virtual-time driver (one engine stage = one tick, ``step(now=t)``)
+over a Poisson-free deterministic arrival process at ``overload ×`` the
+engine's service rate μ (≈ max_slots / stages-per-request). Every request
+gets the same nominal deadline D ticks after arrival. Policies:
+
+  * ``none``          — unbounded queue, no deadlines wired in (the seed
+    behavior); in-deadline goodput is scored post hoc against D.
+  * ``shed-past-deadline`` / ``shed-oldest`` — bounded queue; deadlines
+    wired in, so the per-stage expiry sweep also drops dead queued/running
+    work the moment it lapses.
+  * ``reject``        — bounded queue, typed ``AdmissionRejected`` at
+    submit; the client sees the rejection immediately (fail-fast).
+
+Per row: ``goodput`` (completed within D / offered), ``ttft_p99`` (ticks,
+over requests that got a first token), shed/expired/rejected counts, and a
+clean-drain check (pool fully free, audit clean). Acceptance: at >= 2x
+overload, ``shed-past-deadline`` beats ``none`` on goodput and its TTFT p99
+stays bounded (the baseline's grows with the backlog).
+
+Emits JSON (stdout, plus ``--out FILE``) for the perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+
+def _mk_requests(rng, *, n, arrival_dt, l_in, l_out, deadline_ticks, vocab):
+    from repro.serving.request import Request
+    reqs = []
+    for i in range(n):
+        t_arr = i * arrival_dt
+        prompt = rng.integers(0, vocab, l_in).tolist()
+        reqs.append(Request(
+            rid=i, prompt=prompt, max_new_tokens=l_out, arrival_time=t_arr,
+            deadline=(t_arr + deadline_ticks
+                      if deadline_ticks is not None else None)))
+    return reqs
+
+
+def _drive(eng, reqs, *, max_ticks):
+    """Virtual-time loop: arrivals submit at their arrival tick, one stage
+    per tick; rejected requests are finished fail-fast like a client that
+    saw the typed error."""
+    from repro.serving.scheduler import AdmissionRejected
+    t = 0.0
+    i = 0
+    while i < len(reqs) or eng.scheduler.has_work:
+        while i < len(reqs) and reqs[i].arrival_time <= t:
+            try:
+                eng.submit(reqs[i], now=t)
+            except AdmissionRejected:
+                reqs[i].finish("rejected", t)
+            i += 1
+        eng.step(now=t)
+        t += 1.0
+        if t > max_ticks:
+            break
+    return t
+
+
+def run(quick: bool = True, seed: int = 0) -> List[Dict]:
+    from repro.configs.base import small_test_config
+    from repro.models.model import init_model
+    from repro.serving.engine import ServingEngine
+
+    max_slots = 4
+    max_len = 64
+    page_size = 16
+    chunk = 32
+    l_in = 24
+    l_out = 8 if quick else 16
+    n_req = 40 if quick else 160
+    cfg = small_test_config("bench-overload", num_layers=2,
+                            d_model=128 if quick else 256, num_heads=4,
+                            num_kv_heads=2, head_dim=64)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    # service rate: each request occupies a slot for ~(prefill chunks +
+    # l_out) stages; max_slots run concurrently
+    stages_per_req = -(-l_in // chunk) + l_out
+    mu = max_slots / stages_per_req           # requests per tick
+    deadline_ticks = 2.5 * stages_per_req     # comfortable at capacity
+    queue_cap = 2 * max_slots
+
+    def _engine(policy):
+        return ServingEngine(
+            cfg, params, max_slots=max_slots, max_len=max_len,
+            use_duplex=False, kv_layout="paged", kv_page_size=page_size,
+            prefill_chunk_tokens=chunk,
+            queue_cap=None if policy == "none" else queue_cap,
+            overload_policy="reject" if policy == "none" else policy)
+
+    rows: List[Dict] = []
+    cases = [(2.0, "none"), (2.0, "shed-past-deadline"),
+             (2.0, "shed-oldest"), (2.0, "reject"),
+             (3.0, "none"), (3.0, "shed-past-deadline")]
+    for overload, policy in cases:
+        arrival_dt = 1.0 / (overload * mu)
+        reqs = _mk_requests(
+            np.random.default_rng(seed), n=n_req, arrival_dt=arrival_dt,
+            l_in=l_in, l_out=l_out, vocab=cfg.vocab_size,
+            # the baseline gets NO deadline wired in (nothing ever expires,
+            # the seed behavior); its goodput is scored against the same
+            # nominal D post hoc
+            deadline_ticks=None if policy == "none" else deadline_ticks)
+        eng = _engine(policy)
+        _drive(eng, reqs, max_ticks=50 * n_req)
+        in_deadline = sum(
+            1 for r in reqs
+            if r.completed and r.finish_time is not None
+            and r.finish_time - r.arrival_time <= deadline_ticks)
+        ttfts = [r.t2ft() for r in reqs if r.first_token_time is not None]
+        st = eng.stats()
+        kv = st["kv"]
+        rows.append({
+            "policy": policy,
+            "overload": overload,
+            "offered": n_req,
+            "completed": sum(r.completed for r in reqs),
+            "in_deadline": in_deadline,
+            "goodput": round(in_deadline / n_req, 3),
+            "ttft_p99": (round(float(np.percentile(ttfts, 99)), 1)
+                         if ttfts else None),
+            "shed": st["shed"], "expired": st["expired"],
+            "rejected": st["rejected"],
+            "drain_clean": bool(kv["active"] == 0 and kv["live_pages"] == 0
+                                and not eng.kv.audit()),
+        })
+    return rows
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--out", default=None)
+    args = p.parse_args()
+    rows = run(quick=not args.full)
+    payload = {"benchmark": "overload", "rows": rows}
+    print(json.dumps(payload, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    by = {(r["overload"], r["policy"]): r for r in rows}
+    ok = all(r["drain_clean"] for r in rows)
+    for x in (2.0, 3.0):
+        base, shed = by[(x, "none")], by[(x, "shed-past-deadline")]
+        ok = ok and shed["goodput"] > base["goodput"]
+        ok = ok and (base["ttft_p99"] is None or shed["ttft_p99"] is None
+                     or shed["ttft_p99"] <= base["ttft_p99"])
+        print(f"# {x}x overload: goodput none={base['goodput']} "
+              f"shed-past-deadline={shed['goodput']}, ttft_p99 "
+              f"{base['ttft_p99']} -> {shed['ttft_p99']} "
+              f"(accept: shed beats none)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,6 +33,7 @@ FIGS = [
     "prefill_chunked",       # chunked vs monolithic prefill (PR 3 tentpole)
     "decode_int8",           # int8 vs fp16 KV pages (PR 4 tentpole)
     "prefix_share",          # prefix sharing + preemption (PR 5 tentpole)
+    "overload",              # goodput under overload + shedding (PR 6)
 ]
 
 

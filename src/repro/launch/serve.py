@@ -9,6 +9,7 @@ and the per-stage dispatch decisions (bandwidth-path FLOP fraction, k_cold).
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -16,6 +17,7 @@ import numpy as np
 from repro.launch.train import resolve_config
 from repro.models.model import init_model
 from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultInjector
 from repro.serving.request import Request
 
 
@@ -58,6 +60,26 @@ def main(argv=None) -> int:
                         "style): long prompts prefill across stages "
                         "interleaved with decode; default = monolithic "
                         "whole-prompt prefill")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="per-request finish deadline (virtual ms after "
+                        "arrival): the per-stage expiry sweep EXPIREs "
+                        "past-deadline work and frees its slot/pages")
+    p.add_argument("--queue-cap", type=int, default=None,
+                   help="bound the admission queue; what happens when it "
+                        "fills is --overload-policy")
+    p.add_argument("--overload-policy",
+                   choices=("reject", "shed-oldest", "shed-past-deadline"),
+                   default="reject",
+                   help="full-queue behavior: reject new work (typed "
+                        "AdmissionRejected), shed the oldest queued "
+                        "request, or shed queued requests already past "
+                        "deadline (reject when none)")
+    p.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                   help="deterministic fault injection: seeded schedule of "
+                        "page-alloc failures, forced evictions, latency "
+                        "spikes and transient step errors; audits KV "
+                        "invariants after every stage and exits nonzero on "
+                        "any violation or a dirty drain")
     p.add_argument("--no-duplex", action="store_true")
     p.add_argument("--kernels", action="store_true",
                    help="lower through the Pallas kernels (interpret mode "
@@ -86,6 +108,8 @@ def main(argv=None) -> int:
         if args.preemption is None:
             preemption = "recompute"
     params = init_model(jax.random.PRNGKey(args.seed), cfg)
+    injector = (FaultInjector(args.chaos) if args.chaos is not None
+                else None)
     eng = ServingEngine(cfg, params, max_slots=args.max_slots,
                         max_len=args.max_len,
                         kv_layout=args.kv_layout,
@@ -97,7 +121,10 @@ def main(argv=None) -> int:
                         use_duplex=not args.no_duplex,
                         use_kernels=args.kernels,
                         moe_ragged=not args.no_moe_ragged,
-                        prefill_chunk_tokens=args.prefill_chunk)
+                        prefill_chunk_tokens=args.prefill_chunk,
+                        queue_cap=args.queue_cap,
+                        overload_policy=args.overload_policy,
+                        injector=injector)
     rng = np.random.default_rng(args.seed)
     # with --prefix-share, most requests open with a common full-page
     # system prefix (the workload sharing exploits)
@@ -105,20 +132,25 @@ def main(argv=None) -> int:
                                2 * args.kv_page_size).tolist()
                   if args.prefix_share else [])
     reqs = []
+    t0 = time.monotonic()
     for i in range(args.requests):
         l_in = max(4, int(rng.normal(args.l_in, args.l_in * 0.2)))
         prompt = rng.integers(0, cfg.vocab_size, l_in).tolist()
         if args.prefix_share and i % 10 != 0:
             prompt = (sys_prefix + prompt)[:args.max_len - args.l_out - 1]
+        deadline = (t0 + args.deadline_ms / 1e3
+                    if args.deadline_ms is not None else None)
         reqs.append(Request(rid=i, prompt=prompt,
-                            max_new_tokens=args.l_out))
+                            max_new_tokens=args.l_out,
+                            arrival_time=t0, deadline=deadline))
     done = eng.run(reqs)
-    n_done = sum(r.done for r in done)
+    n_done = sum(r.completed for r in done)
     tbts = [t for r in done for t in r.tbts()]
     mixed = sum(1 for r in eng.reports if r.is_mixed)
-    print(f"[serve] {cfg.name}: {n_done}/{len(done)} done, "
+    med_tbt = np.median(tbts) * 1e3 if tbts else float("nan")
+    print(f"[serve] {cfg.name}: {n_done}/{len(done)} completed, "
           f"stages={len(eng.reports)} (mixed={mixed}), "
-          f"median TBT={np.median(tbts)*1e3:.1f}ms")
+          f"median TBT={med_tbt:.1f}ms")
     bw = [r.bandwidth_flop_fraction for r in eng.reports if not r.is_mixed]
     kc = [r.k_cold for r in eng.reports]
     print(f"[serve] decode-stage bandwidth-path FLOP fraction: "
@@ -150,6 +182,25 @@ def main(argv=None) -> int:
     if preemption != "none" or args.oversubscribe is not None:
         print(f"[serve] preemption({preemption}): {eng.preemptions} "
               f"evictions, peak concurrent batch={eng.peak_active}")
+    st2 = eng.stats()
+    if (args.queue_cap is not None or args.deadline_ms is not None
+            or injector is not None):
+        print(f"[serve] robustness: shed={st2['shed']} "
+              f"expired={st2['expired']} cancelled={st2['cancelled']} "
+              f"rejected={st2['rejected']} retries={st2['retries']} "
+              f"stage_aborts={st2['stage_aborts']} "
+              f"audit_violations={st2['audit_violations']}")
+    if injector is not None:
+        kv = st2["kv"]
+        dirty = (kv["active"] != 0 or (args.kv_layout == "paged"
+                                       and kv["live_pages"] != 0))
+        print(f"[serve] chaos(seed={args.chaos}): faults="
+              f"{st2['fault_counts']}, drain "
+              f"{'DIRTY' if dirty else 'clean'}")
+        if st2["audit_violations"] or dirty:
+            for line in eng.audit_log[:20]:
+                print(f"[serve]   audit: {line}")
+            return 1
     return 0
 
 

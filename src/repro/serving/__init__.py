@@ -1,9 +1,16 @@
-from repro.serving.engine import ServingEngine, StageReport
+from repro.serving.engine import (EngineStalledError, ServingEngine,
+                                  StageReport)
+from repro.serving.faults import (FaultInjector, InjectedFault,
+                                  InjectedPageFault, InjectedStepError)
 from repro.serving.kvmanager import KVManager
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import SamplingParams, sample
-from repro.serving.scheduler import ContinuousBatchingScheduler, StageDecision
+from repro.serving.scheduler import (AdmissionRejected,
+                                     ContinuousBatchingScheduler,
+                                     StageDecision)
 
-__all__ = ["ServingEngine", "StageReport", "KVManager", "Request",
-           "RequestState", "SamplingParams", "sample",
-           "ContinuousBatchingScheduler", "StageDecision"]
+__all__ = ["ServingEngine", "StageReport", "EngineStalledError", "KVManager",
+           "Request", "RequestState", "SamplingParams", "sample",
+           "ContinuousBatchingScheduler", "StageDecision",
+           "AdmissionRejected", "FaultInjector", "InjectedFault",
+           "InjectedPageFault", "InjectedStepError"]

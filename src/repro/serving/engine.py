@@ -74,10 +74,14 @@ from repro.core.dispatch import plan_stage
 from repro.core.execution import ExecutionPlan, execution_plan
 from repro.core.partition import DuplexPlanner, build_luts
 from repro.models.model import decode_step, init_cache, mixed_step, prefill
+from repro.serving.faults import (FaultInjector, InjectedFault,
+                                  InjectedStepError)
 from repro.serving.kvmanager import KVManager
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import SamplingParams, sample
-from repro.serving.scheduler import ContinuousBatchingScheduler, StageDecision
+from repro.serving.scheduler import (AdmissionRejected,
+                                     ContinuousBatchingScheduler,
+                                     StageDecision)
 
 
 def _bucket(n: int, buckets) -> int:
@@ -129,6 +133,23 @@ class StageReport:
     # pages mapped by >1 owner after this stage (paged + prefix_share);
     # kv_bytes_streamed already counts each unique page once
     shared_kv_pages: int = 0
+    # robustness counters (PR 6): per-stage deltas of the engine totals.
+    # ``aborted`` marks a stage unwound by an injected fault — its
+    # admissions returned to the queue head and nothing advanced.
+    aborted: bool = False
+    shed: int = 0
+    expired: int = 0
+    cancelled: int = 0
+    retries: int = 0
+    audit_violations: int = 0
+
+
+class EngineStalledError(RuntimeError):
+    """``engine.run()``'s watchdog: raised instead of silently spinning when
+    no stage can make progress (capacity livelock, a fault schedule that
+    never relents, or an exhausted stage/wall budget). The message lists the
+    stuck request ids, queue depth and free capacity so the operator can
+    tell livelock from overload at a glance."""
 
 
 class ServingEngine:
@@ -145,6 +166,10 @@ class ServingEngine:
                  prefill_chunk_tokens: Optional[int] = None,
                  prefill_len_buckets: Tuple[int, ...] = (64, 128, 256, 512,
                                                          1024, 2048, 4096),
+                 queue_cap: Optional[int] = None,
+                 overload_policy: str = "reject",
+                 injector: Optional[FaultInjector] = None,
+                 audit_stages: Optional[bool] = None,
                  seed: int = 0):
         assert not cfg.is_encoder_decoder, \
             "engine serves decoder-only LMs; enc-dec is exercised via serve_step"
@@ -153,12 +178,20 @@ class ServingEngine:
         self.preemptions = 0
         self.cfg = cfg
         self.params = params
+        # fault injection + auditing (PR 6): the injector threads into the
+        # KV manager (page-alloc failures) and the stage loop (step errors,
+        # forced evictions, latency spikes). Auditing after every stage
+        # defaults on exactly when chaos is on.
+        self.injector = injector
+        self.audit_stages = (injector is not None if audit_stages is None
+                             else bool(audit_stages))
         # kv_dtype overrides the cache storage dtype (e.g. a bf16 KV cache
         # under fp32 compute); kv_quant=True stores int8 + fp32 scales and
         # wins over kv_dtype for the value pools.
         self.kv = KVManager(cfg, max_slots, max_len, dtype=kv_dtype,
                             kv_quant=kv_quant, layout=kv_layout,
-                            page_size=kv_page_size, num_pages=kv_num_pages)
+                            page_size=kv_page_size, num_pages=kv_num_pages,
+                            injector=injector)
         self.paged = self.kv.paged
         if self.paged and preemption == "migrate":
             raise NotImplementedError(
@@ -188,7 +221,26 @@ class ServingEngine:
             max_prefill_seqs=max_prefill_seqs,
             max_prefill_tokens=max_prefill_tokens,
             prefill_chunk_tokens=prefill_chunk_tokens,
-            max_prefill_target=max_len)
+            max_prefill_target=max_len,
+            queue_cap=queue_cap, overload_policy=overload_policy)
+        # robustness counters (PR 6) — engine lifetime totals; StageReport
+        # carries the per-stage deltas and stats() the roll-up.
+        self.cancelled = 0
+        self.expired = 0
+        self.shed = 0
+        self.rejected = 0
+        self.retries = 0
+        self.stage_aborts = 0
+        self.forced_evictions = 0
+        self.audit_violations = 0
+        self.audit_log: List[str] = []
+        # accumulated virtual latency (injected spikes + retry backoff);
+        # added to every clock read so deadlines feel the slowdown without
+        # the test suite actually sleeping
+        self.fault_delay = 0.0
+        # every submitted request, by rid — cancel() needs to find queued /
+        # running / already-finished requests uniformly
+        self._requests: Dict[int, Request] = {}
         self.sampling = sampling
         self.use_duplex = use_duplex and cfg.moe is not None
         self.use_kernels = use_kernels
@@ -420,14 +472,74 @@ class ServingEngine:
         return self._legacy_prefill_fns[key]
 
     # ------------------------------------------------------------------ api
-    def submit(self, req: Request) -> None:
+    def _now(self, now: Optional[float] = None) -> float:
+        """The engine clock: caller-supplied virtual time (benchmarks) or
+        wall time, plus the accumulated injected latency, so deadlines and
+        SLOs feel chaos-mode slowdowns without anyone sleeping."""
+        return (now if now is not None else time.monotonic()) + self.fault_delay
+
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        """Admit ``req`` to the scheduler. Raises :class:`AdmissionRejected`
+        when the bounded queue is full of live work (policy ``reject``, or
+        ``shed-past-deadline`` with nothing expired); under the shedding
+        policies the displaced victims are finished with reason ``"shed"``
+        and their resources (queued-head prefix pins included) released.
+        Admission runs BEFORE prefix matching so a rejected request can
+        never leak a pin."""
         if req.l_in >= self.kv.max_len:
             raise ValueError(
                 f"prompt of {req.l_in} tokens cannot fit max_len="
                 f"{self.kv.max_len} KV (plus at least one generated token); "
                 f"raise max_len — prompts are never silently truncated")
+        tnow = self._now(now)
+        try:
+            shed = self.scheduler.submit(req, now=tnow)
+        except AdmissionRejected:
+            self.rejected += 1
+            raise
+        for victim in shed:
+            self._finish_abnormal(victim, "shed", tnow)
+        self._requests[req.rid] = req
         self._match_prefix(req)
-        self.scheduler.submit(req)
+
+    def cancel(self, rid: int, now: Optional[float] = None) -> bool:
+        """Cancel a request by id, wherever it is in its lifecycle: dropped
+        from the queue (releasing any queued-head prefix pins), or pulled
+        out of prefill/decode with its slot and pages freed. Returns False
+        for unknown or already-terminal requests. Takes effect between
+        stages — an in-flight stage's work for the request is discarded at
+        its next admission check."""
+        req = self._requests.get(rid)
+        if req is None or req.done:
+            return False
+        self._finish_abnormal(req, "cancelled", self._now(now))
+        return True
+
+    def _finish_abnormal(self, req: Request, reason: str,
+                         tnow: float) -> None:
+        """Terminal path for cancel / shed / expiry: detach ``req`` from the
+        scheduler and release every resource it holds — its KV slot (paged:
+        decref its pages; shared prefixes survive under their other owners),
+        its queued-head prefix pins, and any host-saved migrated cache."""
+        self.scheduler.remove(req)
+        if req.slot >= 0:
+            self.kv.free(req.slot)
+            self._slot_req.pop(req.slot, None)
+            req.slot = -1
+        if req.shared_pages:
+            # the satellite-1 leak: a never-admitted request's pins were
+            # previously unreleasable — unpin here so the pool drains to
+            # fully-free no matter where in the lifecycle the request died
+            self.kv.unpin(req.shared_pages)
+            req.shared_pages = None
+        req.saved_cache = None
+        req.finish(reason, tnow)
+        if reason == "expired":
+            self.expired += 1
+        elif reason == "shed":
+            self.shed += 1
+        else:
+            self.cancelled += 1
 
     def _match_prefix(self, req: Request) -> None:
         """Prefix sharing: match the request's full-page token prefix
@@ -498,27 +610,46 @@ class ServingEngine:
         return c
 
     # ------------------------------------------------------------ preemption
-    def _maybe_preempt(self) -> None:
+    def _maybe_preempt(self, tnow: Optional[float] = None) -> None:
         """SVIII-C: reclaim capacity under pressure. Slot pressure (both
         layouts): a fresh request starving with zero free slots evicts a
         running request (migrate its KV to host, or drop it for later
         recomputation). Page pressure (paged): if the pool cannot cover the
         next stage's growth, evict lowest-priority requests page-granularly
-        first — this is what makes pool oversubscription safe."""
+        first — this is what makes pool oversubscription safe. With a clock,
+        past-deadline requests are preferred victims (their work is dead
+        either way — the sweep will expire them)."""
         from repro.serving import preemption as pre
         if self.preemption == "none":
             return
         if self.paged:
-            self._preempt_for_pages()
+            self._preempt_for_pages(tnow)
         if self.kv.free_slots > 0:
             return
         q = self.scheduler.queue
         if not q or q[0].was_preempted:
             return                      # nothing starving / avoid thrash
-        victim = pre.pick_victim(self.scheduler.running)
+        victim = pre.pick_victim(self.scheduler.running, tnow)
         if victim is None:
             return
         self._evict(victim)
+
+    def _forced_evict(self, tnow: float) -> None:
+        """Injected fault: evict a victim even though capacity is fine,
+        exercising the recompute/migrate replay path and shared-prefix
+        survival. Skipped when fewer than two requests are resident (same
+        no-livelock rule as genuine page pressure)."""
+        from repro.serving import preemption as pre
+        cands = [r for r in (self.scheduler.running
+                             + self.scheduler.prefilling) if r.slot >= 0]
+        if len(cands) < 2:
+            return
+        victim = (pre.pick_victim_paged(cands, tnow) if self.paged
+                  else pre.pick_victim(self.scheduler.running, tnow))
+        if victim is None:
+            return
+        self._evict(victim)
+        self.forced_evictions += 1
 
     def _evict(self, victim: Request) -> None:
         from repro.serving import preemption as pre
@@ -577,7 +708,7 @@ class ServingEngine:
             need += len(self.scheduler.prefilling)
         return need
 
-    def _preempt_for_pages(self) -> None:
+    def _preempt_for_pages(self, tnow: Optional[float] = None) -> None:
         """Evict until the pool covers the next stage's growth ("alloc
         would fail" → page-granular eviction, ISSUE/paper SVIII-C). Shared
         pages survive eviction under their other owners, so evicting one
@@ -591,7 +722,7 @@ class ServingEngine:
                                  + self.scheduler.prefilling) if r.slot >= 0]
             if len(cands) <= 1:
                 return
-            victim = pre.pick_victim_paged(cands)
+            victim = pre.pick_victim_paged(cands, tnow)
             if victim is None:
                 return
             self._evict(victim)
@@ -609,6 +740,26 @@ class ServingEngine:
         req.state = RequestState.DECODE
 
     # ---------------------------------------------------------------- stages
+    def _invoke(self, fn, *args):
+        """Run a jitted stage step through the injector's transient-error
+        schedule: each attempt may "fail" (a drawn step error), costing a
+        retry plus virtual backoff; ``max_retries`` consecutive failures
+        raise :class:`InjectedStepError` and the whole stage aborts. Safe
+        because step functions are pure — a retried attempt reads the same
+        cache state the failed one would have."""
+        if self.injector is None:
+            return fn(*args)
+        attempt = 0
+        while self.injector.step_error():
+            attempt += 1
+            self.retries += 1
+            self.fault_delay += self.injector.backoff(attempt)
+            if attempt >= self.injector.max_retries:
+                raise InjectedStepError(
+                    f"stage step failed {attempt} consecutive times "
+                    f"(max_retries={self.injector.max_retries})")
+        return fn(*args)
+
     def _unique_page_bytes(self, slot_pages) -> int:
         """Streamed-KV bytes for a paged stage: UNIQUE pages across all the
         stage's readers (slot_pages = [(slot, live page count)]). A
@@ -656,8 +807,8 @@ class ServingEngine:
                 bt[i] = self.kv.block_tables[s, :mp]
             moe_caps = self._moe_caps(nb, k_cold)
             fn = self._paged_decode_fn(k_cold, *moe_caps, nb, mp)
-            nxt, self.kv.cache, counts = fn(
-                self.params, jnp.asarray(tokens), self.kv.cache,
+            nxt, self.kv.cache, counts = self._invoke(
+                fn, self.params, jnp.asarray(tokens), self.kv.cache,
                 jnp.asarray(lengths), jnp.asarray(bt), self._next_key())
             nxt = np.asarray(nxt)
             for i, r in enumerate(decision.decoding):
@@ -676,9 +827,9 @@ class ServingEngine:
         moe_caps = self._moe_caps(self.kv.max_slots, k_cold)
         fn = self._decode_fn(k_cold, *moe_caps)
         toks = jnp.asarray(self._tokens)[:, None]
-        nxt, self.kv.cache, counts = fn(self.params, toks,
-                                        jnp.asarray(valid), self.kv.cache,
-                                        self._next_key())
+        nxt, self.kv.cache, counts = self._invoke(
+            fn, self.params, toks, jnp.asarray(valid), self.kv.cache,
+            self._next_key())
         nxt = np.asarray(nxt)
         for r in decision.decoding:
             tok = int(nxt[r.slot])
@@ -753,8 +904,8 @@ class ServingEngine:
                 + [(c.req.slot, n) for c, n in zip(chunks, cpages)])
             moe_caps = self._moe_caps(nb + nc_b * sc_b, k_cold)
             fn = self._mixed_fn(k_cold, *moe_caps, nc_b, sc_b, nb, mp, mpc)
-            dn, cn, self.kv.cache, counts = fn(
-                self.params, jnp.asarray(dtokens), jnp.asarray(lengths),
+            dn, cn, self.kv.cache, counts = self._invoke(
+                fn, self.params, jnp.asarray(dtokens), jnp.asarray(lengths),
                 jnp.asarray(bt), jnp.asarray(ctokens), jnp.asarray(starts),
                 jnp.asarray(clens), jnp.asarray(bt_c), self.kv.cache,
                 self._next_key())
@@ -786,8 +937,8 @@ class ServingEngine:
             moe_caps = self._moe_caps(self.kv.max_slots + nc_b * sc_b, k_cold)
             fn = self._mixed_fn(k_cold, *moe_caps, nc_b, sc_b)
             dtokens = jnp.asarray(self._tokens)[:, None]
-            dn, cn, self.kv.cache, counts = fn(
-                self.params, dtokens, jnp.asarray(valid),
+            dn, cn, self.kv.cache, counts = self._invoke(
+                fn, self.params, dtokens, jnp.asarray(valid),
                 jnp.asarray(ctokens), jnp.asarray(cslots),
                 jnp.asarray(starts), jnp.asarray(clens), self.kv.cache,
                 self._next_key())
@@ -823,8 +974,9 @@ class ServingEngine:
             tokens[i, :len(sq)] = sq
             true_len[i] = len(sq)
         fn = self._legacy_prefill_fn(n_b, l_b)
-        nxt, local_cache = fn(self.params, jnp.asarray(tokens),
-                              jnp.asarray(true_len), self._next_key())
+        nxt, local_cache = self._invoke(fn, self.params, jnp.asarray(tokens),
+                                        jnp.asarray(true_len),
+                                        self._next_key())
         nxt = np.asarray(nxt)
         slots = [self.kv.allocate() for _ in fresh]
         take = jnp.asarray(range(len(slots)), dtype=jnp.int32)
@@ -838,10 +990,90 @@ class ServingEngine:
             self._tokens[s] = tok
             r.record_token(tok, tnow)
 
+    def _abort_stage(self, decision: StageDecision) -> None:
+        """Unwind a stage an injected fault interrupted. Nothing durable has
+        advanced — ``kv.lens``, sampled tokens and ``commit_stage`` all
+        happen after the jitted step — so the only state to restore is this
+        stage's admissions: requests whose FIRST chunk claimed a slot (the
+        explicit ``first`` flag — a continuing chunk keeps its slot and
+        position) give the slot back and requeue at the head, and restored
+        migrations requeue with their saved cache intact. Pages a continuing
+        prefill's ``ensure_len`` already grew stay mapped (private, reused
+        by the retry); COW copies keep their copied content. Requeued
+        admissions re-match the prefix index so sharing survives the
+        abort."""
+        self.stage_aborts += 1
+        requeue: List[Request] = []
+        for c in decision.chunks:
+            if not c.first:
+                continue                 # continuing chunk: slot + pos kept
+            r = c.req
+            if r.slot >= 0:
+                # the admission already claimed a slot (and adopted any
+                # pinned prefix into it): free it — adopted pages decref,
+                # surviving under other owners — and re-match from scratch
+                self._slot_req.pop(r.slot, None)
+                self.kv.free(r.slot)
+                r.slot = -1
+                r.shared_pages = None
+                r.match_version = -1
+                r.prefill_pos = 0
+            # slot < 0 (legacy prefill allocates after the step): nothing
+            # claimed yet — any queued-time pins stay valid and held
+            r.state = RequestState.QUEUED
+            r.prefill_target = None
+            requeue.append(r)
+        requeue.extend(decision.restored)
+        for r in reversed(requeue):
+            self.scheduler.queue.appendleft(r)
+        for r in requeue:
+            if r.saved_cache is None:
+                self._match_prefix(r)
+
+    def _run_audit(self) -> int:
+        """Post-stage invariant audit (on under chaos, or explicitly via
+        ``audit_stages=True``): checks the KV manager with EXACT pin
+        expectations — queued requests' ``shared_pages`` are the only pin
+        holders — and accumulates any violations. Returns this stage's
+        violation count (0 = healthy)."""
+        if not self.audit_stages:
+            return 0
+        pins: Optional[Dict[int, int]] = None
+        if self.paged:
+            pins = {}
+            for r in self.scheduler.queue:
+                for pid in (r.shared_pages or ()):
+                    pins[pid] = pins.get(pid, 0) + 1
+        errs = self.kv.audit(pins=pins)
+        if errs:
+            self.audit_violations += len(errs)
+            self.audit_log.extend(
+                f"stage {self._stage_idx}: {e}" for e in errs)
+        return len(errs)
+
     def step(self, now: Optional[float] = None) -> Optional[StageReport]:
-        """Run one continuous-batching stage. Returns None when idle."""
+        """Run one continuous-batching stage. Returns None when idle.
+        ``now`` overrides the wall clock (virtual-time benchmarks drive the
+        deadline machinery deterministically through it).
+
+        Stage order: injected latency lands on the clock; the expiry sweep
+        clears past-deadline work (releasing its capacity); preemption and
+        the injected forced eviction reshape residency; then admission and
+        the stage body run. An injected fault inside the stage body unwinds
+        via ``_abort_stage`` — this stage's admissions return to the queue
+        head, nothing advanced (positions only move in ``commit_stage``) —
+        and the stage reports ``aborted=True``."""
         t0 = time.monotonic()
-        self._maybe_preempt()
+        snap = (self.shed, self.expired, self.cancelled, self.retries)
+        if self.injector is not None:
+            self.fault_delay += self.injector.latency_spike()
+        tnow = self._now(now)
+        for r in self.scheduler.sweep_expired(tnow):
+            self._finish_abnormal(r, "expired", tnow)
+        self._maybe_preempt(tnow)
+        if (self.injector is not None and self.preemption != "none"
+                and self.injector.forced_eviction()):
+            self._forced_evict(tnow)
         free = self.kv.free_slots
         if self.paged and self.prefix_share:
             # refresh admissible queue heads against the CURRENT index —
@@ -849,7 +1081,7 @@ class ServingEngine:
             # their admission stage the donor's prefix pages are resident
             for r in list(self.scheduler.queue
                           )[:self.scheduler.max_prefill_seqs]:
-                if r.saved_cache is None:
+                if r.saved_cache is None and not r.done:
                     self._match_prefix(r)
         if self.paged:
             # admission backpressure: walk the queue in admission order,
@@ -888,7 +1120,6 @@ class ServingEngine:
         decision = self.scheduler.next_stage(free)
         if decision is None:
             return None
-        tnow = now if now is not None else time.monotonic()
         mix = decision.mix()
         k_cold = 0
         if self.use_duplex and mix.num_tokens > 0:
@@ -904,15 +1135,31 @@ class ServingEngine:
         kv_bytes = 0
         counts_sum = None
         moe_caps = None
-        if decision.chunks and self._unified:
-            kv_bytes, counts_sum, moe_caps = self._run_mixed(
-                decision, k_cold, tnow)
-        else:
-            if decision.decoding:
-                kv_bytes, counts_sum, moe_caps = self._run_decode_only(
+        try:
+            if decision.chunks and self._unified:
+                kv_bytes, counts_sum, moe_caps = self._run_mixed(
                     decision, k_cold, tnow)
-            if decision.chunks:              # non-unified archs only
-                self._run_legacy_prefill(decision, tnow)
+            else:
+                if decision.decoding:
+                    kv_bytes, counts_sum, moe_caps = self._run_decode_only(
+                        decision, k_cold, tnow)
+                if decision.chunks:              # non-unified archs only
+                    self._run_legacy_prefill(decision, tnow)
+        except InjectedFault:
+            self._abort_stage(decision)
+            report = StageReport(
+                stage_index=self._stage_idx, is_mixed=decision.is_mixed,
+                num_decode=len(decision.decoding),
+                num_prefill=len(decision.chunks), k_cold=k_cold,
+                bandwidth_flop_fraction=0.0,
+                wall_time=time.monotonic() - t0, aborted=True,
+                shed=self.shed - snap[0], expired=self.expired - snap[1],
+                cancelled=self.cancelled - snap[2],
+                retries=self.retries - snap[3],
+                audit_violations=self._run_audit())
+            self.reports.append(report)
+            self._stage_idx += 1
+            return report
         # migrated-back requests restore AFTER the stage ran: the dense
         # decode half sweeps every slot and would advance a just-restored
         # slot's length past its real context.
@@ -969,7 +1216,11 @@ class ServingEngine:
             moe_flops_padded=int(moe_flops_padded),
             chunk_tokens=int(chunk_tokens),
             stage_tokens=int(live_moe),
-            shared_kv_pages=self.kv.shared_pages)
+            shared_kv_pages=self.kv.shared_pages,
+            shed=self.shed - snap[0], expired=self.expired - snap[1],
+            cancelled=self.cancelled - snap[2],
+            retries=self.retries - snap[3],
+            audit_violations=self._run_audit())
         self.reports.append(report)
         self.peak_active = max(self.peak_active,
                                len(decision.decoding) + len(decision.chunks)
@@ -977,13 +1228,91 @@ class ServingEngine:
         self._stage_idx += 1
         return report
 
-    def run(self, requests: List[Request], *, max_stages: int = 10_000
-            ) -> List[Request]:
+    # ------------------------------------------------------------ run + stats
+    def _progress(self) -> int:
+        """Monotone progress counter for the watchdog: tokens generated plus
+        requests reaching a terminal state. Outputs survive recompute
+        preemption (the replay covers them), so this never decreases — a
+        flat reading across many stages means livelock, not slow work."""
+        return (sum(len(r.output) for r in self._requests.values())
+                + sum(1 for r in self._requests.values() if r.done))
+
+    def _stall_msg(self, why: str) -> str:
+        stuck = sorted(r.rid for r in (list(self.scheduler.queue)
+                                       + self.scheduler.prefilling
+                                       + self.scheduler.running)
+                       if not r.done)
+        shown = ", ".join(map(str, stuck[:16])) + \
+            (", ..." if len(stuck) > 16 else "")
+        msg = (f"engine stalled: {why}; stuck rids=[{shown}], "
+               f"queue_depth={self.scheduler.pending}, "
+               f"free_slots={self.kv.free_slots}/{self.kv.max_slots}, "
+               f"preemption={self.preemption}")
+        if self.paged:
+            msg += (f", free_pages={self.kv.free_pages}/"
+                    f"{self.kv.num_pages - 1}")
+        return msg
+
+    def run(self, requests: List[Request], *, max_stages: int = 10_000,
+            stall_stages: int = 500,
+            max_wall_s: Optional[float] = None) -> List[Request]:
+        """Drive submitted requests to drain. A request the bounded queue
+        rejects outright is finished with reason ``"rejected"`` (the batch
+        keeps going); the watchdog raises a descriptive
+        :class:`EngineStalledError` — instead of silently looping — when no
+        stage can be formed while work remains, when ``stall_stages``
+        stages pass without a token or a terminal transition, or when the
+        stage/wall budget runs out with work still pending."""
+        t_start = time.monotonic()
         for r in requests:
-            self.submit(r)
+            try:
+                self.submit(r)
+            except AdmissionRejected:
+                r.finish("rejected", self._now())
         stages = 0
-        while self.scheduler.has_work and stages < max_stages:
+        idle = 0
+        last = self._progress()
+        while self.scheduler.has_work:
+            if stages >= max_stages:
+                raise EngineStalledError(self._stall_msg(
+                    f"max_stages={max_stages} exhausted with work pending"))
+            if (max_wall_s is not None
+                    and time.monotonic() - t_start > max_wall_s):
+                raise EngineStalledError(self._stall_msg(
+                    f"wall budget {max_wall_s}s exhausted"))
             if self.step() is None:
-                break
+                if not self.scheduler.has_work:
+                    break               # drained by the expiry sweep
+                raise EngineStalledError(self._stall_msg(
+                    "no stage could be formed (capacity livelock — queued "
+                    "work cannot be admitted and nothing is running)"))
             stages += 1
+            prog = self._progress()
+            if prog > last:
+                last, idle = prog, 0
+            else:
+                idle += 1
+                if idle >= stall_stages:
+                    raise EngineStalledError(self._stall_msg(
+                        f"no progress across {idle} consecutive stages"))
         return requests
+
+    def stats(self) -> dict:
+        """Engine-lifetime robustness + capacity roll-up (the serve CLI and
+        the overload benchmark report exactly these keys)."""
+        out = {"stages": self._stage_idx,
+               "preemptions": self.preemptions,
+               "forced_evictions": self.forced_evictions,
+               "stage_aborts": self.stage_aborts,
+               "retries": self.retries,
+               "shed": self.shed,
+               "expired": self.expired,
+               "cancelled": self.cancelled,
+               "rejected": self.rejected,
+               "audit_violations": self.audit_violations,
+               "peak_active": self.peak_active,
+               "shared_tokens_skipped": self.shared_tokens_skipped,
+               "kv": self.kv.stats()}
+        if self.injector is not None:
+            out["fault_counts"] = dict(self.injector.counts)
+        return out

@@ -1,0 +1,115 @@
+"""Deterministic fault injection for the serving stack (PR 6).
+
+Continuous batching is only as robust as its failure paths, and failure
+paths rot unless they are executed. This module provides a seeded fault
+schedule the engine and KV manager consult at well-defined points — a
+chaos-mode "device" whose misbehavior is reproducible from one integer:
+
+  * **page-allocation failures** — ``KVManager._alloc_page`` raises
+    :class:`InjectedPageFault` instead of handing out a page. The engine
+    unwinds the stage (``_abort_stage``: this stage's admissions return to
+    the queue head, nothing else advanced because positions only move in
+    ``commit_stage``) and retries on the next step.
+  * **forced evictions** — the engine evicts a preemption victim even
+    though the pool has room, exercising the recompute-replay path and the
+    survival of shared prefix pages under their other owners.
+  * **transient step errors** — the jitted stage step "fails" and is
+    retried with bounded backoff (:class:`InjectedStepError` after
+    ``max_retries`` consecutive failures aborts the stage the same way a
+    page fault does). Safe to retry because the step function is pure.
+  * **latency spikes** — the engine's clock jumps forward, exercising
+    deadline expiry and TTFT-SLO machinery without real sleeps.
+
+Every hook is behind a no-op default (``injector=None`` everywhere), so the
+production path pays one ``is None`` check. Draw order — and therefore the
+schedule — is deterministic for a fixed seed and workload; the chaos soak
+asserts greedy-token parity against the fault-free run plus a clean
+``KVManager.audit()`` after every stage.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Base of all injector-raised faults (never raised organically)."""
+
+
+class InjectedPageFault(InjectedFault):
+    """A page allocation the injector decided should fail."""
+
+
+class InjectedStepError(InjectedFault):
+    """A jitted stage step that kept failing past the retry budget."""
+
+
+class FaultInjector:
+    """Seeded schedule of faults; see module docstring for the four kinds.
+
+    Probabilities are per consultation site (one draw per potential fault
+    point), so higher stage rates mean proportionally more faults. All
+    decisions come from one ``numpy`` generator — replaying the same seed
+    against the same workload replays the same schedule.
+    """
+
+    def __init__(self, seed: int = 0, *,
+                 p_page_alloc_fail: float = 0.02,
+                 p_forced_evict: float = 0.05,
+                 p_step_error: float = 0.03,
+                 p_latency_spike: float = 0.03,
+                 spike_s: float = 0.05,
+                 max_retries: int = 4,
+                 backoff_s: float = 0.0):
+        assert max_retries >= 1
+        self.seed = seed
+        self.p_page_alloc_fail = p_page_alloc_fail
+        self.p_forced_evict = p_forced_evict
+        self.p_step_error = p_step_error
+        self.p_latency_spike = p_latency_spike
+        self.spike_s = spike_s
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self._rng = np.random.default_rng(seed)
+        self.counts: Dict[str, int] = {
+            "page_alloc_fail": 0, "forced_evict": 0, "step_error": 0,
+            "latency_spike": 0}
+
+    def _draw(self, p: float, name: str) -> bool:
+        if p <= 0.0:
+            return False
+        hit = bool(self._rng.random() < p)
+        if hit:
+            self.counts[name] += 1
+        return hit
+
+    # ---- consultation points (one per fault kind) ---------------------------
+    def page_alloc_fails(self) -> bool:
+        """Consulted by ``KVManager._alloc_page`` before handing out a page."""
+        return self._draw(self.p_page_alloc_fail, "page_alloc_fail")
+
+    def forced_eviction(self) -> bool:
+        """Consulted once per engine stage (preemption enabled only)."""
+        return self._draw(self.p_forced_evict, "forced_evict")
+
+    def step_error(self) -> bool:
+        """Consulted before each jitted step attempt; consecutive True
+        draws model consecutive transient failures."""
+        return self._draw(self.p_step_error, "step_error")
+
+    def latency_spike(self) -> float:
+        """Seconds to advance the engine clock this stage (0.0 = none)."""
+        return self.spike_s if self._draw(self.p_latency_spike,
+                                          "latency_spike") else 0.0
+
+    def backoff(self, attempt: int) -> float:
+        """Linear retry backoff (virtual seconds) after ``attempt`` fails."""
+        return self.backoff_s * attempt
+
+    @property
+    def total_faults(self) -> int:
+        return sum(self.counts.values())
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"FaultInjector(seed={self.seed}, counts={self.counts})"

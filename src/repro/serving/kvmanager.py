@@ -135,9 +135,14 @@ class KVManager:
 
     def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int,
                  dtype=None, kv_quant: bool = False, layout: str = "dense",
-                 page_size: int = 64, num_pages: Optional[int] = None):
+                 page_size: int = 64, num_pages: Optional[int] = None,
+                 injector=None):
         assert layout in ("dense", "paged"), layout
         self.cfg = cfg
+        # fault injection (PR 6): when set, _alloc_page consults the
+        # injector and may raise InjectedPageFault instead of allocating —
+        # the engine aborts + retries the stage. No-op (None) in production.
+        self.injector = injector
         self.max_slots = max_slots
         self.max_len = max_len
         self.kv_quant = kv_quant
@@ -246,6 +251,11 @@ class KVManager:
 
     # ---- page refcounts ------------------------------------------------------
     def _alloc_page(self) -> int:
+        if self.injector is not None and self.injector.page_alloc_fails():
+            from repro.serving.faults import InjectedPageFault
+            raise InjectedPageFault(
+                f"injected page-allocation failure "
+                f"({self.free_pages} pages actually free)")
         if not self._page_free:
             raise RuntimeError(
                 f"KV page pool exhausted ({self.num_pages} pages, "
@@ -460,3 +470,97 @@ class KVManager:
                         "indexed_pages": len(self._hash_page),
                         "cow_copies": self.cow_copies})
         return out
+
+    # ---- invariant audit (PR 6) ----------------------------------------------
+    def audit(self, *, pins: Optional[Dict[int, int]] = None) -> List[str]:
+        """Check every structural invariant of the manager and return the
+        violations as human-readable strings (empty list = healthy). Cheap
+        enough to run after every stage under chaos testing.
+
+        Invariants:
+          * slot partition — free slots and active slots are disjoint and
+            together cover exactly ``range(max_slots)``;
+          * page partition — free heap and refcounted pages are disjoint,
+            never contain the null page 0 or duplicates, and together cover
+            exactly pages ``1..num_pages-1``;
+          * refcounts — every allocated page has refcount >= 1 and >= the
+            number of block tables mapping it; when ``pins`` (page id ->
+            expected pin count, from queued requests' ``shared_pages``) is
+            given the check is exact: refcount == mappings + pins, which
+            catches leaked pins as well as double frees;
+          * block tables — row ``slot`` holds exactly ``_slot_pages[slot]``
+            then zeros; inactive rows are all-zero with ``lens == 0``;
+          * lens — a slot's valid-token count fits its mapped pages;
+          * index — bijective (key<->page both ways) and only over
+            allocated pages.
+        """
+        errors: List[str] = []
+        free_slots = set(self._free)
+        if free_slots & self._active:
+            errors.append(f"slots both free and active: "
+                          f"{sorted(free_slots & self._active)}")
+        if free_slots | self._active != set(range(self.max_slots)):
+            errors.append("free+active slots != range(max_slots)")
+        if not self.paged:
+            return errors
+        free = list(self._page_free)
+        free_set = set(free)
+        if len(free) != len(free_set):
+            errors.append("duplicate page ids in the free heap")
+        if 0 in free_set or 0 in self._page_refs:
+            errors.append("null page 0 entered circulation")
+        if free_set & self._page_refs.keys():
+            errors.append(f"pages both free and allocated: "
+                          f"{sorted(free_set & self._page_refs.keys())}")
+        if free_set | self._page_refs.keys() != set(range(1, self.num_pages)):
+            errors.append("free+allocated pages != range(1, num_pages)")
+        # block tables vs _slot_pages, and per-page mapping counts
+        mapped: Dict[int, int] = {}
+        for slot in range(self.max_slots):
+            pages = self._slot_pages.get(slot)
+            if slot not in self._active:
+                if pages is not None:
+                    errors.append(f"inactive slot {slot} has a block table")
+                if self.block_tables[slot].any() or self.lens[slot] != 0:
+                    errors.append(f"inactive slot {slot} row not zeroed")
+                continue
+            pages = pages if pages is not None else []
+            row = self.block_tables[slot]
+            if list(row[:len(pages)]) != pages:
+                errors.append(f"slot {slot} block table desynced from "
+                              f"_slot_pages")
+            if row[len(pages):].any():
+                errors.append(f"slot {slot} block table has stale entries "
+                              f"past its {len(pages)} pages")
+            if self.lens[slot] > len(pages) * self.page_size:
+                errors.append(f"slot {slot} len {int(self.lens[slot])} "
+                              f"exceeds its {len(pages)} mapped pages")
+            for pid in pages:
+                mapped[pid] = mapped.get(pid, 0) + 1
+                if pid not in self._page_refs:
+                    errors.append(f"slot {slot} maps unallocated page {pid}")
+        for pid, refs in self._page_refs.items():
+            if refs < 1:
+                errors.append(f"page {pid} has refcount {refs} < 1")
+            n_mapped = mapped.get(pid, 0)
+            if refs < n_mapped:
+                errors.append(f"page {pid} refcount {refs} < {n_mapped} "
+                              f"block-table mappings")
+            elif pins is not None and refs != n_mapped + pins.get(pid, 0):
+                errors.append(
+                    f"page {pid} refcount {refs} != {n_mapped} mappings + "
+                    f"{pins.get(pid, 0)} pins (leaked pin or lost ref)")
+        # index bijectivity over allocated pages only
+        for key, pid in self._hash_page.items():
+            if self._page_hash.get(pid) != key:
+                errors.append(f"index asymmetry: key {key} -> page {pid} "
+                              f"but page maps {self._page_hash.get(pid)}")
+            if pid not in self._page_refs:
+                errors.append(f"index points at free page {pid}")
+        for pid, key in self._page_hash.items():
+            if self._hash_page.get(key) != pid:
+                errors.append(f"index asymmetry: page {pid} -> key {key} "
+                              f"but key maps {self._hash_page.get(key)}")
+            if pid not in self._page_key:
+                errors.append(f"indexed page {pid} lost its exact key")
+        return errors

@@ -10,7 +10,14 @@ class RequestState(enum.Enum):
     QUEUED = "queued"
     PREFILL = "prefill"     # scheduled for the next mixed stage
     DECODE = "decode"
-    DONE = "done"
+    DONE = "done"           # completed generation (eos / length)
+    CANCELLED = "cancelled"  # caller cancel / queue shed / admission reject
+    EXPIRED = "expired"      # deadline or TTFT SLO passed
+
+
+#: states a request can never leave; ``finish_reason`` says why it got there
+TERMINAL_STATES = frozenset({RequestState.DONE, RequestState.CANCELLED,
+                             RequestState.EXPIRED})
 
 
 @dataclass
@@ -23,6 +30,15 @@ class Request:
     state: RequestState = RequestState.QUEUED
     slot: int = -1
     output: List[int] = field(default_factory=list)
+    # robustness (PR 6): absolute finish deadline and first-token SLO
+    # (seconds after arrival), on the same clock as ``arrival_time``. The
+    # engine's per-stage expiry sweep transitions past-deadline requests to
+    # EXPIRED so dead work never occupies a slot or a page.
+    deadline: Optional[float] = None
+    ttft_slo: Optional[float] = None
+    # why the request reached a terminal state: "stop" (eos), "length",
+    # "cancelled", "shed", "rejected" or "expired"; None while live.
+    finish_reason: Optional[str] = None
     # chunked prefill (scheduler-owned): positions [0, prefill_pos) have
     # been processed and their KV written; prefill_target is frozen at
     # admission (prompt + recompute-replayed output — it must not drift when
@@ -74,16 +90,45 @@ class Request:
 
     @property
     def done(self) -> bool:
+        """Terminal — completed, cancelled or expired. ``completed``
+        distinguishes requests that actually finished generating."""
+        return self.state in TERMINAL_STATES
+
+    @property
+    def completed(self) -> bool:
         return self.state == RequestState.DONE
+
+    def past_deadline(self, now: float) -> bool:
+        """True when ``now`` is beyond this request's finish deadline, or
+        its TTFT SLO has lapsed without a first token. Terminal requests
+        never re-expire."""
+        if self.state in TERMINAL_STATES:
+            return False
+        if self.deadline is not None and now >= self.deadline:
+            return True
+        return (self.ttft_slo is not None and self.first_token_time is None
+                and now >= self.arrival_time + self.ttft_slo)
+
+    def finish(self, reason: str, now: float) -> None:
+        """Abnormal termination: cancel / shed / reject / expire. The caller
+        (the engine) is responsible for releasing slots, pages and pins."""
+        self.state = (RequestState.EXPIRED if reason == "expired"
+                      else RequestState.CANCELLED)
+        self.finish_reason = reason
+        self.finish_time = now
 
     def record_token(self, token: int, now: float) -> None:
         self.output.append(token)
         self.token_times.append(now)
         if self.first_token_time is None:
             self.first_token_time = now
-        if (len(self.output) >= self.max_new_tokens
-                or (self.eos_id is not None and token == self.eos_id)):
+        if self.eos_id is not None and token == self.eos_id:
             self.state = RequestState.DONE
+            self.finish_reason = "stop"
+            self.finish_time = now
+        elif len(self.output) >= self.max_new_tokens:
+            self.state = RequestState.DONE
+            self.finish_reason = "length"
             self.finish_time = now
 
     # ---- metrics ----

@@ -18,6 +18,18 @@ A stage with chunk spans is a **mixed stage**; otherwise it is a
 exposes counters so benchmarks can reproduce that ratio). In-flight chunked
 prefills always continue before new prompts are admitted (they hold KV
 slots; finishing them fastest frees capacity).
+
+Overload hardening (PR 6): the admission queue may be bounded
+(``queue_cap``) with a pluggable ``overload_policy`` deciding what happens
+when a submit finds it full — ``reject`` raises a typed
+:class:`AdmissionRejected`, ``shed-oldest`` drops the oldest queued request,
+``shed-past-deadline`` drops queued requests whose deadline already lapsed
+(falling back to a typed rejection when the queue is full of live work).
+``sweep_expired`` is the per-stage expiry sweep: it removes every queued /
+prefilling / running request past its deadline so dead work never occupies
+a slot or a page. The scheduler only reorganizes its own structures; the
+*engine* releases slots, pages and queued-head prefix pins for the requests
+these paths return.
 """
 from __future__ import annotations
 
@@ -27,6 +39,24 @@ from typing import Deque, List, Optional, Tuple
 
 from repro.core.opb import StageMix
 from repro.serving.request import Request, RequestState
+
+OVERLOAD_POLICIES = ("reject", "shed-oldest", "shed-past-deadline")
+
+
+class AdmissionRejected(RuntimeError):
+    """Typed admission failure: the bounded queue is full (of live work,
+    under ``shed-past-deadline``). Carries enough context for a router /
+    client to back off intelligently."""
+
+    def __init__(self, rid: int, queue_depth: int, queue_cap: int,
+                 policy: str):
+        super().__init__(
+            f"request {rid} rejected: admission queue full "
+            f"({queue_depth}/{queue_cap} queued, policy={policy})")
+        self.rid = rid
+        self.queue_depth = queue_depth
+        self.queue_cap = queue_cap
+        self.policy = policy
 
 
 @dataclass
@@ -82,8 +112,15 @@ class ContinuousBatchingScheduler:
     def __init__(self, *, max_prefill_seqs: int = 4,
                  max_prefill_tokens: int = 8192,
                  prefill_chunk_tokens: Optional[int] = None,
-                 max_prefill_target: Optional[int] = None):
+                 max_prefill_target: Optional[int] = None,
+                 queue_cap: Optional[int] = None,
+                 overload_policy: str = "reject"):
         assert prefill_chunk_tokens is None or prefill_chunk_tokens >= 1
+        assert overload_policy in OVERLOAD_POLICIES, overload_policy
+        assert queue_cap is None or queue_cap >= 1, queue_cap
+        self.queue_cap = queue_cap
+        self.overload_policy = overload_policy
+        self.shed_count = 0
         # KV-capacity cap on a request's prefill target: a recompute-
         # preempted replay covers prompt + generated-so-far, which can
         # exceed the cache length the engine can hold — positions past the
@@ -101,8 +138,57 @@ class ContinuousBatchingScheduler:
         self.stage_counts = {"mixed": 0, "decode_only": 0}
 
     # ---- request intake ------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, *, now: float = 0.0) -> List[Request]:
+        """Enqueue ``req``. With a bounded queue, the overload policy makes
+        room first: returns the shed victims (the caller must release any
+        resources they hold — queued-head prefix pins in particular) or
+        raises :class:`AdmissionRejected` when nothing may be shed."""
+        shed: List[Request] = []
+        if self.queue_cap is not None:
+            while len(self.queue) >= self.queue_cap:
+                victim = self._shed_victim(now)
+                if victim is None:
+                    raise AdmissionRejected(req.rid, len(self.queue),
+                                            self.queue_cap,
+                                            self.overload_policy)
+                self.queue.remove(victim)
+                self.shed_count += 1
+                shed.append(victim)
         self.queue.append(req)
+        return shed
+
+    def _shed_victim(self, now: float) -> Optional[Request]:
+        if self.overload_policy == "reject":
+            return None
+        if self.overload_policy == "shed-past-deadline":
+            for r in self.queue:
+                if r.past_deadline(now):
+                    return r
+            return None                 # full of live work -> typed reject
+        return self.queue[0]            # shed-oldest
+
+    def sweep_expired(self, now: float) -> List[Request]:
+        """Per-stage expiry sweep: pull every request past its deadline out
+        of the queue / prefill / running sets and return them. Dead work
+        must never occupy a slot or a page — the engine finishes the
+        returned requests and releases their resources."""
+        expired = [r for r in list(self.queue) + self.prefilling
+                   + self.running if r.past_deadline(now)]
+        for r in expired:
+            self.remove(r)
+        return expired
+
+    def remove(self, req: Request) -> None:
+        """Drop ``req`` from whichever structure holds it (cancellation,
+        expiry, shedding). Idempotent; resource release is the caller's."""
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            pass
+        if req in self.running:
+            self.running.remove(req)
+        if req in self.prefilling:
+            self.prefilling.remove(req)
 
     def resubmit_preempted(self, req: Request) -> None:
         """A preempted request re-enters behind the starving head (it keeps
@@ -150,6 +236,9 @@ class ContinuousBatchingScheduler:
         free = free_slots
         while self.queue and free > 0:
             r = self.queue[0]
+            if r.done:                  # cancelled/expired while queued
+                self.queue.popleft()    # (defensive: sweeps normally clear)
+                continue
             if r.saved_cache is not None:        # migrated-back: restore only
                 self.queue.popleft()
                 restored.append(r)

@@ -1,0 +1,280 @@
+"""Overload hardening (PR 6): deadlines, cancellation, bounded admission.
+
+Engine tests run a tiny dense model (use_duplex off — robustness is
+orthogonal to dispatch) under virtual time: every ``step(now=t)`` /
+``submit(req, now=t)`` drives the deadline machinery deterministically, no
+sleeping. The satellite-1 regression (queued-head prefix pins leaking on
+cancel) lives here too, asserting the pool drains to fully-free.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import small_test_config
+from repro.models.model import init_model
+from repro.serving.engine import EngineStalledError, ServingEngine
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import (AdmissionRejected,
+                                     ContinuousBatchingScheduler)
+
+
+@pytest.fixture(scope="module")
+def ov_setup():
+    cfg = small_test_config("ov-test")
+    params = init_model(__import__("jax").random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _req(rid, l_in=12, l_out=4, vocab=256, seed=None, **kw):
+    rng = np.random.default_rng(seed if seed is not None else rid)
+    return Request(rid=rid, prompt=rng.integers(0, vocab, l_in).tolist(),
+                   max_new_tokens=l_out, **kw)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("use_duplex", False)
+    return ServingEngine(cfg, params, **kw)
+
+
+def _drain(eng, max_stages=500, now=None):
+    for _ in range(max_stages):
+        if eng.step(now=now) is None:
+            break
+    assert not eng.scheduler.has_work
+
+
+# ---- scheduler-level admission policies -----------------------------------
+def test_admission_rejected_typed_fields():
+    s = ContinuousBatchingScheduler(queue_cap=2, overload_policy="reject")
+    s.submit(_req(0))
+    s.submit(_req(1))
+    with pytest.raises(AdmissionRejected) as ei:
+        s.submit(_req(2))
+    e = ei.value
+    assert (e.rid, e.queue_depth, e.queue_cap, e.policy) == \
+        (2, 2, 2, "reject")
+    assert "queue full" in str(e) and "2/2" in str(e)
+    assert s.pending == 2            # the rejected request never entered
+
+
+def test_shed_oldest_makes_room():
+    s = ContinuousBatchingScheduler(queue_cap=2,
+                                    overload_policy="shed-oldest")
+    r0, r1, r2 = _req(0), _req(1), _req(2)
+    s.submit(r0)
+    s.submit(r1)
+    shed = s.submit(r2)
+    assert shed == [r0]
+    assert list(s.queue) == [r1, r2]
+    assert s.shed_count == 1
+
+
+def test_shed_past_deadline_falls_back_to_reject():
+    s = ContinuousBatchingScheduler(queue_cap=2,
+                                    overload_policy="shed-past-deadline")
+    live = _req(0, deadline=100.0)
+    dead = _req(1, deadline=5.0)
+    s.submit(live, now=0.0)
+    s.submit(dead, now=0.0)
+    # at t=10 the dead one is sheddable; the live one is not
+    shed = s.submit(_req(2, deadline=100.0), now=10.0)
+    assert shed == [dead] and dead not in s.queue
+    # queue now full of live work -> typed rejection, not a shed
+    with pytest.raises(AdmissionRejected):
+        s.submit(_req(3, deadline=100.0), now=10.0)
+
+
+# ---- request lifecycle -----------------------------------------------------
+def test_finish_reasons_stop_and_length():
+    r = _req(0, l_out=2)
+    r.record_token(7, 1.0)
+    r.record_token(8, 2.0)
+    assert r.completed and r.finish_reason == "length"
+    r2 = _req(1, l_out=8, eos_id=3)
+    r2.record_token(3, 1.0)
+    assert r2.completed and r2.finish_reason == "stop"
+
+
+def test_past_deadline_and_ttft_slo():
+    r = _req(0, deadline=10.0)
+    assert not r.past_deadline(9.9) and r.past_deadline(10.0)
+    r2 = _req(1, arrival_time=5.0, ttft_slo=3.0)
+    assert not r2.past_deadline(7.9) and r2.past_deadline(8.0)
+    r2.record_token(1, 7.5)          # first token inside the SLO
+    r2.first_token_time = 7.5
+    assert not r2.past_deadline(100.0)
+    r.finish("expired", 10.0)
+    assert r.state is RequestState.EXPIRED and not r.past_deadline(99.0)
+
+
+# ---- engine: cancel + expiry ----------------------------------------------
+def test_cancel_queued_releases_prefix_pins(ov_setup):
+    """Satellite 1 regression: a request cancelled while queued after
+    pin_prefix must unpin — previously nothing ever released pins of
+    never-admitted requests and the pool could not drain."""
+    cfg, params = ov_setup
+    eng = _engine(cfg, params, max_slots=1, max_len=32, kv_layout="paged",
+                  kv_page_size=8, prefix_share=True,
+                  prefill_chunk_tokens=8)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, 16).tolist()   # 2 full pages
+    donor = Request(rid=0, prompt=prefix + [7, 8], max_new_tokens=6)
+    eng.submit(donor, now=0.0)
+    # prefill the donor until its prefix pages are registered in the index
+    for _ in range(10):
+        eng.step(now=0.0)
+        if eng.kv.match_prefix(prefix):
+            break
+    assert eng.kv.match_prefix(prefix), "donor prefix never got indexed"
+    # same-prefix request queues behind the single slot and pins the match
+    waiter = Request(rid=1, prompt=prefix + [9, 10], max_new_tokens=6)
+    eng.submit(waiter, now=0.0)
+    eng.step(now=0.0)                 # queue-head refresh re-matches
+    assert waiter.shared_pages, "waiter should hold pinned prefix pages"
+    pinned = list(waiter.shared_pages)
+    before = [eng.kv.page_ref(p) for p in pinned]
+    assert eng.cancel(1, now=0.0)
+    assert waiter.shared_pages is None
+    assert [eng.kv.page_ref(p) for p in pinned] == [c - 1 for c in before]
+    _drain(eng, now=0.0)
+    assert donor.completed
+    # THE leak check: every page returned, every slot free, audit clean
+    assert eng.kv.live_pages == 0
+    assert eng.kv.free_slots == eng.kv.max_slots
+    assert eng.kv.audit(pins={}) == []
+    assert eng.stats()["cancelled"] == 1
+
+
+def test_cancel_running_frees_slot_and_survivor_completes(ov_setup):
+    cfg, params = ov_setup
+    eng = _engine(cfg, params, kv_layout="paged", kv_page_size=8,
+                  prefill_chunk_tokens=16)
+    a, b = _req(0, l_out=8), _req(1, l_out=8)
+    eng.submit(a, now=0.0)
+    eng.submit(b, now=0.0)
+    while len(a.output) < 2 or len(b.output) < 2:
+        eng.step(now=0.0)
+    assert eng.cancel(0, now=5.0)
+    assert a.state is RequestState.CANCELLED
+    assert a.finish_reason == "cancelled" and a.slot == -1
+    n_out = len(a.output)
+    _drain(eng, now=5.0)
+    assert b.completed and len(b.output) == 8
+    assert len(a.output) == n_out     # no tokens after cancellation
+    assert eng.kv.live_pages == 0 and eng.kv.audit() == []
+
+
+def test_cancel_unknown_or_terminal_is_false(ov_setup):
+    cfg, params = ov_setup
+    eng = _engine(cfg, params)
+    assert eng.cancel(99) is False
+    r = _req(0, l_out=2)
+    eng.submit(r, now=0.0)
+    _drain(eng, now=0.0)
+    assert r.completed
+    assert eng.cancel(0) is False     # already terminal
+    assert eng.stats()["cancelled"] == 0
+
+
+def test_deadline_expiry_frees_capacity(ov_setup):
+    cfg, params = ov_setup
+    eng = _engine(cfg, params, max_slots=1, kv_layout="paged",
+                  kv_page_size=8, prefill_chunk_tokens=16)
+    slow = _req(0, l_out=20, deadline=3.0)
+    waiting = _req(1, l_out=2, arrival_time=0.0, ttft_slo=50.0)
+    eng.submit(slow, now=0.0)
+    eng.submit(waiting, now=0.0)
+    eng.step(now=0.0)
+    assert slow.slot >= 0 and waiting.slot < 0
+    eng.step(now=4.0)                 # sweep: slow is past deadline
+    assert slow.state is RequestState.EXPIRED
+    assert slow.finish_reason == "expired" and slow.slot == -1
+    _drain(eng, now=5.0)
+    assert waiting.completed          # the freed slot served the waiter
+    assert eng.stats()["expired"] == 1
+    assert eng.kv.live_pages == 0
+
+
+def test_ttft_slo_expires_queued_request(ov_setup):
+    cfg, params = ov_setup
+    eng = _engine(cfg, params, max_slots=1)
+    hog = _req(0, l_out=12)
+    slo = _req(1, l_out=2, arrival_time=0.0, ttft_slo=2.0)
+    eng.submit(hog, now=0.0)
+    eng.submit(slo, now=0.0)
+    eng.step(now=0.0)
+    eng.step(now=3.0)                 # SLO lapsed, still no first token
+    assert slo.state is RequestState.EXPIRED
+    _drain(eng, now=3.0)
+    assert hog.completed
+
+
+# ---- engine: bounded admission --------------------------------------------
+def test_engine_shed_releases_resources_and_counts(ov_setup):
+    cfg, params = ov_setup
+    eng = _engine(cfg, params, queue_cap=1, overload_policy="shed-oldest")
+    r0, r1 = _req(0), _req(1)
+    eng.submit(r0, now=0.0)
+    eng.submit(r1, now=0.0)           # sheds r0
+    assert r0.state is RequestState.CANCELLED
+    assert r0.finish_reason == "shed"
+    assert eng.stats()["shed"] == 1
+    _drain(eng, now=0.0)
+    assert r1.completed
+
+
+def test_run_marks_rejected_and_finishes_the_rest(ov_setup):
+    cfg, params = ov_setup
+    eng = _engine(cfg, params, queue_cap=1, overload_policy="reject")
+    reqs = [_req(i, l_out=2) for i in range(3)]
+    eng.run(reqs)
+    assert reqs[0].completed
+    assert [r.finish_reason for r in reqs[1:]] == ["rejected", "rejected"]
+    assert eng.stats()["rejected"] == 2
+
+
+# ---- watchdog --------------------------------------------------------------
+def test_watchdog_reports_capacity_livelock(ov_setup):
+    cfg, params = ov_setup
+    # pool of ONE page (8 tokens) with preemption off: the request's
+    # lifetime demand (2 pages) can never be admitted
+    eng = _engine(cfg, params, max_slots=1, kv_layout="paged",
+                  kv_page_size=8, kv_num_pages=2, preemption="none",
+                  prefill_chunk_tokens=8)
+    r = _req(5, l_in=10, l_out=4)
+    with pytest.raises(EngineStalledError) as ei:
+        eng.run([r])
+    msg = str(ei.value)
+    assert "rids=[5]" in msg
+    assert "free_pages=1/1" in msg and "queue_depth=1" in msg
+
+
+def test_watchdog_stall_counter(ov_setup):
+    cfg, params = ov_setup
+    from repro.serving.faults import FaultInjector
+    inj = FaultInjector(0, p_step_error=1.0, p_page_alloc_fail=0.0,
+                        p_forced_evict=0.0, p_latency_spike=0.0,
+                        max_retries=2)
+    eng = _engine(cfg, params, injector=inj)
+    with pytest.raises(EngineStalledError) as ei:
+        eng.run([_req(0)], stall_stages=5)
+    assert "no progress" in str(ei.value)
+    assert eng.stage_aborts >= 5
+
+
+# ---- reporting -------------------------------------------------------------
+def test_stage_report_and_stats_counters(ov_setup):
+    cfg, params = ov_setup
+    eng = _engine(cfg, params, max_slots=1)
+    slow = _req(0, l_out=10, deadline=2.0)
+    eng.submit(slow, now=0.0)
+    eng.step(now=0.0)
+    rep = eng.step(now=3.0)           # expires `slow` during the sweep
+    assert rep is None or rep.expired == 1 or eng.reports[-1].expired == 1
+    st = eng.stats()
+    for key in ("shed", "expired", "cancelled", "rejected", "retries",
+                "stage_aborts", "forced_evictions", "audit_violations",
+                "stages", "kv"):
+        assert key in st
+    assert st["expired"] == 1 and st["audit_violations"] == 0
