@@ -13,9 +13,11 @@ def print_rows(name: str, rows: List[Dict]) -> None:
     if not rows:
         print(f"# {name}: no rows")
         return
-    cols = list(rows[0].keys())
+    # union of keys across rows, first-seen order: summary rows may carry
+    # fields the per-case rows lack (and vice versa)
+    cols = list(dict.fromkeys(k for r in rows for k in r))
     w = io.StringIO()
-    writer = csv.DictWriter(w, fieldnames=cols)
+    writer = csv.DictWriter(w, fieldnames=cols, restval="")
     writer.writeheader()
     for r in rows:
         writer.writerow({k: (f"{v:.6g}" if isinstance(v, float) else v)

@@ -34,6 +34,7 @@ FIGS = [
     "decode_int8",           # int8 vs fp16 KV pages (PR 4 tentpole)
     "prefix_share",          # prefix sharing + preemption (PR 5 tentpole)
     "overload",              # goodput under overload + shedding (PR 6)
+    "fleet",                 # multi-replica routing + failover (PR 7)
 ]
 
 

@@ -18,7 +18,56 @@ from repro.launch.train import resolve_config
 from repro.models.model import init_model
 from repro.serving.engine import ServingEngine
 from repro.serving.faults import FaultInjector
+from repro.serving.fleet import Fleet, FleetStalledError
 from repro.serving.request import Request
+from repro.serving.router import ROUTER_POLICIES
+
+
+def run_fleet(args, make_engine, injector, reqs) -> int:
+    """Serve through a Fleet of replicas; under --chaos, verify the fleet's
+    robustness ledger and exit nonzero on any violation: a request that
+    finished twice or not at all, an engine-level audit violation on any
+    replica, or a surviving replica whose pool did not drain fully free."""
+    fleet = Fleet(make_engine, args.replicas, router=args.router,
+                  injector=injector)
+    try:
+        done = fleet.run(reqs)
+    except FleetStalledError as e:
+        print(f"[serve] FLEET STALLED: {e}")
+        return 1
+    n_done = sum(r.completed for r in done)
+    fst = fleet.stats()
+    print(f"[serve] fleet({args.replicas}x, router={args.router}): "
+          f"{n_done}/{len(done)} completed in {fst['ticks']} ticks; "
+          f"health: {fst['healthy']} healthy / {fst['degraded']} degraded "
+          f"/ {fst['dead']} dead / {fst['retired']} retired")
+    print(f"[serve] fleet failover: kills={fst['kills']} "
+          f"failovers={fst['failovers']} lost={fst['lost']} "
+          f"rejected={fst['rejected']} reasons={fst['finish_reasons']}")
+    exactly_once = (fst["terminal"] == fst["submitted"]
+                    and fst["duplicate_submits"] == 0)
+    audit_viol = sum(s["audit_violations"]
+                     for s in fst["per_replica"].values())
+    dirty = []
+    for rep in fleet.replicas:
+        if rep.dead:
+            continue            # a dead device's pool is abandoned, not leaked
+        kv = rep.engine.kv.stats()
+        if kv["active"] != 0 or kv.get("live_pages", 0) != 0:
+            dirty.append(rep.id)
+    dirty += [rep.id for rep in fleet.retired if rep.drain_clean is False]
+    if injector is not None:
+        print(f"[serve] chaos(seed={args.chaos}): "
+              f"counters={fst['counters']}, "
+              f"exactly-once {'OK' if exactly_once else 'VIOLATED'}, "
+              f"audit_violations={audit_viol}, "
+              f"survivor drain {'DIRTY ' + str(dirty) if dirty else 'clean'}")
+        if not exactly_once or audit_viol or dirty:
+            for rep in fleet.replicas + fleet.retired:
+                for line in rep.engine.audit_log[:5]:
+                    print(f"[serve]   audit r{rep.id}: {line}")
+            return 1
+    return 0
 
 
 def main(argv=None) -> int:
@@ -79,7 +128,20 @@ def main(argv=None) -> int:
                         "page-alloc failures, forced evictions, latency "
                         "spikes and transient step errors; audits KV "
                         "invariants after every stage and exits nonzero on "
-                        "any violation or a dirty drain")
+                        "any violation or a dirty drain; with --replicas "
+                        ">1 the forked per-replica streams also draw "
+                        "whole-replica kills and latency spikes")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="serve through a fleet of N engine replicas behind "
+                        "--router, with health tracking and failover: a "
+                        "dead replica's in-flight requests re-route to "
+                        "survivors exactly-once (default 1 = single "
+                        "engine, no fleet layer)")
+    p.add_argument("--router", choices=ROUTER_POLICIES, default="affinity",
+                   help="fleet placement policy (--replicas >1): 'affinity' "
+                        "scores replicas by resident-prefix match length "
+                        "(paged + --prefix-share) minus load; "
+                        "'round-robin' cycles blindly")
     p.add_argument("--no-duplex", action="store_true")
     p.add_argument("--kernels", action="store_true",
                    help="lower through the Pallas kernels (interpret mode "
@@ -108,23 +170,35 @@ def main(argv=None) -> int:
         if args.preemption is None:
             preemption = "recompute"
     params = init_model(jax.random.PRNGKey(args.seed), cfg)
-    injector = (FaultInjector(args.chaos) if args.chaos is not None
-                else None)
-    eng = ServingEngine(cfg, params, max_slots=args.max_slots,
-                        max_len=args.max_len,
-                        kv_layout=args.kv_layout,
-                        kv_page_size=args.kv_page_size,
-                        kv_num_pages=num_pages,
-                        kv_quant=args.kv_quant,
-                        prefix_share=args.prefix_share,
-                        preemption=preemption,
-                        use_duplex=not args.no_duplex,
-                        use_kernels=args.kernels,
-                        moe_ragged=not args.no_moe_ragged,
-                        prefill_chunk_tokens=args.prefill_chunk,
-                        queue_cap=args.queue_cap,
-                        overload_policy=args.overload_policy,
-                        injector=injector)
+    fleet_mode = args.replicas > 1
+    injector = None
+    if args.chaos is not None:
+        # fleet chaos adds whole-replica faults on top of the engine-level
+        # schedule; each replica draws from its own forked stream
+        kw = (dict(p_replica_kill=0.015, p_replica_spike=0.03)
+              if fleet_mode else {})
+        injector = FaultInjector(args.chaos, **kw)
+
+    def make_engine(replica_id=0, child_injector=None):
+        del replica_id  # replicas are homogeneous; id is for the fleet
+        return ServingEngine(cfg, params, max_slots=args.max_slots,
+                             max_len=args.max_len,
+                             kv_layout=args.kv_layout,
+                             kv_page_size=args.kv_page_size,
+                             kv_num_pages=num_pages,
+                             kv_quant=args.kv_quant,
+                             prefix_share=args.prefix_share,
+                             preemption=preemption,
+                             use_duplex=not args.no_duplex,
+                             use_kernels=args.kernels,
+                             moe_ragged=not args.no_moe_ragged,
+                             prefill_chunk_tokens=args.prefill_chunk,
+                             queue_cap=args.queue_cap,
+                             overload_policy=args.overload_policy,
+                             injector=(child_injector if fleet_mode
+                                       else injector))
+
+    eng = None if fleet_mode else make_engine()
     rng = np.random.default_rng(args.seed)
     # with --prefix-share, most requests open with a common full-page
     # system prefix (the workload sharing exploits)
@@ -143,6 +217,8 @@ def main(argv=None) -> int:
         reqs.append(Request(rid=i, prompt=prompt,
                             max_new_tokens=args.l_out,
                             arrival_time=t0, deadline=deadline))
+    if fleet_mode:
+        return run_fleet(args, make_engine, injector, reqs)
     done = eng.run(reqs)
     n_done = sum(r.completed for r in done)
     tbts = [t for r in done for t in r.tbts()]

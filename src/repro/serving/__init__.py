@@ -2,8 +2,12 @@ from repro.serving.engine import (EngineStalledError, ServingEngine,
                                   StageReport)
 from repro.serving.faults import (FaultInjector, InjectedFault,
                                   InjectedPageFault, InjectedStepError)
+from repro.serving.fleet import (Fleet, FleetStalledError, Replica,
+                                 ReplicaHealth)
 from repro.serving.kvmanager import KVManager
 from repro.serving.request import Request, RequestState
+from repro.serving.router import (AffinityRouter, RoundRobinRouter, Router,
+                                  make_router)
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.scheduler import (AdmissionRejected,
                                      ContinuousBatchingScheduler,
@@ -13,4 +17,6 @@ __all__ = ["ServingEngine", "StageReport", "EngineStalledError", "KVManager",
            "Request", "RequestState", "SamplingParams", "sample",
            "ContinuousBatchingScheduler", "StageDecision",
            "AdmissionRejected", "FaultInjector", "InjectedFault",
-           "InjectedPageFault", "InjectedStepError"]
+           "InjectedPageFault", "InjectedStepError",
+           "Fleet", "Replica", "ReplicaHealth", "FleetStalledError",
+           "Router", "AffinityRouter", "RoundRobinRouter", "make_router"]

@@ -234,6 +234,10 @@ class ServingEngine:
         self.forced_evictions = 0
         self.audit_violations = 0
         self.audit_log: List[str] = []
+        # stats(reset=True) snapshot base (PR 7): counter values at the last
+        # reset, so a fleet aggregator can attribute sheds/retries/etc. to a
+        # polling window instead of re-diffing cumulative totals itself.
+        self._stats_base: Dict[str, int] = {}
         # accumulated virtual latency (injected spikes + retry backoff);
         # added to every clock read so deadlines feel the slowdown without
         # the test suite actually sleeping
@@ -1297,9 +1301,21 @@ class ServingEngine:
                         f"no progress across {idle} consecutive stages"))
         return requests
 
-    def stats(self) -> dict:
+    #: cumulative counters stats() also reports as per-window deltas
+    STATS_DELTA_KEYS = ("stages", "preemptions", "forced_evictions",
+                        "stage_aborts", "retries", "shed", "expired",
+                        "cancelled", "rejected", "audit_violations",
+                        "shared_tokens_skipped")
+
+    def stats(self, reset: bool = False) -> dict:
         """Engine-lifetime robustness + capacity roll-up (the serve CLI and
-        the overload benchmark report exactly these keys)."""
+        the overload benchmark report exactly these keys). The top-level
+        counters stay cumulative; ``out["delta"]`` carries each
+        :data:`STATS_DELTA_KEYS` counter's change since the last
+        ``stats(reset=True)`` call, so a fleet aggregator polling N engines
+        can attribute sheds/retries/aborts to its window. ``reset=True``
+        snapshots the current totals as the next window's base (the
+        cumulative values are never cleared)."""
         out = {"stages": self._stage_idx,
                "preemptions": self.preemptions,
                "forced_evictions": self.forced_evictions,
@@ -1313,6 +1329,10 @@ class ServingEngine:
                "peak_active": self.peak_active,
                "shared_tokens_skipped": self.shared_tokens_skipped,
                "kv": self.kv.stats()}
+        out["delta"] = {k: out[k] - self._stats_base.get(k, 0)
+                        for k in self.STATS_DELTA_KEYS}
+        if reset:
+            self._stats_base = {k: out[k] for k in self.STATS_DELTA_KEYS}
         if self.injector is not None:
             out["fault_counts"] = dict(self.injector.counts)
         return out

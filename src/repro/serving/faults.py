@@ -20,6 +20,16 @@ chaos-mode "device" whose misbehavior is reproducible from one integer:
   * **latency spikes** — the engine's clock jumps forward, exercising
     deadline expiry and TTFT-SLO machinery without real sleeps.
 
+Replica-level faults (PR 7, fleet tier): whole *replicas* can misbehave —
+``replica_kill`` takes an engine out permanently (the fleet fails its
+in-flight work over to the survivors) and ``replica_spike`` marks it
+DEGRADED with a large latency hit (the router steers around it until it
+recovers). Both default to probability 0 so single-engine chaos runs are
+unchanged. ``fork(index)`` derives an independent, deterministic child
+stream per replica (``numpy.random.SeedSequence`` spawn-style), so one
+fleet seed reproduces every replica's schedule and replicas never share
+draws.
+
 Every hook is behind a no-op default (``injector=None`` everywhere), so the
 production path pays one ``is None`` check. Draw order — and therefore the
 schedule — is deterministic for a fixed seed and workload; the chaos soak
@@ -61,7 +71,10 @@ class FaultInjector:
                  p_latency_spike: float = 0.03,
                  spike_s: float = 0.05,
                  max_retries: int = 4,
-                 backoff_s: float = 0.0):
+                 backoff_s: float = 0.0,
+                 p_replica_kill: float = 0.0,
+                 p_replica_spike: float = 0.0,
+                 replica_spike_s: float = 0.25):
         assert max_retries >= 1
         self.seed = seed
         self.p_page_alloc_fail = p_page_alloc_fail
@@ -71,10 +84,13 @@ class FaultInjector:
         self.spike_s = spike_s
         self.max_retries = max_retries
         self.backoff_s = backoff_s
+        self.p_replica_kill = p_replica_kill
+        self.p_replica_spike = p_replica_spike
+        self.replica_spike_s = replica_spike_s
         self._rng = np.random.default_rng(seed)
         self.counts: Dict[str, int] = {
             "page_alloc_fail": 0, "forced_evict": 0, "step_error": 0,
-            "latency_spike": 0}
+            "latency_spike": 0, "replica_kill": 0, "replica_spike": 0}
 
     def _draw(self, p: float, name: str) -> bool:
         if p <= 0.0:
@@ -103,9 +119,41 @@ class FaultInjector:
         return self.spike_s if self._draw(self.p_latency_spike,
                                           "latency_spike") else 0.0
 
+    def replica_kill(self) -> bool:
+        """Consulted once per fleet tick per replica: this replica dies
+        permanently (its engine is abandoned mid-flight; the fleet fails
+        over). Defaults to never (p=0) outside fleet chaos runs."""
+        return self._draw(self.p_replica_kill, "replica_kill")
+
+    def replica_spike(self) -> float:
+        """Consulted once per fleet tick per replica: virtual seconds of
+        whole-replica slowdown (0.0 = none). A positive draw also marks the
+        replica DEGRADED so the router steers around it."""
+        return self.replica_spike_s if self._draw(self.p_replica_spike,
+                                                  "replica_spike") else 0.0
+
     def backoff(self, attempt: int) -> float:
         """Linear retry backoff (virtual seconds) after ``attempt`` fails."""
         return self.backoff_s * attempt
+
+    def fork(self, index: int) -> "FaultInjector":
+        """Derive the deterministic child injector for replica ``index``:
+        same probabilities, an independent stream seeded from (seed, index)
+        via ``SeedSequence`` so sibling replicas draw independent — but
+        individually reproducible — fault schedules."""
+        child_seed = int(np.random.SeedSequence(
+            (self.seed, index)).generate_state(1)[0])
+        return FaultInjector(
+            child_seed,
+            p_page_alloc_fail=self.p_page_alloc_fail,
+            p_forced_evict=self.p_forced_evict,
+            p_step_error=self.p_step_error,
+            p_latency_spike=self.p_latency_spike,
+            spike_s=self.spike_s, max_retries=self.max_retries,
+            backoff_s=self.backoff_s,
+            p_replica_kill=self.p_replica_kill,
+            p_replica_spike=self.p_replica_spike,
+            replica_spike_s=self.replica_spike_s)
 
     @property
     def total_faults(self) -> int:

@@ -1,0 +1,436 @@
+"""Fault-tolerant multi-replica serving fleet (PR 7).
+
+Duplex's throughput argument is per-device: keep the continuous batch dense
+on the right processor. The "millions of users" north star needs a *fleet*
+of those engines — and a fleet is only as good as its behavior when a
+replica dies mid-stage. This module composes the single-engine primitives
+built so far into a serving tier where replica failure is a routed-around
+event, not a lost request:
+
+  * **routing** — :mod:`repro.serving.router`: round-robin baseline, or
+    prefix-affinity scoring over the PR 5 token-keyed page index (bursty
+    shared-prefix traffic lands where the pages already live) minus load.
+  * **health state machine** — per replica: HEALTHY → DEGRADED (injected
+    whole-replica latency spike; the router steers around it, the replica
+    recovers after ``degrade_ticks`` fleet ticks) → DEAD (injected or
+    operator kill; permanent). Replica faults come from each replica's OWN
+    forked injector stream (``FaultInjector.fork``), so one fleet seed
+    reproduces every replica's schedule and faults are independent across
+    replicas.
+  * **failover** — a dead replica's non-terminal requests are reset to the
+    recompute-replay shape (prompt + generated-so-far re-prefills; output
+    already delivered is never re-generated) and re-routed to survivors,
+    with rid-keyed ownership dedupe so every request finishes **exactly
+    once** — never twice, never silently lost. Queued requests re-route the
+    same way, immediately. Failover re-submissions get a priority boost so
+    survivors don't immediately re-evict them (PR 7 satellite: priority-
+    aware preemption). With ``failover=False`` the dead replica's requests
+    are finished with reason ``"lost"`` — the stranded-request baseline the
+    fleet benchmark quantifies.
+  * **drain / elastic join & leave** — ``drain`` stops the router from
+    sending new work, lets in-flight and queued work finish, then retires
+    the replica and releases its pool; ``join`` spawns a fresh replica into
+    the rotation; ``leave`` = drain + retire.
+  * **watchdog** — ``run`` aggregates per-replica ``stats(reset=True)``
+    window deltas into fleet-level counters (``poll``) and raises
+    :class:`FleetStalledError` when no fleet-wide progress is made for
+    ``stall_ticks`` ticks (all replicas dead, capacity livelock, or a fault
+    schedule that never relents).
+
+The fleet is deliberately host-side and synchronous (one ``step`` = one
+tick across live replicas): it is the serving-layer analogue of the
+bottleneck-splitting argument — scale by replication with placement
+intelligence, keeping each engine's own invariants (per-stage audits,
+exactly-once resource release) intact and checkable per replica.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Dict, List, Optional
+
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultInjector
+from repro.serving.request import Request, RequestState
+from repro.serving.router import Router, make_router
+from repro.serving.scheduler import AdmissionRejected
+
+
+class ReplicaHealth(enum.Enum):
+    HEALTHY = "healthy"
+    DEGRADED = "degraded"   # latency-spiking; routed around, recovers
+    DEAD = "dead"           # permanent; failover has run
+
+
+class FleetStalledError(RuntimeError):
+    """The fleet watchdog: raised instead of silently spinning when no
+    replica can advance any request for ``stall_ticks`` ticks — all
+    replicas dead, fleet-wide capacity livelock, or an unrelenting fault
+    schedule. The message carries per-replica health and queue depths plus
+    the aggregated window counters so the operator can tell which."""
+
+
+class Replica:
+    """One engine in the fleet: id, health state and its forked injector."""
+
+    def __init__(self, rid: int, engine: ServingEngine,
+                 injector: Optional[FaultInjector] = None):
+        self.id = rid
+        self.engine = engine
+        self.injector = injector
+        self.health = ReplicaHealth.HEALTHY
+        self.draining = False
+        self.spike_ticks = 0       # DEGRADED ticks remaining
+        self.drain_clean: Optional[bool] = None   # set at retire time
+
+    @property
+    def load(self) -> int:
+        """Queue depth + in-flight work — the router's load signal."""
+        sch = self.engine.scheduler
+        return sch.pending + len(sch.prefilling) + len(sch.running)
+
+    @property
+    def degraded(self) -> bool:
+        return self.health is ReplicaHealth.DEGRADED
+
+    @property
+    def dead(self) -> bool:
+        return self.health is ReplicaHealth.DEAD
+
+    @property
+    def admittable(self) -> bool:
+        """May the router send NEW work here? (Degraded replicas stay in
+        rotation — the router's scoring penalizes them instead.)"""
+        return not self.dead and not self.draining
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (f"Replica({self.id}, {self.health.value}, load={self.load}"
+                f"{', draining' if self.draining else ''})")
+
+
+class Fleet:
+    """N ``ServingEngine`` replicas behind a router, with failover.
+
+    ``engine_factory(replica_id, injector)`` builds each replica's engine —
+    the fleet forks its injector per replica (independent deterministic
+    fault streams) and passes the child in; factories for injector-free
+    fleets just ignore the second argument.
+
+    ``min_live`` suppresses *injected* replica kills that would drop the
+    live count below it (an orchestrator would respawn; the deterministic
+    ``kill`` API is not suppressed), so chaos soaks can't kill the whole
+    fleet and stall by construction.
+    """
+
+    def __init__(self, engine_factory, n_replicas: int, *,
+                 router="affinity",
+                 injector: Optional[FaultInjector] = None,
+                 failover: bool = True, failover_priority: int = 1,
+                 degrade_ticks: int = 2, min_live: int = 1):
+        assert n_replicas >= 1
+        self.engine_factory = engine_factory
+        self.injector = injector
+        self.router: Router = (router if isinstance(router, Router)
+                               else make_router(router))
+        self.failover = failover
+        self.failover_priority = failover_priority
+        self.degrade_ticks = degrade_ticks
+        self.min_live = min_live
+        self.replicas: List[Replica] = []      # live (incl. dead-pending? no: live + dead)
+        self.retired: List[Replica] = []       # drained/left replicas
+        self._next_id = 0
+        # rid-keyed bookkeeping: every request the fleet ever accepted, its
+        # current owner replica, and its observed terminal transition —
+        # the exactly-once ledger.
+        self._requests: Dict[int, Request] = {}
+        self._owner: Dict[int, Replica] = {}
+        self._terminal: Dict[int, tuple] = {}  # rid -> (replica_id, reason)
+        # fleet-level counters
+        self.kills = 0
+        self.kills_suppressed = 0
+        self.failovers = 0
+        self.lost = 0
+        self.rejected = 0
+        self.duplicate_submits = 0     # exactly-once guard; must stay 0
+        self.counters: Dict[str, int] = {}   # poll()-aggregated windows
+        self.ticks = 0
+        for _ in range(n_replicas):
+            self.join()
+
+    # ------------------------------------------------------------- elasticity
+    def join(self) -> Replica:
+        """Spawn a fresh replica into the rotation (elastic scale-up)."""
+        i = self._next_id
+        self._next_id += 1
+        child = self.injector.fork(i) if self.injector is not None else None
+        rep = Replica(i, self.engine_factory(i, child), child)
+        self.replicas.append(rep)
+        return rep
+
+    def drain(self, replica_id: int) -> Replica:
+        """Graceful drain: stop admitting new work to this replica; its
+        queued and in-flight requests finish normally. The replica retires
+        (pool released) at the first tick it is idle."""
+        rep = self._replica(replica_id)
+        rep.draining = True
+        return rep
+
+    def leave(self, replica_id: int) -> Replica:
+        """Elastic scale-down = drain now, retire at idle."""
+        return self.drain(replica_id)
+
+    def _replica(self, replica_id: int) -> Replica:
+        for rep in self.replicas:
+            if rep.id == replica_id:
+                return rep
+        raise KeyError(f"no live replica {replica_id}")
+
+    def _retire(self, rep: Replica) -> None:
+        """A drained replica leaves the fleet: verify it drained clean and
+        release its KV pool (the fleet analogue of a pod shutting down)."""
+        kv = rep.engine.kv
+        rep.drain_clean = bool(
+            kv.free_slots == kv.max_slots
+            and (not kv.paged or kv.live_pages == 0)
+            and not kv.audit())
+        rep.engine.kv.cache = None           # release the page pool
+        self.replicas.remove(rep)
+        self.retired.append(rep)
+
+    # -------------------------------------------------------------- admission
+    @property
+    def live(self) -> List[Replica]:
+        return [rep for rep in self.replicas if not rep.dead]
+
+    @property
+    def admittable(self) -> List[Replica]:
+        return [rep for rep in self.replicas if rep.admittable]
+
+    def submit(self, req: Request, now: Optional[float] = None) -> Replica:
+        """Route ``req`` to the best admittable replica (router order); a
+        bounded-queue rejection on one replica falls through to the next.
+        Raises :class:`AdmissionRejected` only when EVERY admittable
+        replica rejected (or none exists)."""
+        prev = self._owner.get(req.rid)
+        if prev is not None and not prev.dead and not req.done:
+            # exactly-once guard: this rid is already live on a healthy
+            # replica — submitting it again would double-serve it
+            self.duplicate_submits += 1
+            raise ValueError(
+                f"request {req.rid} is already live on replica {prev.id}")
+        cands = self.admittable
+        for rep in self.router.order(cands, req):
+            try:
+                rep.engine.submit(req, now=now)
+            except AdmissionRejected:
+                continue
+            self._requests[req.rid] = req
+            self._owner[req.rid] = rep
+            return rep
+        self.rejected += 1
+        raise AdmissionRejected(req.rid, sum(r.load for r in cands),
+                                len(cands), "fleet")
+
+    # --------------------------------------------------------------- failover
+    def kill(self, replica_id: int, now: Optional[float] = None) -> Replica:
+        """Operator/deterministic replica kill (benchmarks and tests use
+        this; chaos runs draw kills from each replica's injector). The
+        replica's engine is abandoned as-is — a dead device's pool is not
+        unwound — and its non-terminal requests fail over."""
+        rep = self._replica(replica_id)
+        self._kill(rep, now)
+        return rep
+
+    def _kill(self, rep: Replica, now: Optional[float]) -> None:
+        rep.health = ReplicaHealth.DEAD
+        self.kills += 1
+        self._harvest()
+        victims = [r for r in rep.engine._requests.values() if not r.done]
+        for r in victims:
+            if self._owner.get(r.rid) is not rep:
+                continue        # rid-keyed dedupe: already moved elsewhere
+            if not self.failover:
+                r.finish("lost", now if now is not None else 0.0)
+                self.lost += 1
+                continue
+            self._resubmit_failover(r, now)
+        self._harvest()
+
+    def _resubmit_failover(self, r: Request, now: Optional[float]) -> None:
+        """Reset a dead replica's request to the recompute-replay shape and
+        re-route it: the prompt plus every token already delivered
+        re-prefills on the survivor (generated output is never produced
+        twice), then decoding continues. The priority boost protects the
+        re-submission from immediate re-eviction on an already-loaded
+        survivor."""
+        r.slot = -1
+        r.state = RequestState.QUEUED
+        r.prefill_pos = 0
+        r.prefill_target = None
+        r.saved_cache = None
+        r.shared_pages = None    # pins lived in the dead pool; gone with it
+        r.match_version = -1
+        r.was_preempted = True
+        r.priority = max(r.priority, self.failover_priority)
+        try:
+            self.submit(r, now=now)
+            self.failovers += 1
+        except AdmissionRejected:
+            # nowhere to go (every survivor's bounded queue is full of live
+            # work): fail fast rather than silently losing the request
+            r.finish("rejected", now if now is not None else 0.0)
+
+    # ------------------------------------------------------------------ steps
+    def step(self, now: Optional[float] = None) -> Dict[int, object]:
+        """One fleet tick: consult each live replica's fault stream (kill /
+        whole-replica latency spike), advance its health state machine, run
+        one engine stage, harvest terminal transitions, and retire idle
+        draining replicas. Returns {replica_id: StageReport-or-None}."""
+        self.ticks += 1
+        reports: Dict[int, object] = {}
+        for rep in list(self.replicas):
+            if rep.dead:
+                continue
+            inj = rep.injector
+            if inj is not None:
+                if inj.replica_kill():
+                    if len(self.live) > self.min_live:
+                        self._kill(rep, now)
+                        continue
+                    self.kills_suppressed += 1
+                spike = inj.replica_spike()
+                if spike > 0.0:
+                    rep.engine.fault_delay += spike
+                    rep.health = ReplicaHealth.DEGRADED
+                    rep.spike_ticks = self.degrade_ticks
+                elif rep.degraded:
+                    rep.spike_ticks -= 1
+                    if rep.spike_ticks <= 0:
+                        rep.health = ReplicaHealth.HEALTHY
+            reports[rep.id] = rep.engine.step(now=now)
+            if rep.draining and not rep.engine.scheduler.has_work:
+                self._retire(rep)
+        self._harvest()
+        return reports
+
+    def _harvest(self) -> None:
+        """Record each request's terminal transition exactly once (the
+        exactly-once ledger the chaos soak asserts over)."""
+        for rid, r in self._requests.items():
+            if r.done and rid not in self._terminal:
+                owner = self._owner.get(rid)
+                self._terminal[rid] = (owner.id if owner else None,
+                                       r.finish_reason)
+
+    # ------------------------------------------------------------ aggregation
+    def poll(self) -> Dict[str, int]:
+        """Aggregate every replica's ``stats(reset=True)`` window deltas
+        into the fleet-lifetime ``counters``; returns this window's
+        aggregate. This is the per-window attribution the stats snapshot
+        API exists for — cumulative totals stay on each engine."""
+        win: Dict[str, int] = {}
+        for rep in self.replicas + self.retired:
+            delta = rep.engine.stats(reset=True)["delta"]
+            for k, v in delta.items():
+                win[k] = win.get(k, 0) + v
+        for k, v in win.items():
+            self.counters[k] = self.counters.get(k, 0) + v
+        return win
+
+    def stats(self) -> dict:
+        """Fleet roll-up: health census, exactly-once ledger, fleet
+        counters, and each replica's own ``stats()`` under its id."""
+        self._harvest()
+        reasons: Dict[str, int] = {}
+        for _, reason in self._terminal.values():
+            reasons[reason] = reasons.get(reason, 0) + 1
+        return {
+            "n_replicas": len(self.replicas),
+            "healthy": sum(1 for rep in self.replicas
+                           if rep.health is ReplicaHealth.HEALTHY
+                           and not rep.draining),
+            "degraded": sum(1 for rep in self.replicas if rep.degraded),
+            "dead": sum(1 for rep in self.replicas if rep.dead),
+            "draining": sum(1 for rep in self.replicas if rep.draining),
+            "retired": len(self.retired),
+            "ticks": self.ticks,
+            "kills": self.kills,
+            "kills_suppressed": self.kills_suppressed,
+            "failovers": self.failovers,
+            "lost": self.lost,
+            "rejected": self.rejected,
+            "duplicate_submits": self.duplicate_submits,
+            "submitted": len(self._requests),
+            "terminal": len(self._terminal),
+            "finish_reasons": reasons,
+            "counters": dict(self.counters),
+            "per_replica": {rep.id: {"health": rep.health.value,
+                                     "draining": rep.draining,
+                                     **rep.engine.stats()}
+                            for rep in self.replicas + self.retired},
+        }
+
+    # -------------------------------------------------------------- run loop
+    @property
+    def has_work(self) -> bool:
+        return (any(rep.engine.scheduler.has_work for rep in self.live)
+                or any(not r.done for r in self._requests.values()))
+
+    def _progress(self) -> int:
+        """Fleet-wide monotone progress: tokens delivered plus terminal
+        transitions, across every request the fleet accepted. Failover
+        preserves delivered output, so this never decreases."""
+        return (sum(len(r.output) for r in self._requests.values())
+                + sum(1 for r in self._requests.values() if r.done))
+
+    def _stall_msg(self, why: str) -> str:
+        census = ", ".join(
+            f"r{rep.id}={rep.health.value}"
+            f"{'(draining)' if rep.draining else ''}:load={rep.load}"
+            for rep in self.replicas)
+        stuck = sorted(rid for rid, r in self._requests.items()
+                       if not r.done)
+        shown = ", ".join(map(str, stuck[:16])) + \
+            (", ..." if len(stuck) > 16 else "")
+        return (f"fleet stalled: {why}; replicas[{census}], "
+                f"stuck rids=[{shown}], counters={self.counters}")
+
+    def run(self, requests: List[Request], *, max_ticks: int = 10_000,
+            stall_ticks: int = 500,
+            poll_every: int = 50) -> List[Request]:
+        """Drive ``requests`` to drain across the fleet. Requests every
+        admittable replica rejects are finished ``"rejected"`` (fail-fast,
+        the batch keeps going). The watchdog polls the per-replica stats
+        windows and raises :class:`FleetStalledError` when the tick budget
+        runs out or ``stall_ticks`` ticks pass with zero fleet-wide
+        progress."""
+        for r in requests:
+            try:
+                self.submit(r)
+            except AdmissionRejected:
+                r.finish("rejected", 0.0)
+                self._requests[r.rid] = r
+        ticks = idle = 0
+        last = self._progress()
+        while self.has_work:
+            if not self.live:
+                self._harvest()
+                raise FleetStalledError(self._stall_msg(
+                    "no live replicas remain with work pending"))
+            if ticks >= max_ticks:
+                raise FleetStalledError(self._stall_msg(
+                    f"max_ticks={max_ticks} exhausted with work pending"))
+            self.step()
+            ticks += 1
+            if ticks % poll_every == 0:
+                self.poll()
+            prog = self._progress()
+            if prog > last:
+                last, idle = prog, 0
+            else:
+                idle += 1
+                if idle >= stall_ticks:
+                    raise FleetStalledError(self._stall_msg(
+                        f"no fleet-wide progress across {idle} ticks"))
+        self.poll()
+        self._harvest()
+        return requests

@@ -69,27 +69,28 @@ def recompute_out(kv: KVManager, req: Request) -> None:
 
 def pick_victim(running: List[Request],
                 now: Optional[float] = None) -> Optional[Request]:
-    """Evict the request with the fewest generated tokens (least sunk work;
-    vLLM evicts latest-arrived — equivalent under FCFS admission). With
-    ``now`` given, a request already past its deadline is always the better
-    victim — its work is dead either way (PR 6)."""
+    """Evict the lowest-``priority`` request, breaking ties by fewest
+    generated tokens (least sunk work; vLLM evicts latest-arrived —
+    equivalent under FCFS admission). With ``now`` given, a request already
+    past its deadline is always the better victim regardless of priority —
+    its work is dead either way (PR 6)."""
     decoding = [r for r in running if r.state == RequestState.DECODE
                 and r.slot >= 0]
     if not decoding:
         return None
     if now is not None:
         return min(decoding, key=lambda r: (not r.past_deadline(now),
-                                            len(r.output)))
-    return min(decoding, key=lambda r: len(r.output))
+                                            r.priority, len(r.output)))
+    return min(decoding, key=lambda r: (r.priority, len(r.output)))
 
 
 def pick_victim_paged(candidates: List[Request],
                       now: Optional[float] = None) -> Optional[Request]:
-    """Page-pressure victim: lowest priority = fewest generated tokens,
-    ties broken by latest arrival. Unlike ``pick_victim``, mid-prefill
-    requests are eligible — they hold pages too and have the least sunk
-    work of all. With ``now`` given, past-deadline requests are preferred
-    over everything else (PR 6)."""
+    """Page-pressure victim, ordered by (priority, fewest generated tokens,
+    latest arrival): the least-important least-sunk newest work goes first.
+    Unlike ``pick_victim``, mid-prefill requests are eligible — they hold
+    pages too and have the least sunk work of all. With ``now`` given,
+    past-deadline requests are preferred over everything else (PR 6)."""
     pool = [r for r in candidates
             if r.slot >= 0 and r.state in (RequestState.DECODE,
                                            RequestState.PREFILL)]
@@ -97,6 +98,7 @@ def pick_victim_paged(candidates: List[Request],
         return None
     if now is not None:
         return min(pool, key=lambda r: (not r.past_deadline(now),
-                                        len(r.output), -r.arrival_time,
-                                        -r.rid))
-    return min(pool, key=lambda r: (len(r.output), -r.arrival_time, -r.rid))
+                                        r.priority, len(r.output),
+                                        -r.arrival_time, -r.rid))
+    return min(pool, key=lambda r: (r.priority, len(r.output),
+                                    -r.arrival_time, -r.rid))

@@ -36,8 +36,15 @@ class Request:
     # EXPIRED so dead work never occupies a slot or a page.
     deadline: Optional[float] = None
     ttft_slo: Optional[float] = None
+    # scheduling priority (PR 7): HIGHER values are more important — they
+    # admit ahead of lower-priority queued work and are evicted last under
+    # capacity pressure (preemption victims are picked lowest-priority
+    # first). The fleet boosts failover re-submissions so a request that
+    # already survived a replica death is not immediately re-evicted.
+    priority: int = 0
     # why the request reached a terminal state: "stop" (eos), "length",
-    # "cancelled", "shed", "rejected" or "expired"; None while live.
+    # "cancelled", "shed", "rejected", "expired" or "lost" (replica died
+    # with failover disabled); None while live.
     finish_reason: Optional[str] = None
     # chunked prefill (scheduler-owned): positions [0, prefill_pos) have
     # been processed and their KV written; prefill_target is frozen at

@@ -1,0 +1,116 @@
+"""Fleet request routing: load balancing + resident-prefix affinity (PR 7).
+
+A fleet of engines is only as fast as its placement decisions. Two policies:
+
+``round-robin``
+    The classic baseline: cycle through admittable replicas in id order.
+    Perfectly fair under uniform traffic, but blind to *where KV already
+    lives* — a burst of requests sharing a long system prefix is sprayed
+    across every replica, each of which re-prefills (and re-allocates pages
+    for) the same prefix the others just computed.
+
+``affinity``
+    Score each admittable replica by resident-prefix affinity minus load:
+
+        score = shared_tokens(replica, req) - load_weight × effective_load
+
+    ``shared_tokens`` is EXACT, not a heuristic: it is the length of the
+    longest resident full-page prefix from ``KVManager.match_prefix`` — the
+    PR 5 token-id-keyed page index, the same lookup admission uses — so a
+    hit here is a hit at prefill time (0 for non-paged / non-sharing
+    engines). ``effective_load`` is the replica's queued+prefilling+running
+    depth plus a penalty while the health state machine marks it DEGRADED,
+    so a latency-spiking replica sheds traffic without leaving rotation.
+    Ties break toward the lighter, lower-id replica. The load term is what
+    keeps affinity from hotspotting: a popular prefix migrates to a second
+    replica exactly when the first one's queue outweighs the prefill
+    saving.
+
+Routers return a best-first *ordering*, not a single pick — the fleet walks
+it so a bounded-queue rejection on the best replica falls through to the
+next instead of failing the request.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.serving.request import Request
+
+ROUTER_POLICIES = ("affinity", "round-robin")
+
+
+class Router:
+    """Routing policy interface: order admittable replicas best-first."""
+
+    name = "base"
+
+    def order(self, replicas: List, req: Request) -> List:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    """Cycle through replicas in id order, one submission at a time."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def order(self, replicas: List, req: Request) -> List:
+        if not replicas:
+            return []
+        replicas = sorted(replicas, key=lambda rep: rep.id)
+        k = self._next % len(replicas)
+        self._next += 1
+        return replicas[k:] + replicas[:k]
+
+
+class AffinityRouter(Router):
+    """Prefix-affinity scoring over the PR 5 token-keyed page index.
+
+    ``load_weight`` converts one unit of queue depth into prefix tokens
+    (how many resident shared tokens one queued request is "worth"); the
+    default uses each replica's page size — one queue position outweighs
+    one resident page. ``degraded_penalty`` is extra effective load while a
+    replica is DEGRADED.
+    """
+
+    name = "affinity"
+
+    def __init__(self, load_weight: float = None,
+                 degraded_penalty: int = 4):
+        self.load_weight = load_weight
+        self.degraded_penalty = degraded_penalty
+
+    def shared_tokens(self, replica, req: Request) -> int:
+        """Exact resident-prefix match length (tokens) for ``req`` on this
+        replica — the number of full pages the admission-time
+        ``pin_prefix`` would hit, times the page size."""
+        eng = replica.engine
+        if not (eng.paged and eng.prefix_share):
+            return 0
+        return (len(eng.kv.match_prefix(req.token_stream()))
+                * eng.kv.page_size)
+
+    def score(self, replica, req: Request) -> float:
+        eng = replica.engine
+        w = self.load_weight
+        if w is None:
+            w = eng.kv.page_size if eng.paged else 8
+        load = replica.load + (self.degraded_penalty
+                               if replica.degraded else 0)
+        return self.shared_tokens(replica, req) - w * load
+
+    def order(self, replicas: List, req: Request) -> List:
+        return sorted(replicas, key=lambda rep: (-self.score(rep, req),
+                                                 rep.load, rep.id))
+
+
+def make_router(policy: str) -> Router:
+    """Instantiate a router by CLI name (``ROUTER_POLICIES``)."""
+    if policy == "affinity":
+        return AffinityRouter()
+    if policy == "round-robin":
+        return RoundRobinRouter()
+    raise ValueError(f"unknown router policy {policy!r}; "
+                     f"choose from {ROUTER_POLICIES}")

@@ -142,7 +142,12 @@ class ContinuousBatchingScheduler:
         """Enqueue ``req``. With a bounded queue, the overload policy makes
         room first: returns the shed victims (the caller must release any
         resources they hold — queued-head prefix pins in particular) or
-        raises :class:`AdmissionRejected` when nothing may be shed."""
+        raises :class:`AdmissionRejected` when nothing may be shed.
+
+        Admission order respects ``Request.priority`` (PR 7): a request
+        enqueues ahead of strictly lower-priority queued work and FIFO
+        within its own priority band — so the queue head is always the
+        oldest highest-priority candidate."""
         shed: List[Request] = []
         if self.queue_cap is not None:
             while len(self.queue) >= self.queue_cap:
@@ -154,7 +159,12 @@ class ContinuousBatchingScheduler:
                 self.queue.remove(victim)
                 self.shed_count += 1
                 shed.append(victim)
-        self.queue.append(req)
+        idx = next((i for i, r in enumerate(self.queue)
+                    if r.priority < req.priority), None)
+        if idx is None:
+            self.queue.append(req)
+        else:
+            self.queue.insert(idx, req)
         return shed
 
     def _shed_victim(self, now: float) -> Optional[Request]:
@@ -165,7 +175,9 @@ class ContinuousBatchingScheduler:
                 if r.past_deadline(now):
                     return r
             return None                 # full of live work -> typed reject
-        return self.queue[0]            # shed-oldest
+        # shed-oldest: the oldest request of the LOWEST priority band (with
+        # uniform priorities this is exactly the queue head)
+        return min(self.queue, key=lambda r: (r.priority, r.arrival_time))
 
     def sweep_expired(self, now: float) -> List[Request]:
         """Per-stage expiry sweep: pull every request past its deadline out

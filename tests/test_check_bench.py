@@ -1,0 +1,53 @@
+"""The benchmark trend gate (tools/check_bench.py, PR 7 satellite)."""
+import importlib.util
+import json
+import os
+
+_spec = importlib.util.spec_from_file_location(
+    "check_bench", os.path.join(os.path.dirname(__file__), os.pardir,
+                                "tools", "check_bench.py"))
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_spec and check_bench)
+
+
+def test_compare_rows_band_and_identity():
+    base = [{"case": "a", "goodput": 0.9, "completed": 40,
+             "drain_clean": True, "t_kernel": 0.5, "tokens_s_paged": 12.0}]
+    # inside the band + wall-time fields wildly off -> no problems
+    cur = [{"case": "a", "goodput": 0.85, "completed": 39,
+            "drain_clean": True, "t_kernel": 9.9, "tokens_s_paged": 0.1}]
+    assert check_bench.compare_rows("x", base, cur, rel=0.2, abs_tol=2) == []
+    # identity flip + numeric drift outside the band -> both reported
+    bad = [{"case": "b", "goodput": 0.3, "completed": 39,
+            "drain_clean": False, "t_kernel": 0.5, "tokens_s_paged": 12.0}]
+    probs = check_bench.compare_rows("x", base, bad, rel=0.2, abs_tol=0)
+    assert any(".case:" in p for p in probs)
+    assert any(".goodput:" in p for p in probs)
+    assert any(".drain_clean:" in p for p in probs)
+    assert not any("t_kernel" in p or "tokens_s" in p for p in probs)
+    # row-count mismatch is a single structural problem
+    assert check_bench.compare_rows("x", base, [], rel=0.2, abs_tol=2) == \
+        ["x: row count 0 != baseline 1"]
+
+
+def test_main_update_then_clean_pass(tmp_path):
+    cur = tmp_path / "cur"
+    baselines = tmp_path / "baselines"
+    cur.mkdir()
+    payload = {"benchmark": "demo", "rows": [{"case": "a", "goodput": 0.9}]}
+    (cur / "demo.json").write_text(json.dumps(payload))
+    # seed the baselines, then compare: clean
+    assert check_bench.main(["--dir", str(cur), "--baselines",
+                             str(baselines), "--update"]) == 0
+    assert (baselines / "BENCH_demo.json").exists()
+    assert check_bench.main(["--dir", str(cur), "--baselines",
+                             str(baselines)]) == 0
+    # drift outside the band: the gate fails
+    payload["rows"][0]["goodput"] = 0.1
+    (cur / "demo.json").write_text(json.dumps(payload))
+    assert check_bench.main(["--dir", str(cur), "--baselines",
+                             str(baselines), "--abs", "0"]) == 1
+    # a baseline whose benchmark was not generated this run also fails
+    (cur / "demo.json").unlink()
+    assert check_bench.main(["--dir", str(cur), "--baselines",
+                             str(baselines)]) == 1

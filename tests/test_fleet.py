@@ -1,0 +1,316 @@
+"""Fleet tier (PR 7): routing, replica health, failover, drain/join.
+
+The fleet soak is the PR's acceptance criterion: under forked per-replica
+fault streams that kill and latency-spike whole replicas (on top of the
+PR 6 engine-level schedule), every request must reach a terminal state
+EXACTLY once, per-replica KV audits must stay clean, and every surviving
+replica must drain to a fully-free pool. Failover preserves delivered
+tokens — a failed-over request's output keeps greedy parity with the
+fault-free run, because re-prefill covers prompt + generated-so-far and
+decoding continues from there.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import small_test_config
+from repro.models.model import init_model
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultInjector
+from repro.serving.fleet import Fleet, FleetStalledError, ReplicaHealth
+from repro.serving.request import Request
+from repro.serving.router import (AffinityRouter, RoundRobinRouter,
+                                  make_router)
+
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    cfg = small_test_config("fleet-test")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _factory(cfg, params, **kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("use_duplex", False)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("kv_page_size", 8)
+    kw.setdefault("prefix_share", True)
+    kw.setdefault("preemption", "recompute")
+    kw.setdefault("prefill_chunk_tokens", 8)
+
+    def make(i, injector):
+        del i
+        return ServingEngine(cfg, params, injector=injector, **kw)
+    return make
+
+
+def _req(rid, vocab, l_in=12, l_out=4, prefix=None, **kw):
+    rng = np.random.default_rng(1000 + rid)
+    prompt = (prefix or []) + rng.integers(0, vocab, l_in).tolist()
+    return Request(rid=rid, prompt=prompt, max_new_tokens=l_out, **kw)
+
+
+def _drive(fleet, max_ticks=2000):
+    for _ in range(max_ticks):
+        if not fleet.has_work:
+            break
+        fleet.step(now=0.0)
+    assert not fleet.has_work, "fleet did not drain"
+
+
+def _assert_survivors_clean(fleet):
+    for rep in fleet.replicas:
+        if rep.dead:
+            continue
+        assert rep.engine.kv.live_pages == 0, f"r{rep.id} leaked pages"
+        assert rep.engine.kv.free_slots == rep.engine.kv.max_slots
+        assert rep.engine.kv.audit(pins={}) == [], f"r{rep.id} dirty audit"
+        assert rep.engine.stats()["audit_violations"] == 0
+
+
+# ---- routers ---------------------------------------------------------------
+def test_make_router_and_unknown_policy():
+    assert isinstance(make_router("affinity"), AffinityRouter)
+    assert isinstance(make_router("round-robin"), RoundRobinRouter)
+    with pytest.raises(ValueError):
+        make_router("random")
+
+
+def test_round_robin_cycles_replicas(fleet_setup):
+    cfg, params = fleet_setup
+    fleet = Fleet(_factory(cfg, params), 3, router="round-robin")
+    owners = [fleet.submit(_req(i, cfg.vocab_size), now=0.0).id
+              for i in range(6)]
+    assert owners == [0, 1, 2, 0, 1, 2]
+    _drive(fleet)
+    _assert_survivors_clean(fleet)
+
+
+def test_affinity_routes_to_resident_prefix(fleet_setup):
+    cfg, params = fleet_setup
+    fleet = Fleet(_factory(cfg, params), 2, router="affinity")
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab_size, 16).tolist()   # 2 full pages
+    donor = _req(0, cfg.vocab_size, prefix=prefix, l_out=12)
+    rep0 = fleet.submit(donor, now=0.0)
+    # prefill the donor until BOTH prefix pages are registered on rep0
+    for _ in range(15):
+        fleet.step(now=0.0)
+        if len(rep0.engine.kv.match_prefix(prefix)) == 2:
+            break
+    assert len(rep0.engine.kv.match_prefix(prefix)) == 2
+    router = fleet.router
+    follower = _req(1, cfg.vocab_size, prefix=prefix, l_out=4)
+    assert router.shared_tokens(rep0, follower) == 16
+    # affinity: the follower co-locates with its resident prefix even
+    # though rep0 is the more loaded replica...
+    assert fleet.submit(follower, now=0.0) is rep0
+    # ...while a prefix-less request balances to the idle replica
+    stranger = _req(2, cfg.vocab_size, l_out=4)
+    assert fleet.submit(stranger, now=0.0).id == 1
+    _drive(fleet)
+    assert all(r.completed for r in (donor, follower, stranger))
+    assert rep0.engine.shared_tokens_skipped >= 16
+    _assert_survivors_clean(fleet)
+
+
+def test_affinity_penalizes_degraded_replica(fleet_setup):
+    cfg, params = fleet_setup
+    fleet = Fleet(_factory(cfg, params), 2, router="affinity")
+    fleet.replicas[0].health = ReplicaHealth.DEGRADED
+    req = _req(0, cfg.vocab_size)
+    order = fleet.router.order(fleet.admittable, req)
+    assert [rep.id for rep in order] == [1, 0]
+
+
+# ---- failover ---------------------------------------------------------------
+def test_failover_exactly_once_with_token_parity(fleet_setup):
+    cfg, params = fleet_setup
+
+    def reqs():
+        return [_req(i, cfg.vocab_size, l_out=6) for i in range(6)]
+
+    # fault-free reference for greedy parity
+    ref = Fleet(_factory(cfg, params), 2, router="round-robin")
+    ref_reqs = reqs()
+    for r in ref_reqs:
+        ref.submit(r, now=0.0)
+    _drive(ref)
+    expect = {r.rid: list(r.output) for r in ref_reqs}
+
+    fleet = Fleet(_factory(cfg, params), 2, router="round-robin")
+    rs = reqs()
+    for r in rs:
+        fleet.submit(r, now=0.0)
+    # let replica 0's requests get mid-flight (some tokens delivered)
+    victims = [r for r in rs if fleet._owner[r.rid].id == 0]
+    assert victims
+    for _ in range(50):
+        fleet.step(now=0.0)
+        if any(r.output for r in victims):
+            break
+    assert any(not r.done for r in victims)
+    fleet.kill(0, now=0.0)
+    assert fleet.kills == 1 and fleet.failovers > 0
+    # every in-flight victim now lives on the survivor, with a priority
+    # boost so it is not immediately re-evicted
+    for r in victims:
+        if not r.done:
+            assert fleet._owner[r.rid].id == 1
+            assert r.priority >= fleet.failover_priority
+    _drive(fleet)
+    st = fleet.stats()
+    assert all(r.completed for r in rs)
+    assert st["terminal"] == st["submitted"] == len(rs)   # exactly once
+    assert st["duplicate_submits"] == 0 and st["lost"] == 0
+    # failover never re-generates a delivered token: greedy parity holds
+    assert {r.rid: list(r.output) for r in rs} == expect
+    _assert_survivors_clean(fleet)
+
+
+def test_failover_disabled_strands_requests(fleet_setup):
+    cfg, params = fleet_setup
+    fleet = Fleet(_factory(cfg, params), 2, router="round-robin",
+                  failover=False)
+    rs = [_req(i, cfg.vocab_size, l_out=6) for i in range(6)]
+    for r in rs:
+        fleet.submit(r, now=0.0)
+    fleet.step(now=0.0)
+    victims = [r for r in rs if fleet._owner[r.rid].id == 0 and not r.done]
+    assert victims
+    fleet.kill(0, now=0.0)
+    assert fleet.failovers == 0 and fleet.lost == len(victims)
+    assert all(r.finish_reason == "lost" for r in victims)
+    _drive(fleet)
+    st = fleet.stats()
+    assert st["terminal"] == st["submitted"]   # lost IS a terminal state
+    assert all(r.completed for r in rs if r not in victims)
+    _assert_survivors_clean(fleet)
+
+
+def test_duplicate_submit_guard(fleet_setup):
+    cfg, params = fleet_setup
+    fleet = Fleet(_factory(cfg, params), 2)
+    r = _req(0, cfg.vocab_size)
+    fleet.submit(r, now=0.0)
+    with pytest.raises(ValueError, match="already live"):
+        fleet.submit(r, now=0.0)
+    assert fleet.duplicate_submits == 1
+    _drive(fleet)
+
+
+# ---- drain / elastic join & leave ------------------------------------------
+def test_drain_retires_replica_and_releases_pool(fleet_setup):
+    cfg, params = fleet_setup
+    fleet = Fleet(_factory(cfg, params), 2, router="round-robin")
+    a = _req(0, cfg.vocab_size, l_out=6)
+    rep0 = fleet.submit(a, now=0.0)
+    assert rep0.id == 0
+    fleet.drain(0)
+    # new work routes around the draining replica...
+    b = _req(1, cfg.vocab_size, l_out=4)
+    assert fleet.submit(b, now=0.0).id == 1
+    # ...while its in-flight request finishes normally
+    _drive(fleet)
+    assert a.completed and b.completed
+    assert len(fleet.replicas) == 1 and len(fleet.retired) == 1
+    retired = fleet.retired[0]
+    assert retired.id == 0 and retired.drain_clean is True
+    assert retired.engine.kv.cache is None     # pool released
+    _assert_survivors_clean(fleet)
+
+
+def test_join_scales_up_and_serves(fleet_setup):
+    cfg, params = fleet_setup
+    fleet = Fleet(_factory(cfg, params), 1, router="round-robin")
+    rep = fleet.join()
+    assert rep.id == 1 and len(fleet.replicas) == 2
+    owners = {fleet.submit(_req(i, cfg.vocab_size), now=0.0).id
+              for i in range(4)}
+    assert owners == {0, 1}           # the joiner takes traffic
+    fleet.leave(0)
+    _drive(fleet)
+    assert all(r.completed for r in fleet._requests.values())
+    assert [rep.id for rep in fleet.replicas] == [1]
+    assert fleet.retired[0].drain_clean is True
+
+
+# ---- health state machine ---------------------------------------------------
+def test_replica_spike_degrades_then_recovers(fleet_setup):
+    cfg, params = fleet_setup
+    inj = FaultInjector(0, p_page_alloc_fail=0.0, p_forced_evict=0.0,
+                        p_step_error=0.0, p_latency_spike=0.0,
+                        p_replica_spike=1.0, replica_spike_s=0.5)
+    fleet = Fleet(_factory(cfg, params), 1, injector=inj, degrade_ticks=2)
+    rep = fleet.replicas[0]
+    fleet.submit(_req(0, cfg.vocab_size, l_out=4), now=0.0)
+    fleet.step(now=0.0)
+    assert rep.health is ReplicaHealth.DEGRADED
+    assert rep.engine.fault_delay >= 0.5       # the spike hit the clock
+    rep.injector.p_replica_spike = 0.0         # spikes stop...
+    for _ in range(fleet.degrade_ticks + 1):
+        fleet.step(now=0.0)
+    assert rep.health is ReplicaHealth.HEALTHY  # ...and the replica recovers
+    _drive(fleet)
+
+
+def test_watchdog_raises_on_fleet_stall(fleet_setup):
+    cfg, params = fleet_setup
+    # a pool of ONE page with preemption off: the request's demand can
+    # never be admitted on any replica -> fleet-wide livelock
+    factory = _factory(cfg, params, max_slots=1, kv_num_pages=2,
+                       preemption="none", prefix_share=False)
+    fleet = Fleet(factory, 2, router="round-robin")
+    with pytest.raises(FleetStalledError) as ei:
+        fleet.run([_req(5, cfg.vocab_size, l_in=10, l_out=4)],
+                  stall_ticks=10)
+    msg = str(ei.value)
+    assert "no fleet-wide progress" in msg and "rids=[5]" in msg
+
+
+def test_fork_streams_are_deterministic_and_independent():
+    base = FaultInjector(9, p_replica_kill=0.3, p_replica_spike=0.3)
+    a1, a2, b = base.fork(0), base.fork(0), base.fork(1)
+    seq = lambda inj: [(inj.replica_kill(), inj.replica_spike())
+                       for _ in range(100)]
+    sa1, sa2, sb = seq(a1), seq(a2), seq(b)
+    assert sa1 == sa2                 # same replica index -> same stream
+    assert sa1 != sb                  # siblings draw independently
+    assert base.counts["replica_kill"] == 0   # parent stream untouched
+
+
+# ---- the fleet chaos soak (acceptance criterion) ---------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fleet_chaos_soak_exactly_once(fleet_setup, seed):
+    cfg, params = fleet_setup
+    inj = FaultInjector(seed, p_page_alloc_fail=0.03, p_forced_evict=0.05,
+                        p_step_error=0.03, p_latency_spike=0.03,
+                        p_replica_kill=0.02, p_replica_spike=0.04,
+                        max_retries=4)
+    fleet = Fleet(_factory(cfg, params), 3, router="affinity",
+                  injector=inj, min_live=1)
+    rng = np.random.default_rng(42)
+    sys_prefix = rng.integers(0, cfg.vocab_size, 16).tolist()
+    reqs = [_req(i, cfg.vocab_size,
+                 prefix=sys_prefix if i % 3 else None,
+                 l_in=6 + i % 5, l_out=5)
+            for i in range(12)]
+    fleet.run(reqs, max_ticks=3000, stall_ticks=1000)
+
+    st = fleet.stats()
+    # exactly-once: every accepted request reached ONE terminal state
+    assert st["terminal"] == st["submitted"] == len(reqs)
+    assert st["duplicate_submits"] == 0
+    assert st["lost"] == 0            # failover leaves nothing stranded
+    assert all(r.completed for r in reqs)
+    assert all(len(r.output) == 5 for r in reqs)   # no double generation
+    # clean per-replica audits (dead replicas audited while they lived)
+    for rid_, s in st["per_replica"].items():
+        assert s["audit_violations"] == 0, f"replica {rid_} audit dirty"
+    _assert_survivors_clean(fleet)
+    # the soak must actually have drawn fleet-level faults across seeds
+    child_faults = sum(rep.injector.total_faults
+                       for rep in fleet.replicas + fleet.retired)
+    assert child_faults > 0, "fleet soak drew no faults — raise rates"

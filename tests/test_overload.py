@@ -263,6 +263,149 @@ def test_watchdog_stall_counter(ov_setup):
     assert eng.stage_aborts >= 5
 
 
+# ---- cancel mid-chunk prefill (PR 7 satellite) -----------------------------
+def test_cancel_mid_chunk_prefill_releases_everything(ov_setup):
+    """Cancel landing BETWEEN chunks of an in-flight prefill: the request
+    owns a slot and partially-written pages but has produced no token yet —
+    all of it must come back and the pool must drain fully-free."""
+    cfg, params = ov_setup
+    eng = _engine(cfg, params, max_slots=2, kv_layout="paged",
+                  kv_page_size=8, prefill_chunk_tokens=8)
+    r = _req(0, l_in=24, l_out=4)     # 3 chunks of 8
+    eng.submit(r, now=0.0)
+    eng.step(now=0.0)                 # first chunk: claims slot + pages
+    assert r.state is RequestState.PREFILL and r.slot >= 0
+    assert 0 < r.prefill_pos < r.prefill_total
+    assert eng.kv.live_pages > 0
+    assert eng.cancel(0, now=0.0)
+    assert r.state is RequestState.CANCELLED and r.slot == -1
+    assert r.finish_reason == "cancelled" and r.output == []
+    assert not eng.scheduler.has_work
+    # THE leak check: pages, slot, audit — the pool is fully free
+    assert eng.kv.live_pages == 0
+    assert eng.kv.free_slots == eng.kv.max_slots
+    assert eng.kv.audit(pins={}) == []
+    assert eng.stats()["cancelled"] == 1
+
+
+def test_cancel_mid_chunk_prefill_with_adopted_prefix(ov_setup):
+    """Same, but the cancelled prefill had adopted shared prefix pages at
+    admission: cancelling must decref them (donor keeps its pages) and the
+    pool must still drain to fully-free once the donor completes."""
+    cfg, params = ov_setup
+    eng = _engine(cfg, params, max_slots=2, kv_layout="paged",
+                  kv_page_size=8, prefix_share=True,
+                  prefill_chunk_tokens=8)
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab_size, 16).tolist()   # 2 full pages
+    donor = Request(rid=0, prompt=prefix + [5, 6], max_new_tokens=12)
+    eng.submit(donor, now=0.0)
+    for _ in range(10):
+        eng.step(now=0.0)
+        if eng.kv.match_prefix(prefix):
+            break
+    assert eng.kv.match_prefix(prefix), "donor prefix never got indexed"
+    sharer = Request(rid=1, prompt=prefix + list(range(9, 19)),
+                     max_new_tokens=6)
+    eng.submit(sharer, now=0.0)       # matches + pins the resident prefix
+    assert sharer.shared_pages
+    shared = list(sharer.shared_pages)
+    # step until the admission chunk ran (adopting the pages) but the
+    # prefill is not finished — the mid-chunk window under test
+    for _ in range(10):
+        eng.step(now=0.0)
+        if sharer.state is RequestState.PREFILL:
+            break
+    assert sharer.state is RequestState.PREFILL
+    assert not sharer.prefill_done
+    refs_before = [eng.kv.page_ref(p) for p in shared]
+    assert eng.cancel(1, now=0.0)
+    # the donor's copies survive: exactly one ref dropped per shared page
+    assert [eng.kv.page_ref(p) for p in shared] == \
+        [c - 1 for c in refs_before]
+    _drain(eng, now=0.0)
+    assert donor.completed
+    assert eng.kv.live_pages == 0
+    assert eng.kv.free_slots == eng.kv.max_slots
+    assert eng.kv.audit(pins={}) == []
+
+
+# ---- stats snapshot windows (PR 7 satellite) -------------------------------
+def test_stats_reset_window_deltas(ov_setup):
+    """stats(reset=True) snapshots the counter base so the next call's
+    ``delta`` attributes activity to the window, while the cumulative
+    totals keep counting from engine birth."""
+    cfg, params = ov_setup
+    eng = _engine(cfg, params)
+    eng.submit(_req(0, l_out=2), now=0.0)
+    _drain(eng, now=0.0)
+    st1 = eng.stats(reset=True)
+    assert st1["stages"] > 0
+    assert st1["delta"]["stages"] == st1["stages"]   # first window = all
+    eng.submit(_req(1, l_out=4), now=0.0)
+    eng.step(now=0.0)
+    eng.cancel(1, now=0.0)
+    st2 = eng.stats()
+    assert st2["delta"]["stages"] == st2["stages"] - st1["stages"] > 0
+    assert st2["delta"]["cancelled"] == 1
+    assert st2["cancelled"] == 1                     # cumulative unchanged
+    st3 = eng.stats()                 # no reset: window stays open
+    assert st3["delta"] == st2["delta"]
+    eng.stats(reset=True)
+    empty = eng.stats()["delta"]      # fresh window, no activity
+    assert all(v == 0 for v in empty.values())
+    assert set(empty) == set(ServingEngine.STATS_DELTA_KEYS)
+
+
+# ---- priority (PR 7 satellite) ---------------------------------------------
+def test_priority_admission_order():
+    s = ContinuousBatchingScheduler()
+    s.submit(_req(0))
+    s.submit(_req(1))
+    s.submit(_req(2, priority=5))     # jumps every lower-priority entry
+    assert [r.rid for r in s.queue] == [2, 0, 1]
+    s.submit(_req(3, priority=5))     # FIFO within its own band
+    assert [r.rid for r in s.queue] == [2, 3, 0, 1]
+    s.submit(_req(4, priority=1))     # between the bands
+    assert [r.rid for r in s.queue] == [2, 3, 4, 0, 1]
+
+
+def test_priority_shed_oldest_takes_lowest_band():
+    s = ContinuousBatchingScheduler(queue_cap=2,
+                                    overload_policy="shed-oldest")
+    hi = _req(0, priority=3)
+    lo = _req(1)                      # newer but lower priority
+    s.submit(hi)
+    s.submit(lo)
+    shed = s.submit(_req(2, priority=1))
+    assert shed == [lo] and hi in s.queue
+
+
+def test_priority_victim_selection():
+    from repro.serving import preemption as pre
+    def running(rid, priority, n_out, arrival=0.0, deadline=None):
+        r = _req(rid, priority=priority, arrival_time=arrival,
+                 deadline=deadline)
+        r.state = RequestState.DECODE
+        r.slot = rid
+        r.output = list(range(n_out))
+        return r
+    a = running(0, priority=2, n_out=1)
+    b = running(1, priority=0, n_out=3)
+    c = running(2, priority=0, n_out=1)
+    # lowest priority first, then fewest generated tokens
+    assert pre.pick_victim([a, b, c]) is c
+    assert pre.pick_victim_paged([a, b, c]) is c
+    # latest arrival breaks the remaining tie (paged only)
+    d = running(3, priority=0, n_out=1, arrival=5.0)
+    assert pre.pick_victim_paged([c, d]) is d
+    # a past-deadline request is dead work: evicted first regardless of
+    # priority (PR 6 semantics preserved above the priority key)
+    e = running(4, priority=9, n_out=2, deadline=1.0)
+    assert pre.pick_victim([a, b, c, e], now=2.0) is e
+    assert pre.pick_victim_paged([a, b, c, e], now=2.0) is e
+
+
 # ---- reporting -------------------------------------------------------------
 def test_stage_report_and_stats_counters(ov_setup):
     cfg, params = ov_setup

@@ -1,0 +1,125 @@
+"""Benchmark trend gate: compare fresh benchmark JSONs against baselines.
+
+  PYTHONPATH=src python -m benchmarks.run --out-dir bench-json --only ...
+  python tools/check_bench.py --dir bench-json
+  python tools/check_bench.py --dir bench-json --update   # re-seed baselines
+
+The perf-trajectory JSONs (``benchmarks/run.py --out-dir``) were upload-only
+artifacts: a regression changed the numbers and nobody failed. This gate
+compares each current ``<name>.json`` against the committed
+``benchmarks/baselines/BENCH_<name>.json``:
+
+  * identity fields (strings, booleans, None) must match exactly — a row's
+    ``policy``/``case``/``drain_clean`` flipping is a semantic break, not
+    noise;
+  * numeric fields must land inside a tolerance band
+    (``|cur - base| <= abs + rel * |base|``) — the workloads are seeded and
+    virtual-timed, so drift beyond the band means the code changed
+    behavior, not the machine changed speed;
+  * wall-clock-ish fields (``t_*``, ``*_s``, ``tokens_s*``, ...) are
+    SKIPPED — CI machines vary and those belong to the artifact trail, not
+    the gate.
+
+Baselines are re-seeded deliberately with ``--update`` when a PR moves the
+numbers on purpose; the diff then shows exactly what moved, by how much.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import sys
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), os.pardir,
+                                 "benchmarks", "baselines")
+# wall-clock-dependent fields: machine speed, not code behavior
+SKIP_FIELD = re.compile(r"(^t_|_time$|^time_|_s$|_ms$|tokens_s|wall)")
+
+
+def compare_rows(name, base_rows, cur_rows, *, rel, abs_tol):
+    problems = []
+    if len(base_rows) != len(cur_rows):
+        return [f"{name}: row count {len(cur_rows)} != baseline "
+                f"{len(base_rows)}"]
+    for i, (b, c) in enumerate(zip(base_rows, cur_rows)):
+        for key, bv in b.items():
+            if key not in c:
+                problems.append(f"{name}[{i}].{key}: missing from current")
+                continue
+            cv = c[key]
+            if isinstance(bv, bool) or bv is None or isinstance(bv, str):
+                if cv != bv:
+                    problems.append(
+                        f"{name}[{i}].{key}: {cv!r} != baseline {bv!r}")
+            elif isinstance(bv, (int, float)):
+                if SKIP_FIELD.search(key):
+                    continue
+                if not isinstance(cv, (int, float)) or \
+                        abs(cv - bv) > abs_tol + rel * abs(bv):
+                    problems.append(
+                        f"{name}[{i}].{key}: {cv} outside band around "
+                        f"baseline {bv} (rel={rel}, abs={abs_tol})")
+    return problems
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--dir", required=True,
+                   help="directory of freshly generated <name>.json files")
+    p.add_argument("--baselines", default=DEFAULT_BASELINES,
+                   help="directory of committed BENCH_<name>.json baselines")
+    p.add_argument("--rel", type=float, default=0.35,
+                   help="relative tolerance on numeric fields")
+    p.add_argument("--abs", dest="abs_tol", type=float, default=2.0,
+                   help="absolute slack (keeps small counts from tripping "
+                        "the relative band)")
+    p.add_argument("--update", action="store_true",
+                   help="re-seed the baselines from --dir instead of "
+                        "comparing (commit the diff deliberately)")
+    args = p.parse_args(argv)
+
+    if args.update:
+        os.makedirs(args.baselines, exist_ok=True)
+        for fn in sorted(os.listdir(args.dir)):
+            if not fn.endswith(".json"):
+                continue
+            dst = os.path.join(args.baselines, f"BENCH_{fn[:-5]}.json")
+            shutil.copyfile(os.path.join(args.dir, fn), dst)
+            print(f"[check_bench] seeded {dst}")
+        return 0
+
+    if not os.path.isdir(args.baselines):
+        print(f"[check_bench] no baselines at {args.baselines}; run with "
+              f"--update to seed them")
+        return 1
+    problems = []
+    checked = 0
+    for fn in sorted(os.listdir(args.baselines)):
+        m = re.fullmatch(r"BENCH_(.+)\.json", fn)
+        if not m:
+            continue
+        name = m.group(1)
+        cur_path = os.path.join(args.dir, f"{name}.json")
+        if not os.path.exists(cur_path):
+            problems.append(f"{name}: baseline exists but {cur_path} was "
+                            f"not generated this run")
+            continue
+        with open(os.path.join(args.baselines, fn)) as f:
+            base = json.load(f)
+        with open(cur_path) as f:
+            cur = json.load(f)
+        problems += compare_rows(name, base.get("rows", []),
+                                 cur.get("rows", []),
+                                 rel=args.rel, abs_tol=args.abs_tol)
+        checked += 1
+    for pr in problems:
+        print(f"[check_bench] DRIFT {pr}")
+    print(f"[check_bench] {checked} benchmarks checked, "
+          f"{len(problems)} problems")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,7 +49,7 @@ def check_flags() -> list:
     doc_flags = set(_FLAG.findall(readme))
     # flags documented in README that reference other CLIs (benchmarks.run,
     # pytest) are checked only for existence in the tree's python sources
-    other_ok = {"--full", "--only", "--out-dir", "--out"}
+    other_ok = {"--full", "--only", "--out-dir", "--out", "--update"}
     errors = [f"README names {f} but serve.py has no such flag"
               for f in doc_flags - serve_flags - other_ok]
     errors += [f"serve.py flag {f} is not documented in README"
