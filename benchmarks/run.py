@@ -35,6 +35,7 @@ FIGS = [
     "prefix_share",          # prefix sharing + preemption (PR 5 tentpole)
     "overload",              # goodput under overload + shedding (PR 6)
     "fleet",                 # multi-replica routing + failover (PR 7)
+    "serve_async",           # pipelined vs sync serving loop (PR 8 tentpole)
 ]
 
 

@@ -1,0 +1,170 @@
+"""Async serving-loop benchmark: host stage-gap and tokens/s, async vs sync.
+
+The Duplex premise is that the device should never wait: every cycle goes
+to the processor matched to the layer's Op/B. The sync serving loop breaks
+that at stage boundaries — ``step()`` forms a stage, dispatches, then
+blocks on ``np.asarray(next_tokens)`` and runs ALL its commit accounting
+before the next stage is even planned, so the device idles for the whole
+host turnaround. The PR 8 pipelined loop (``run_async``) overlaps them:
+while stage N runs on device, the host defers stage N−1's accounting and
+speculatively plans/dispatches N+1, leaving only the critical commit
+(token apply, ``kv.lens`` advance) between materialization and the next
+enqueue.
+
+Per flavor ({dense monolithic, paged chunked}) this benchmark runs the
+SAME seeded greedy workload through both loops on pre-warmed engines
+(first pass compiles every jit bucket; the measured pass re-runs fresh
+copies) and reports:
+
+  * ``t_gap_sync_ms`` / ``t_gap_async_ms`` — mean host stage-gap: wall
+    time from a stage's result materialization to the next stage's
+    dispatch, i.e. the device-idle window (wall-clock fields, recorded
+    for the trajectory but exempt from the trend gate);
+  * ``gap_ok`` — gated: the async gap is >5x smaller than sync;
+  * ``parity`` — gated: byte-identical greedy tokens across the loops;
+  * ``spec_hits`` / ``spec_misses`` — gated (deterministic): speculative
+    next-stage plans dispatched as-is vs invalidated by a commit (EOS
+    finishes are the expected miss source);
+  * ``tokens_s_sync`` / ``tokens_s_async`` — throughput over the best of
+    ``REPEATS`` measured passes (min-wall, the standard noise-robust
+    estimator; recorded, not gated — CI machines vary).
+
+Caveat for CPU-only hosts: with a single core the "device" IS the host,
+so overlap cannot add wall-clock throughput — the loops measure equal
+(any recorded delta is scheduler noise) and the gap metric is the
+structural signal: a chained stage is enqueued before the previous
+stage's sync point, which on a real accelerator converts directly into
+device-busy time. Emits JSON (stdout, plus ``--out FILE``) for the perf
+trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+
+def _mk_requests(seed, *, n, l_out, vocab, max_len, chunk):
+    from repro.serving.request import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        # mixed prompt lengths: some under one chunk, some spanning several
+        l_in = int(rng.integers(8, min(3 * chunk + 8, max_len - l_out - 1)))
+        prompt = rng.integers(0, vocab, l_in).tolist()
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=l_out))
+    return reqs
+
+
+def _measure(eng, reqs, *, use_async):
+    """One measured pass: reset the gap counters, drive to drain, return
+    (outputs, wall seconds, generated tokens)."""
+    eng.host_gap_s = 0.0
+    eng.gap_stages = 0
+    eng._t_sync_done = None
+    t0 = time.monotonic()
+    if use_async:
+        eng.run_async(reqs, max_stages=20_000)
+    else:
+        eng.run(reqs, max_stages=20_000)
+    wall = time.monotonic() - t0
+    toks = sum(len(r.output) for r in reqs)
+    return {r.rid: list(r.output) for r in reqs}, wall, toks
+
+
+def run(quick: bool = True, seed: int = 0) -> List[Dict]:
+    from repro.configs.base import small_test_config
+    from repro.models.model import init_model
+    from repro.serving.engine import ServingEngine
+
+    n_req = 16 if quick else 64
+    l_out = 8 if quick else 32
+    max_slots = 8 if quick else 16
+    max_len = 96 if quick else 512
+    page = 16 if quick else 64
+    chunk = 24 if quick else 128
+    cfg = small_test_config("bench-async", num_layers=2 if quick else 4,
+                            d_model=128 if quick else 256, num_heads=4,
+                            num_kv_heads=2, head_dim=64)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    flavors = {
+        "dense_monolithic": dict(kv_layout="dense"),
+        "paged_chunked": dict(kv_layout="paged", kv_page_size=page,
+                              prefill_chunk_tokens=chunk),
+    }
+    rows: List[Dict] = []
+    repeats = 3 if quick else 5
+    for flavor, kw in flavors.items():
+        runs = {}
+        for use_async in (False, True):
+            eng = ServingEngine(cfg, params, max_slots=max_slots,
+                                max_len=max_len, use_duplex=False, **kw)
+            # warmup pass compiles every jit bucket this workload touches
+            # (the measured pass re-runs the same spans -> same buckets)
+            _measure(eng, _mk_requests(seed + 1, n=n_req, l_out=l_out,
+                                       vocab=cfg.vocab_size, max_len=max_len,
+                                       chunk=chunk), use_async=use_async)
+            # best-of-N measured passes: min wall / min gap are the
+            # noise-robust estimators (timeit-style) on shared CI hosts
+            best = None
+            for _ in range(repeats):
+                reqs = _mk_requests(seed + 1, n=n_req, l_out=l_out,
+                                    vocab=cfg.vocab_size, max_len=max_len,
+                                    chunk=chunk)
+                outs, wall, toks = _measure(eng, reqs, use_async=use_async)
+                gap = eng.host_gap_s / max(eng.gap_stages, 1)
+                if best is not None:
+                    assert outs == best["outs"]     # pass-to-pass parity
+                if best is None or wall < best["wall"]:
+                    best = dict(outs=outs, wall=wall, toks=toks)
+                best["gap"] = min(gap, best.get("gap", gap))
+            best["eng"] = eng
+            runs[use_async] = best
+        sync, asy = runs[False], runs[True]
+        e_a = asy["eng"]
+        gap_s, gap_a = sync["gap"], asy["gap"]
+        rows.append({
+            "flavor": flavor,
+            "n_requests": int(n_req),
+            "tokens_total": int(asy["toks"]),
+            "t_gap_sync_ms": round(gap_s * 1e3, 4),
+            "t_gap_async_ms": round(gap_a * 1e3, 4),
+            "gap_ok": bool(gap_s > 5.0 * gap_a),
+            "parity": bool(sync["outs"] == asy["outs"]),
+            "spec_hits": int(e_a.spec_hits),
+            "spec_misses": int(e_a.spec_misses),
+            "tokens_s_sync": round(sync["toks"] / max(sync["wall"], 1e-9), 1),
+            "tokens_s_async": round(asy["toks"] / max(asy["wall"], 1e-9), 1),
+        })
+    return rows
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--out", default=None)
+    args = p.parse_args()
+    rows = run(quick=not args.full)
+    payload = {"benchmark": "serve_async", "rows": rows}
+    print(json.dumps(payload, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    ok = all(r["parity"] and r["gap_ok"] for r in rows)
+    for r in rows:
+        ratio = r["t_gap_sync_ms"] / max(r["t_gap_async_ms"], 1e-9)
+        print(f"# {r['flavor']}: gap {r['t_gap_sync_ms']:.3f}ms -> "
+              f"{r['t_gap_async_ms']:.3f}ms ({ratio:.1f}x, accept > 5x), "
+              f"tokens/s {r['tokens_s_sync']} -> {r['tokens_s_async']}, "
+              f"parity={r['parity']}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,6 +9,7 @@ and the per-stage dispatch decisions (bandwidth-path FLOP fraction, k_cold).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -23,13 +24,37 @@ from repro.serving.request import Request
 from repro.serving.router import ROUTER_POLICIES
 
 
+@contextlib.contextmanager
+def profiled(log_dir):
+    """Wrap the serving loop in ``jax.profiler.trace`` (the levanter
+    Performance-Guide recipe): profile exactly the loop, nothing else, and
+    print where the trace landed. Degrades to unprofiled with a warning if
+    the profiler backend is unavailable in this build."""
+    if not log_dir:
+        yield
+        return
+    try:
+        ctx = jax.profiler.trace(log_dir)
+        ctx.__enter__()
+    except Exception as e:                               # pragma: no cover
+        print(f"[serve] profiler unavailable ({e}); running unprofiled")
+        yield
+        return
+    try:
+        yield
+    finally:
+        ctx.__exit__(None, None, None)
+        print(f"[serve] profiler trace written under {log_dir} "
+              f"(view: tensorboard --logdir {log_dir})")
+
+
 def run_fleet(args, make_engine, injector, reqs) -> int:
     """Serve through a Fleet of replicas; under --chaos, verify the fleet's
     robustness ledger and exit nonzero on any violation: a request that
     finished twice or not at all, an engine-level audit violation on any
     replica, or a surviving replica whose pool did not drain fully free."""
     fleet = Fleet(make_engine, args.replicas, router=args.router,
-                  injector=injector)
+                  injector=injector, async_steps=args.async_loop)
     try:
         done = fleet.run(reqs)
     except FleetStalledError as e:
@@ -142,6 +167,21 @@ def main(argv=None) -> int:
                         "scores replicas by resident-prefix match length "
                         "(paged + --prefix-share) minus load; "
                         "'round-robin' cycles blindly")
+    p.add_argument("--async", dest="async_loop", action="store_true",
+                   help="pipelined serving loop: while stage N runs on "
+                        "device the host commits N-1 and speculatively "
+                        "plans/dispatches N+1 (JAX async dispatch); greedy "
+                        "tokens are byte-identical to the sync loop; with "
+                        "--replicas >1 every replica steps pipelined")
+    p.add_argument("--aging-rounds", type=int, default=None, metavar="K",
+                   help="priority aging: promote a queued request's "
+                        "effective priority one band per K admission "
+                        "rounds it was skipped, so starved low-priority "
+                        "work eventually admits (default: strict bands)")
+    p.add_argument("--profile", metavar="DIR", default=None,
+                   help="wrap the serving loop in jax.profiler.trace(DIR) "
+                        "and print the trace path (inspect with "
+                        "TensorBoard or Perfetto)")
     p.add_argument("--no-duplex", action="store_true")
     p.add_argument("--kernels", action="store_true",
                    help="lower through the Pallas kernels (interpret mode "
@@ -195,6 +235,7 @@ def main(argv=None) -> int:
                              prefill_chunk_tokens=args.prefill_chunk,
                              queue_cap=args.queue_cap,
                              overload_policy=args.overload_policy,
+                             aging_rounds=args.aging_rounds,
                              injector=(child_injector if fleet_mode
                                        else injector))
 
@@ -218,8 +259,11 @@ def main(argv=None) -> int:
                             max_new_tokens=args.l_out,
                             arrival_time=t0, deadline=deadline))
     if fleet_mode:
-        return run_fleet(args, make_engine, injector, reqs)
-    done = eng.run(reqs)
+        with profiled(args.profile):
+            return run_fleet(args, make_engine, injector, reqs)
+    with profiled(args.profile):
+        done = (eng.run_async(reqs) if args.async_loop
+                else eng.run(reqs))
     n_done = sum(r.completed for r in done)
     tbts = [t for r in done for t in r.tbts()]
     mixed = sum(1 for r in eng.reports if r.is_mixed)
@@ -259,6 +303,15 @@ def main(argv=None) -> int:
         print(f"[serve] preemption({preemption}): {eng.preemptions} "
               f"evictions, peak concurrent batch={eng.peak_active}")
     st2 = eng.stats()
+    if args.async_loop:
+        gap_ms = st2["host_gap_s"] * 1e3 / max(st2["gap_stages"], 1)
+        print(f"[serve] async loop: spec_hits={st2['spec_hits']} "
+              f"spec_misses={st2['spec_misses']} "
+              f"host stage-gap mean={gap_ms:.3f}ms "
+              f"over {st2['gap_stages']} gaps")
+    if args.aging_rounds is not None:
+        print(f"[serve] priority aging(K={args.aging_rounds}): "
+              f"{st2['aging_promotions']} promotions")
     if (args.queue_cap is not None or args.deadline_ms is not None
             or injector is not None):
         print(f"[serve] robustness: shed={st2['shed']} "

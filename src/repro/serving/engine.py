@@ -57,12 +57,32 @@ pages survive under their other owners — and it replays through the
 recompute path. Accounting (``kv_bytes_streamed``, ``live_pages``) counts a
 shared page once. The kernels need no changes: block tables already
 indirect every access.
+
+Async pipelining (PR 8, docs/architecture.md "Async serving loop"): the
+stage loop is split into ``plan_stage`` (pure host: maintenance, admission
+caps, scheduler spans, Op/B planning — no device sync), ``dispatch_stage``
+(host KV growth + input staging + the jitted enqueue; returns a
+:class:`StageFuture` holding device arrays) and ``commit_stage`` (the ONLY
+point that materializes tokens via ``np.asarray`` and advances durable
+state — ``kv.lens``, sampled outputs, scheduler positions). ``step()``
+composes the three synchronously (behavior and chaos draw order identical
+to the pre-split engine); ``run_async()`` pipelines them — while stage N
+executes on device, the host speculatively plans stage N+1 from the
+*projected* post-commit state, and stage N−1's accounting (router-count
+EMA, traffic model, report, audit) is deferred until after stage N+1's
+dispatch. A commit that contradicts the prediction (an EOS finish, a
+cancel, an eviction, an expiry) invalidates the speculative plan and the
+engine re-plans from real state — speculation affects only the overlap,
+never the tokens. ``submit``/``cancel``/``stats`` are lock-guarded so a
+fleet poller (or a client thread) is safe against the loop.
 """
 from __future__ import annotations
 
+import functools
+import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +90,7 @@ import numpy as np
 
 from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, MOE, ModelConfig
 from repro.core.costmodel import DUPLEX
-from repro.core.dispatch import plan_stage
+from repro.core.dispatch import plan_stage as core_plan_stage
 from repro.core.execution import ExecutionPlan, execution_plan
 from repro.core.partition import DuplexPlanner, build_luts
 from repro.models.model import decode_step, init_cache, mixed_step, prefill
@@ -103,6 +123,42 @@ def _pow2_buckets(n_max: int) -> Tuple[int, ...]:
 
 def _pow2_ceil(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
+
+
+def _select_tokens(prev_nxt, prev_cn, src_nxt, src_cn, fallback, mode):
+    """Assemble a chained stage's decode input tokens ON DEVICE from the
+    previous stage's (not yet materialized) sampled-token futures: row i
+    takes ``prev_nxt[src_nxt[i]]`` / ``prev_cn[src_cn[i]]`` when the
+    source index is >= 0, else the host-known ``fallback[i]``. Traced
+    into the chained stage step (:func:`_chain_fn`), this is what lets
+    stage N+1 dispatch before stage N finishes — the host never touches
+    the token values. ``mode`` (static, see :meth:`ChainInfo.mode`)
+    elides the gathers a stage provably doesn't need."""
+    flat_n = prev_nxt.reshape(-1)
+    if mode == "pure":
+        return flat_n[src_nxt][:, None].astype(jnp.int32)
+    t = jnp.where(src_nxt >= 0, flat_n[jnp.maximum(src_nxt, 0)], fallback)
+    if mode == "full":
+        flat_c = prev_cn.reshape(-1)
+        t = jnp.where(src_cn >= 0, flat_c[jnp.maximum(src_cn, 0)], t)
+    return t[:, None].astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _chain_fn(fn, mode="full"):
+    """The chained variant of a jitted stage step: same computation, but
+    the decode input tokens (always the step's SECOND argument, across
+    every stage family) are assembled on device by :func:`_select_tokens`
+    from the previous stage's output futures. One fused jit call — a
+    chained stage costs the same number of kernel launches as a sync
+    one. ``jax.jit`` drops the args an elided gather leaves unused."""
+    @jax.jit
+    def chained(params, prev_nxt, prev_cn, src_nxt, src_cn, fallback,
+                *rest):
+        toks = _select_tokens(prev_nxt, prev_cn, src_nxt, src_cn, fallback,
+                              mode)
+        return fn(params, toks, *rest)
+    return chained
 
 
 @dataclass
@@ -144,6 +200,81 @@ class StageReport:
     audit_violations: int = 0
 
 
+@dataclass
+class ChainInfo:
+    """Device-side token chaining for a speculative stage N+1 that is
+    dispatched BEFORE stage N materializes (the async loop's zero-gap fast
+    path). The only true data dependency between consecutive stages is the
+    sampled token values; everything else in N+1's inputs is projectable
+    on the host. ``src_nxt``/``src_cn`` map each of N+1's decode input
+    rows to the row of N's ``nxt``/``cn`` device array that feeds it (−1 =
+    no dependency, use the host-known ``fallback`` token), and a tiny
+    jitted gather assembles the token array ON DEVICE, chained on N's
+    futures — so N+1 enqueues while N is still executing and the device
+    never idles. ``proj_lens`` holds each decode slot's projected
+    post-commit-N length (what ``kv.lens`` will say once N commits),
+    which input staging reads instead of the not-yet-advanced real
+    lengths."""
+    src_nxt: np.ndarray              # per input row: index into N's nxt, -1
+    src_cn: np.ndarray               # per input row: index into N's cn, -1
+    fallback: np.ndarray             # per input row: host-known token value
+    prev_nxt: Any                    # stage N's nxt device future
+    prev_cn: Any                     # stage N's cn device future (or dummy)
+    proj_lens: Dict[int, int]        # slot -> projected pre-write length
+
+    @property
+    def mode(self) -> str:
+        """Static gather shape for :func:`_chain_fn` specialization:
+        ``pure`` = every row reads N's ``nxt`` (plain gather, no chunk
+        sources, no fallback), ``nxt_only`` = no chunk sources, ``full``
+        = both gathers. Host-known at dispatch, so the unused gather is
+        never traced (and its source array never transferred)."""
+        if (self.src_cn >= 0).any():
+            return "full"
+        return "pure" if (self.src_nxt >= 0).all() else "nxt_only"
+
+
+@dataclass
+class StagePlan:
+    """A formed-but-not-yet-dispatched stage (PR 8). ``speculative`` plans
+    were built against the PROJECTED post-commit state of an in-flight
+    stage (scheduler state untouched — ``activate`` runs at dispatch);
+    ``epoch`` pins the engine mutation epoch the plan assumed, so any
+    out-of-band submit/cancel/evict/expiry invalidates it. A plan with a
+    ``chain`` dispatches before its predecessor's sync point (see
+    :class:`ChainInfo`)."""
+    decision: StageDecision
+    k_cold: int
+    splan: Optional[Any]
+    t0: float                       # wall clock at plan start
+    snap: Tuple[int, int, int, int]  # (shed, expired, cancelled, retries)
+    tnow: float = 0.0               # engine clock tokens are recorded at
+    speculative: bool = False
+    epoch: int = -1
+    chain: Optional[ChainInfo] = None
+
+
+@dataclass
+class StageFuture:
+    """An in-flight dispatched stage: device arrays (JAX futures) plus the
+    host-side context ``commit_stage`` needs to apply them. Nothing durable
+    — ``kv.lens``, sampled tokens, scheduler positions — has advanced yet;
+    dropping a future (replica kill) abandons device work but corrupts no
+    host state."""
+    plan: StagePlan
+    nxt: Any = None                 # decode next-token device array
+    cn: Any = None                  # chunk next-token device array
+    counts: Any = None              # summed per-expert router counts
+    legacy_nxt: Any = None          # legacy monolithic prefill next tokens
+    legacy_cache: Any = None        # legacy local cache (scattered at commit)
+    kv_bytes: int = 0
+    moe_caps: Optional[Tuple[int, int, int]] = None
+    # per-stage robustness-counter deltas, frozen by ``_commit_critical`` so
+    # the deferred report can't absorb the NEXT stage's window
+    deltas: Tuple[int, int, int, int] = (0, 0, 0, 0)
+    t_dispatch: float = 0.0
+
+
 class EngineStalledError(RuntimeError):
     """``engine.run()``'s watchdog: raised instead of silently spinning when
     no stage can make progress (capacity livelock, a fault schedule that
@@ -168,6 +299,7 @@ class ServingEngine:
                                                          1024, 2048, 4096),
                  queue_cap: Optional[int] = None,
                  overload_policy: str = "reject",
+                 aging_rounds: Optional[int] = None,
                  injector: Optional[FaultInjector] = None,
                  audit_stages: Optional[bool] = None,
                  seed: int = 0):
@@ -222,7 +354,8 @@ class ServingEngine:
             max_prefill_tokens=max_prefill_tokens,
             prefill_chunk_tokens=prefill_chunk_tokens,
             max_prefill_target=max_len,
-            queue_cap=queue_cap, overload_policy=overload_policy)
+            queue_cap=queue_cap, overload_policy=overload_policy,
+            aging_rounds=aging_rounds)
         # robustness counters (PR 6) — engine lifetime totals; StageReport
         # carries the per-stage deltas and stats() the roll-up.
         self.cancelled = 0
@@ -329,6 +462,39 @@ class ServingEngine:
             self.pages_buckets = _pow2_buckets(self.kv.max_pages_per_slot)
         self._stage_idx = 0
         self.reports: List[StageReport] = []
+        # ---- async pipelining (PR 8) ----
+        # one re-entrant lock guards every host-state mutation: client
+        # threads' submit()/cancel(), the loop's plan/dispatch/commit, and
+        # stats() windows a fleet poller reads from another thread (the
+        # saxml servable_model StepCounter idiom). Device syncs
+        # (np.asarray) happen OUTSIDE the lock so a submit never blocks
+        # behind device compute.
+        self._lock = threading.RLock()
+        # mutation epoch: bumped by every out-of-band state change a
+        # speculative plan could not have predicted (submit, cancel/shed/
+        # expiry, eviction). Dispatch-time validation compares epochs —
+        # cheaper than diffing scheduler state.
+        self._epoch = 0
+        self._inflight: Optional[StageFuture] = None   # step_async() only
+        # host stage-gap accounting: wall time from a stage's result
+        # materialization to the NEXT stage's dispatch — the window the
+        # device sits idle waiting on the host. The async loop exists to
+        # drive this toward zero.
+        self._t_sync_done: Optional[float] = None
+        self.host_gap_s = 0.0
+        self.gap_stages = 0
+        self.spec_hits = 0      # speculative plans dispatched as-is
+        self.spec_misses = 0    # invalidated at commit -> re-planned
+        self.spec_miss_reasons: Dict[str, int] = {}
+        self.chained_stages = 0  # dispatched BEFORE the previous sync point
+        # double-buffered input staging: two reusable host buffer sets
+        # alternate per dispatch, so building stage N+1's inputs never
+        # touches arrays stage N's transfer read (the jitted call snapshots
+        # host buffers at enqueue, so this is belt-and-braces; the
+        # measurable win is zero per-stage allocation churn on the hot
+        # path).
+        self._staging_bufs: List[Dict[str, np.ndarray]] = [{}, {}]
+        self._staging_idx = 0
 
     # ------------------------------------------------------------------ jits
     def _moe_caps(self, T: int, k_cold: int) -> Tuple[int, int, int]:
@@ -495,16 +661,18 @@ class ServingEngine:
                 f"prompt of {req.l_in} tokens cannot fit max_len="
                 f"{self.kv.max_len} KV (plus at least one generated token); "
                 f"raise max_len — prompts are never silently truncated")
-        tnow = self._now(now)
-        try:
-            shed = self.scheduler.submit(req, now=tnow)
-        except AdmissionRejected:
-            self.rejected += 1
-            raise
-        for victim in shed:
-            self._finish_abnormal(victim, "shed", tnow)
-        self._requests[req.rid] = req
-        self._match_prefix(req)
+        with self._lock:
+            tnow = self._now(now)
+            try:
+                shed = self.scheduler.submit(req, now=tnow)
+            except AdmissionRejected:
+                self.rejected += 1
+                raise
+            for victim in shed:
+                self._finish_abnormal(victim, "shed", tnow)
+            self._requests[req.rid] = req
+            self._match_prefix(req)
+            self._epoch += 1            # invalidates any speculative plan
 
     def cancel(self, rid: int, now: Optional[float] = None) -> bool:
         """Cancel a request by id, wherever it is in its lifecycle: dropped
@@ -513,11 +681,12 @@ class ServingEngine:
         for unknown or already-terminal requests. Takes effect between
         stages — an in-flight stage's work for the request is discarded at
         its next admission check."""
-        req = self._requests.get(rid)
-        if req is None or req.done:
-            return False
-        self._finish_abnormal(req, "cancelled", self._now(now))
-        return True
+        with self._lock:
+            req = self._requests.get(rid)
+            if req is None or req.done:
+                return False
+            self._finish_abnormal(req, "cancelled", self._now(now))
+            return True
 
     def _finish_abnormal(self, req: Request, reason: str,
                          tnow: float) -> None:
@@ -538,6 +707,7 @@ class ServingEngine:
             req.shared_pages = None
         req.saved_cache = None
         req.finish(reason, tnow)
+        self._epoch += 1                # invalidates any speculative plan
         if reason == "expired":
             self.expired += 1
         elif reason == "shed":
@@ -669,6 +839,7 @@ class ServingEngine:
         victim.match_version = -1
         self._match_prefix(victim)
         self.preemptions += 1
+        self._epoch += 1                # invalidates any speculative plan
 
     def _stage_page_need(self) -> int:
         """Worst-case fresh pages the NEXT stage's already-admitted work
@@ -776,16 +947,38 @@ class ServingEngine:
         seen.discard(0)
         return len(seen) * self.kv.page_size * self._kv_bytes_per_token
 
-    def _run_decode_only(self, decision: StageDecision, k_cold: int,
-                         tnow: float):
-        """Decoding-only stage (the dominant kind). Returns
-        (kv_bytes, counts_sum, moe_caps)."""
+    def _staging(self, name: str, shape, dtype) -> np.ndarray:
+        """A zeroed host staging buffer from the CURRENT double-buffer set
+        (``dispatch_stage`` flips sets per stage). Reusing two alternating
+        buffers keeps stage-input construction allocation-free in steady
+        state, and guarantees the arrays stage N's transfer read are never
+        overwritten while stage N+1's inputs are being built."""
+        bufs = self._staging_bufs[self._staging_idx]
+        buf = bufs.get(name)
+        if buf is None or buf.shape != shape or buf.dtype != dtype:
+            buf = np.zeros(shape, dtype)
+            bufs[name] = buf
+        else:
+            buf.fill(0)
+        return buf
+
+    def _dispatch_decode(self, fut: StageFuture) -> None:
+        """Dispatch half of a decoding-only stage (the dominant kind): host
+        KV growth, input staging and the jitted enqueue. Leaves the
+        next-token / router-count DEVICE arrays on ``fut`` without
+        materializing them."""
+        decision = fut.plan.decision
+        k_cold = fut.plan.k_cold
+        chain = fut.plan.chain
         if self.paged:
             page = self.kv.page_size
             slots = [r.slot for r in decision.decoding]
+            proj = chain.proj_lens if chain is not None else None
             live_pages = []                # per-slot pages after this write
             for s in slots:
-                cur = int(self.kv.lens[s])
+                # chained dispatch runs BEFORE the previous stage commits:
+                # read the projected post-commit length, not kv.lens
+                cur = int(self.kv.lens[s]) if proj is None else proj[s]
                 target = min(cur + 1, self.kv.max_len)
                 self.kv.ensure_len(s, target)
                 if self.prefix_share:
@@ -799,52 +992,100 @@ class ServingEngine:
                     wpos = min(cur, self.kv.max_len - 1)
                     self.kv.ensure_writable(s, wpos, wpos + 1)
                 live_pages.append(-(-target // page))
-            kv_bytes = self._unique_page_bytes(zip(slots, live_pages))
+            fut.kv_bytes = self._unique_page_bytes(zip(slots, live_pages))
             nb = _bucket(len(slots), self.decode_bs_buckets)
             mp = _bucket(max(live_pages), self.pages_buckets)
-            tokens = np.zeros((nb, 1), np.int32)
-            lengths = np.zeros((nb,), np.int32)  # pad rows: len 0 -> null page
-            bt = np.zeros((nb, mp), np.int32)
+            tokens = self._staging("d_tokens", (nb, 1), np.int32)
+            lengths = self._staging("d_lengths", (nb,), np.int32)
+            bt = self._staging("d_bt", (nb, mp), np.int32)
             for i, s in enumerate(slots):
-                tokens[i, 0] = self._tokens[s]
-                lengths[i] = self.kv.lens[s]
+                if proj is None:
+                    tokens[i, 0] = self._tokens[s]
+                    lengths[i] = self.kv.lens[s]   # pad: len 0 -> null page
+                else:
+                    lengths[i] = proj[s]
                 bt[i] = self.kv.block_tables[s, :mp]
-            moe_caps = self._moe_caps(nb, k_cold)
-            fn = self._paged_decode_fn(k_cold, *moe_caps, nb, mp)
-            nxt, self.kv.cache, counts = self._invoke(
-                fn, self.params, jnp.asarray(tokens), self.kv.cache,
-                jnp.asarray(lengths), jnp.asarray(bt), self._next_key())
-            nxt = np.asarray(nxt)
-            for i, r in enumerate(decision.decoding):
-                tok = int(nxt[i])
-                self._tokens[r.slot] = tok
-                r.record_token(tok, tnow)
-            self.kv.lens[np.asarray(slots)] += 1
-            return kv_bytes, counts, moe_caps
+            fut.moe_caps = self._moe_caps(nb, k_cold)
+            fn = self._paged_decode_fn(k_cold, *fut.moe_caps, nb, mp)
+            # host staging buffers go to the jitted call as-is: pjit's
+            # C++ arg path converts them an order of magnitude cheaper
+            # than explicit jnp.asarray device_puts
+            if chain is not None:
+                fut.nxt, self.kv.cache, fut.counts = self._invoke(
+                    _chain_fn(fn, chain.mode), self.params, chain.prev_nxt,
+                    chain.prev_cn, chain.src_nxt, chain.src_cn,
+                    chain.fallback, self.kv.cache,
+                    lengths, bt, self._next_key())
+            else:
+                fut.nxt, self.kv.cache, fut.counts = self._invoke(
+                    fn, self.params, tokens, self.kv.cache,
+                    lengths, bt, self._next_key())
+            return
         # dense: runs over ALL slots — outputs of inactive slots are
         # discarded (and masked out of MoE routing), their cache is
         # overwritten on reuse, and their dead KV is streamed every stage.
-        kv_bytes = self._dense_kv_bytes_per_stage
-        valid = np.zeros((self.kv.max_slots,), bool)
+        fut.kv_bytes = self._dense_kv_bytes_per_stage
+        valid = self._staging("d_valid", (self.kv.max_slots,), bool)
         for r in decision.decoding:
             valid[r.slot] = True
-        moe_caps = self._moe_caps(self.kv.max_slots, k_cold)
-        fn = self._decode_fn(k_cold, *moe_caps)
-        toks = jnp.asarray(self._tokens)[:, None]
-        nxt, self.kv.cache, counts = self._invoke(
-            fn, self.params, toks, jnp.asarray(valid), self.kv.cache,
-            self._next_key())
-        nxt = np.asarray(nxt)
+        fut.moe_caps = self._moe_caps(self.kv.max_slots, k_cold)
+        fn = self._decode_fn(k_cold, *fut.moe_caps)
+        if chain is not None:
+            fut.nxt, self.kv.cache, fut.counts = self._invoke(
+                _chain_fn(fn, chain.mode), self.params, chain.prev_nxt, chain.prev_cn,
+                chain.src_nxt, chain.src_cn, chain.fallback,
+                valid, self.kv.cache, self._next_key())
+        else:
+            toks = self._staging("d_toks", (self.kv.max_slots, 1), np.int32)
+            toks[:, 0] = self._tokens
+            fut.nxt, self.kv.cache, fut.counts = self._invoke(
+                fn, self.params, toks, valid, self.kv.cache,
+                self._next_key())
+
+    def _row_live(self, r: Request) -> bool:
+        """Commit guard: may this in-flight row's result be applied to
+        ``r``? False when the request finished abnormally / was evicted
+        between dispatch and commit (async cancel, expiry, preemption) —
+        its device work is discarded. A freed slot's garbage KV write is
+        harmless: device program order lands it before any new owner's
+        overwrite, and unwritten offsets are never read."""
+        return (not r.done and r.slot >= 0
+                and self._slot_req.get(r.slot) is r)
+
+    def _commit_decode(self, fut: StageFuture, mat: Dict[str, Any],
+                       tnow: float) -> None:
+        """Commit half of a decoding-only stage: apply the materialized
+        next tokens and advance ``kv.lens`` — the first point the stage
+        becomes durable."""
+        decision = fut.plan.decision
+        nxt = mat["nxt"]
+        if self.paged:
+            adv = []
+            for i, r in enumerate(decision.decoding):
+                if not self._row_live(r):
+                    continue
+                tok = int(nxt[i])
+                self._tokens[r.slot] = tok
+                r.record_token(tok, tnow)
+                adv.append(r.slot)
+            if adv:
+                self.kv.lens[np.asarray(adv)] += 1
+            return
         for r in decision.decoding:
+            if not self._row_live(r):
+                continue
             tok = int(nxt[r.slot])
             self._tokens[r.slot] = tok
             r.record_token(tok, tnow)
-        return kv_bytes, counts, moe_caps
 
-    def _run_mixed(self, decision: StageDecision, k_cold: int, tnow: float):
-        """Unified mixed stage: decode rows + prefill-chunk rows through one
-        jitted step; the final chunk of a prompt samples its first token.
-        Returns (kv_bytes, counts_sum, moe_caps)."""
+    def _dispatch_mixed(self, fut: StageFuture) -> None:
+        """Dispatch half of a unified mixed stage: first chunks claim their
+        slots (admission — unwound by ``_abort_stage`` on an injected
+        fault), inputs stage, and one jitted step is enqueued for decode
+        rows + chunk rows; the final chunk of a prompt samples its first
+        token at commit."""
+        decision = fut.plan.decision
+        k_cold = fut.plan.k_cold
         chunks = decision.chunks
         for c in chunks:                       # first chunk claims the slot
             if c.req.slot < 0:
@@ -859,20 +1100,23 @@ class ServingEngine:
                     c.req.shared_pages = None
         nc_b = _bucket(len(chunks), self.seq_buckets)
         sc_b = _bucket(max(c.tokens for c in chunks), self.chunk_len_buckets)
-        ctokens = np.zeros((nc_b, sc_b), np.int32)
-        starts = np.zeros((nc_b,), np.int32)
-        clens = np.zeros((nc_b,), np.int32)
+        ctokens = self._staging("m_ctokens", (nc_b, sc_b), np.int32)
+        starts = self._staging("m_starts", (nc_b,), np.int32)
+        clens = self._staging("m_clens", (nc_b,), np.int32)
         for i, c in enumerate(chunks):
             seq = c.req.token_stream(c.end)[c.start:]
             ctokens[i, :len(seq)] = seq
             starts[i] = c.start
             clens[i] = c.tokens
+        chain = fut.plan.chain
         if self.paged:
             page = self.kv.page_size
             dslots = [r.slot for r in decision.decoding]
+            proj = chain.proj_lens if chain is not None else None
             live_pages = [1]
             for s in dslots:
-                cur = int(self.kv.lens[s])
+                # chained: projected post-commit length (see decode path)
+                cur = int(self.kv.lens[s]) if proj is None else proj[s]
                 target = min(cur + 1, self.kv.max_len)
                 self.kv.ensure_len(s, target)
                 if self.prefix_share:
@@ -884,12 +1128,15 @@ class ServingEngine:
                 live_pages.append(-(-target // page))
             nb = _bucket(max(len(dslots), 1), self.decode_bs_buckets)
             mp = _bucket(max(live_pages), self.pages_buckets)
-            dtokens = np.zeros((nb, 1), np.int32)
-            lengths = np.zeros((nb,), np.int32)
-            bt = np.zeros((nb, mp), np.int32)
+            dtokens = self._staging("m_dtokens", (nb, 1), np.int32)
+            lengths = self._staging("m_lengths", (nb,), np.int32)
+            bt = self._staging("m_bt", (nb, mp), np.int32)
             for i, s in enumerate(dslots):
-                dtokens[i, 0] = self._tokens[s]
-                lengths[i] = self.kv.lens[s]
+                if proj is None:
+                    dtokens[i, 0] = self._tokens[s]
+                    lengths[i] = self.kv.lens[s]
+                else:
+                    lengths[i] = proj[s]
                 bt[i] = self.kv.block_tables[s, :mp]
             cpages = []
             for c in chunks:
@@ -900,27 +1147,81 @@ class ServingEngine:
                     self.kv.ensure_writable(c.req.slot, c.start, c.end)
                 cpages.append(-(-c.end // page))
             mpc = _bucket(max(cpages), self.pages_buckets)
-            bt_c = np.zeros((nc_b, mpc), np.int32)
+            bt_c = self._staging("m_bt_c", (nc_b, mpc), np.int32)
             for i, c in enumerate(chunks):
                 bt_c[i] = self.kv.block_tables[c.req.slot, :mpc]
-            kv_bytes = self._unique_page_bytes(
+            fut.kv_bytes = self._unique_page_bytes(
                 list(zip(dslots, live_pages[1:]))
                 + [(c.req.slot, n) for c, n in zip(chunks, cpages)])
-            moe_caps = self._moe_caps(nb + nc_b * sc_b, k_cold)
-            fn = self._mixed_fn(k_cold, *moe_caps, nc_b, sc_b, nb, mp, mpc)
-            dn, cn, self.kv.cache, counts = self._invoke(
-                fn, self.params, jnp.asarray(dtokens), jnp.asarray(lengths),
-                jnp.asarray(bt), jnp.asarray(ctokens), jnp.asarray(starts),
-                jnp.asarray(clens), jnp.asarray(bt_c), self.kv.cache,
-                self._next_key())
-            dn = np.asarray(dn)
+            fut.moe_caps = self._moe_caps(nb + nc_b * sc_b, k_cold)
+            fn = self._mixed_fn(k_cold, *fut.moe_caps, nc_b, sc_b,
+                                nb, mp, mpc)
+            if chain is not None:
+                fut.nxt, fut.cn, self.kv.cache, fut.counts = self._invoke(
+                    _chain_fn(fn, chain.mode), self.params, chain.prev_nxt,
+                    chain.prev_cn, chain.src_nxt, chain.src_cn,
+                    chain.fallback, lengths, bt, ctokens, starts,
+                    clens, bt_c, self.kv.cache, self._next_key())
+            else:
+                fut.nxt, fut.cn, self.kv.cache, fut.counts = self._invoke(
+                    fn, self.params, dtokens, lengths,
+                    bt, ctokens, starts,
+                    clens, bt_c, self.kv.cache,
+                    self._next_key())
+        else:
+            cslots = self._staging("m_cslots", (nc_b,), np.int32)
+            for i, c in enumerate(chunks):
+                cslots[i] = c.req.slot
+            valid = self._staging("m_valid", (self.kv.max_slots,), bool)
+            for r in decision.decoding:
+                valid[r.slot] = True
+            # chunk rows gather + stream their slot's full cache row
+            fut.kv_bytes = (self._dense_kv_bytes_per_stage
+                            + len(chunks) * self.kv.max_len
+                            * self._kv_bytes_per_token)
+            fut.moe_caps = self._moe_caps(self.kv.max_slots + nc_b * sc_b,
+                                          k_cold)
+            fn = self._mixed_fn(k_cold, *fut.moe_caps, nc_b, sc_b)
+            if chain is not None:
+                fut.nxt, fut.cn, self.kv.cache, fut.counts = self._invoke(
+                    _chain_fn(fn, chain.mode), self.params, chain.prev_nxt,
+                    chain.prev_cn, chain.src_nxt, chain.src_cn,
+                    chain.fallback, valid, ctokens, cslots,
+                    starts, clens, self.kv.cache, self._next_key())
+            else:
+                dtokens = self._staging("m_dtoks",
+                                        (self.kv.max_slots, 1), np.int32)
+                dtokens[:, 0] = self._tokens
+                fut.nxt, fut.cn, self.kv.cache, fut.counts = self._invoke(
+                    fn, self.params, dtokens, valid,
+                    ctokens, cslots,
+                    starts, clens, self.kv.cache,
+                    self._next_key())
+
+    def _commit_mixed(self, fut: StageFuture, mat: Dict[str, Any],
+                      tnow: float) -> None:
+        """Commit half of a mixed stage: decode tokens + lens advance,
+        chunk lens jump to each span's end (their pages were written on
+        device), newly-full pages index for prefix sharing, and each final
+        chunk's sampled first token lands."""
+        decision = fut.plan.decision
+        chunks = decision.chunks
+        dn = mat["nxt"]
+        cn = mat["cn"]
+        if self.paged:
+            adv = []
             for i, r in enumerate(decision.decoding):
+                if not self._row_live(r):
+                    continue
                 tok = int(dn[i])
                 self._tokens[r.slot] = tok
                 r.record_token(tok, tnow)
-            if dslots:
-                self.kv.lens[np.asarray(dslots)] += 1
+                adv.append(r.slot)
+            if adv:
+                self.kv.lens[np.asarray(adv)] += 1
             for c in chunks:
+                if not self._row_live(c.req):
+                    continue
                 self.kv.lens[c.req.slot] = c.end
                 if self.prefix_share:
                     # index the newly-full pages under their token ids so
@@ -928,66 +1229,61 @@ class ServingEngine:
                     toks = c.req.token_stream(c.end)
                     self.kv.register_prefix(c.req.slot, toks)
         else:
-            cslots = np.zeros((nc_b,), np.int32)   # dense chunk -> cache row
-            for i, c in enumerate(chunks):
-                cslots[i] = c.req.slot
-            valid = np.zeros((self.kv.max_slots,), bool)
             for r in decision.decoding:
-                valid[r.slot] = True
-            # chunk rows gather + stream their slot's full cache row
-            kv_bytes = (self._dense_kv_bytes_per_stage
-                        + len(chunks) * self.kv.max_len
-                        * self._kv_bytes_per_token)
-            moe_caps = self._moe_caps(self.kv.max_slots + nc_b * sc_b, k_cold)
-            fn = self._mixed_fn(k_cold, *moe_caps, nc_b, sc_b)
-            dtokens = jnp.asarray(self._tokens)[:, None]
-            dn, cn, self.kv.cache, counts = self._invoke(
-                fn, self.params, dtokens, jnp.asarray(valid),
-                jnp.asarray(ctokens), jnp.asarray(cslots),
-                jnp.asarray(starts), jnp.asarray(clens), self.kv.cache,
-                self._next_key())
-            dn = np.asarray(dn)
-            for r in decision.decoding:
+                if not self._row_live(r):
+                    continue
                 tok = int(dn[r.slot])
                 self._tokens[r.slot] = tok
                 r.record_token(tok, tnow)
-        cn = np.asarray(cn)
         for i, c in enumerate(chunks):
-            if c.is_last:                  # final chunk -> first token
-                tok = int(cn[i])
+            if c.is_last and self._row_live(c.req):
+                tok = int(cn[i])               # final chunk -> first token
                 self._tokens[c.req.slot] = tok
                 c.req.record_token(tok, tnow)
-        return kv_bytes, counts, moe_caps
 
-    def _run_legacy_prefill(self, decision: StageDecision,
-                            tnow: float) -> None:
-        """Monolithic whole-prompt prefill + scatter (non-unified archs)."""
+    def _dispatch_legacy_prefill(self, fut: StageFuture) -> None:
+        """Dispatch half of the monolithic whole-prompt prefill
+        (non-unified archs only): enqueue the prefill step into a fresh
+        local cache; slots are claimed and the cache scattered at commit
+        (pre-split behavior — nothing to unwind on an abort)."""
         assert not self.paged
-        fresh = [c.req for c in decision.chunks]
-        n_b = _bucket(len(fresh), self.seq_buckets)
+        decision = fut.plan.decision
         # whole-prompt spans; a recompute-preempted replay covers prompt +
         # generated, capped at max_len by the scheduler — and max_len is
         # always a bucket, so no sequence outgrows its slab.
         seqs = [c.req.token_stream(c.end)
                 for c in decision.chunks]
+        n_b = _bucket(len(seqs), self.seq_buckets)
         max_l = max(len(sq) for sq in seqs)
         l_b = _bucket(max_l, self.prefill_len_buckets)
-        tokens = np.zeros((n_b, l_b), np.int32)
-        true_len = np.zeros((n_b,), np.int32)
+        tokens = self._staging("lp_tokens", (n_b, l_b), np.int32)
+        true_len = self._staging("lp_true_len", (n_b,), np.int32)
         for i, sq in enumerate(seqs):
             tokens[i, :len(sq)] = sq
             true_len[i] = len(sq)
         fn = self._legacy_prefill_fn(n_b, l_b)
-        nxt, local_cache = self._invoke(fn, self.params, jnp.asarray(tokens),
-                                        jnp.asarray(true_len),
-                                        self._next_key())
-        nxt = np.asarray(nxt)
-        slots = [self.kv.allocate() for _ in fresh]
-        take = jnp.asarray(range(len(slots)), dtype=jnp.int32)
+        fut.legacy_nxt, fut.legacy_cache = self._invoke(
+            fn, self.params, tokens, true_len,
+            self._next_key())
+
+    def _commit_legacy_prefill(self, fut: StageFuture, mat: Dict[str, Any],
+                               tnow: float) -> None:
+        """Commit half of the legacy prefill: claim slots, scatter the
+        local cache into them, record first tokens. Rows whose request
+        died in flight are dropped before any slot is claimed."""
+        nxt = mat["legacy_nxt"]
+        fresh = [c.req for c in fut.plan.decision.chunks]
+        live = [(i, r) for i, r in enumerate(fresh) if not r.done]
+        if not live:
+            fut.legacy_cache = None
+            return
+        slots = [self.kv.allocate() for _ in live]
+        take = jnp.asarray([i for i, _ in live], dtype=jnp.int32)
         local = [jax.tree_util.tree_map(lambda a: a[:, take], seg)
-                 for seg in local_cache]
+                 for seg in fut.legacy_cache]
         self.kv.scatter(local, slots)
-        for i, (r, s) in enumerate(zip(fresh, slots)):
+        fut.legacy_cache = None
+        for (i, r), s in zip(live, slots):
             r.slot = s
             self._slot_req[s] = r
             tok = int(nxt[i])
@@ -1055,20 +1351,13 @@ class ServingEngine:
                 f"stage {self._stage_idx}: {e}" for e in errs)
         return len(errs)
 
-    def step(self, now: Optional[float] = None) -> Optional[StageReport]:
-        """Run one continuous-batching stage. Returns None when idle.
-        ``now`` overrides the wall clock (virtual-time benchmarks drive the
-        deadline machinery deterministically through it).
-
-        Stage order: injected latency lands on the clock; the expiry sweep
-        clears past-deadline work (releasing its capacity); preemption and
-        the injected forced eviction reshape residency; then admission and
-        the stage body run. An injected fault inside the stage body unwinds
-        via ``_abort_stage`` — this stage's admissions return to the queue
-        head, nothing advanced (positions only move in ``commit_stage``) —
-        and the stage reports ``aborted=True``."""
-        t0 = time.monotonic()
-        snap = (self.shed, self.expired, self.cancelled, self.retries)
+    # ------------------------------------------------ plan / dispatch / commit
+    def _stage_maintenance(self, now: Optional[float] = None) -> float:
+        """Pre-stage housekeeping, in the exact order of the pre-split
+        engine: injected latency lands on the clock, the expiry sweep
+        clears past-deadline work (releasing its capacity), preemption and
+        the injected forced eviction reshape residency, and admissible
+        queue heads re-match the prefix index. Returns the stage clock."""
         if self.injector is not None:
             self.fault_delay += self.injector.latency_spike()
         tnow = self._now(now)
@@ -1078,7 +1367,6 @@ class ServingEngine:
         if (self.injector is not None and self.preemption != "none"
                 and self.injector.forced_eviction()):
             self._forced_evict(tnow)
-        free = self.kv.free_slots
         if self.paged and self.prefix_share:
             # refresh admissible queue heads against the CURRENT index —
             # requests submitted together find nothing at submit time; by
@@ -1087,43 +1375,50 @@ class ServingEngine:
                           )[:self.scheduler.max_prefill_seqs]:
                 if r.saved_cache is None and not r.done:
                     self._match_prefix(r)
-        if self.paged:
-            # admission backpressure: walk the queue in admission order,
-            # accumulating each candidate's demand minus the prefix pages
-            # it already shares (sharing directly raises the admitted
-            # batch), and cap this stage's admissions at the prefix that
-            # still fits. Without preemption the demand is the WHOLE
-            # LIFETIME (prompt + every future decode token) of admitted and
-            # candidate work, so ensure_len can never fail; with preemption
-            # enabled, admission is aggressive — only the next stage's
-            # growth plus the candidate's first chunk — and page-granular
-            # eviction reclaims capacity when generation outruns the pool
-            # (that is the oversubscription contract).
-            page = self.kv.page_size
-            conservative = self.preemption == "none"
-            budget = self.prefill_chunk_tokens or self.kv.max_len
-            need = (self._remaining_demand_pages() if conservative
-                    else self._stage_page_need())
-            admit = 0
-            for r in list(self.scheduler.queue
-                          )[:self.scheduler.max_prefill_seqs]:
-                shared = len(r.shared_pages or ())
-                if conservative:
-                    d = max(self._lifetime_pages(r) - shared, 0)
-                else:
-                    # the candidate's first chunk: starts at its first
-                    # unshared position, ends a budget later
-                    total = min(r.l_in + len(r.output), self.kv.max_len)
-                    end = min(r.prefill_pos + budget, total)
-                    d = max(-(-end // page) - shared, 0)
-                need += d + (1 if shared and self.prefix_share else 0)
-                if self.kv.free_pages < need:
-                    break
-                admit += 1
-            free = min(free, admit)
-        decision = self.scheduler.next_stage(free)
-        if decision is None:
-            return None
+        return tnow
+
+    def _page_admission_cap(self) -> int:
+        """Paged admission backpressure: walk the queue in admission order,
+        accumulating each candidate's demand minus the prefix pages it
+        already shares (sharing directly raises the admitted batch), and
+        cap this stage's admissions at the prefix that still fits. Without
+        preemption the demand is the WHOLE LIFETIME (prompt + every future
+        decode token) of admitted and candidate work, so ensure_len can
+        never fail; with preemption enabled, admission is aggressive —
+        only the next stage's growth plus the candidate's first chunk —
+        and page-granular eviction reclaims capacity when generation
+        outruns the pool (that is the oversubscription contract)."""
+        page = self.kv.page_size
+        conservative = self.preemption == "none"
+        budget = self.prefill_chunk_tokens or self.kv.max_len
+        need = (self._remaining_demand_pages() if conservative
+                else self._stage_page_need())
+        admit = 0
+        for r in list(self.scheduler.queue
+                      )[:self.scheduler.max_prefill_seqs]:
+            shared = len(r.shared_pages or ())
+            if conservative:
+                d = max(self._lifetime_pages(r) - shared, 0)
+            else:
+                # the candidate's first chunk: starts at its first
+                # unshared position, ends a budget later
+                total = min(r.l_in + len(r.output), self.kv.max_len)
+                end = min(r.prefill_pos + budget, total)
+                d = max(-(-end // page) - shared, 0)
+            need += d + (1 if shared and self.prefix_share else 0)
+            if self.kv.free_pages < need:
+                break
+            admit += 1
+        return admit
+
+    def _finish_plan(self, decision: StageDecision, t0: float,
+                     snap: Tuple[int, int, int, int], tnow: float,
+                     speculative: bool = False) -> StagePlan:
+        """Wrap a scheduler decision into a :class:`StagePlan`: pick
+        ``k_cold`` from the router-count EMA (for a speculative plan the
+        EMA is one stage staler — the in-flight stage's counts fold in at
+        its deferred commit; that changes only the execution-path choice,
+        never the tokens) and run the Op/B dispatch model."""
         mix = decision.mix()
         k_cold = 0
         if self.use_duplex and mix.num_tokens > 0:
@@ -1133,43 +1428,114 @@ class ServingEngine:
             # counts — only the width is static.
             k_cold = self.planner.k_cold_static(
                 self._expected_counts(mix.num_tokens))
-        splan = (plan_stage(self.cfg, mix, kv_quant=self.kv.kv_quant)
+        splan = (core_plan_stage(self.cfg, mix, kv_quant=self.kv.kv_quant)
                  if mix.num_tokens else None)
+        return StagePlan(decision=decision, k_cold=k_cold, splan=splan,
+                         t0=t0, snap=snap, tnow=tnow,
+                         speculative=speculative, epoch=self._epoch)
 
-        kv_bytes = 0
-        counts_sum = None
-        moe_caps = None
-        try:
-            if decision.chunks and self._unified:
-                kv_bytes, counts_sum, moe_caps = self._run_mixed(
-                    decision, k_cold, tnow)
-            else:
-                if decision.decoding:
-                    kv_bytes, counts_sum, moe_caps = self._run_decode_only(
-                        decision, k_cold, tnow)
-                if decision.chunks:              # non-unified archs only
-                    self._run_legacy_prefill(decision, tnow)
-        except InjectedFault:
-            self._abort_stage(decision)
-            report = StageReport(
-                stage_index=self._stage_idx, is_mixed=decision.is_mixed,
-                num_decode=len(decision.decoding),
-                num_prefill=len(decision.chunks), k_cold=k_cold,
-                bandwidth_flop_fraction=0.0,
-                wall_time=time.monotonic() - t0, aborted=True,
-                shed=self.shed - snap[0], expired=self.expired - snap[1],
-                cancelled=self.cancelled - snap[2],
-                retries=self.retries - snap[3],
-                audit_violations=self._run_audit())
-            self.reports.append(report)
-            self._stage_idx += 1
-            return report
+    def plan_stage(self, now: Optional[float] = None, *,
+                   maintain: bool = True,
+                   snap: Optional[Tuple[int, int, int, int]] = None
+                   ) -> Optional[StagePlan]:
+        """Form the next stage from REAL state: stage maintenance
+        (``maintain=False`` when the caller already ran it this turn —
+        the re-plan after an invalidated speculative plan must not draw
+        the chaos schedule twice), the paged admission cap, the
+        scheduler's span/admission walk, and the Op/B execution plan.
+        Pure host work, no device sync. Returns None when no stage can be
+        formed."""
+        t0 = time.monotonic()
+        if snap is None:
+            snap = (self.shed, self.expired, self.cancelled, self.retries)
+        tnow = self._stage_maintenance(now) if maintain else self._now(now)
+        free = self.kv.free_slots
+        if self.paged:
+            free = min(free, self._page_admission_cap())
+        decision = self.scheduler.next_stage(free)
+        if decision is None:
+            return None
+        return self._finish_plan(decision, t0, snap, tnow)
+
+    def dispatch_stage(self, plan: StagePlan) -> StageFuture:
+        """Enqueue a planned stage on the device WITHOUT waiting for it:
+        speculative plans activate their admissions first (the plan never
+        touched the scheduler), first chunks claim slots, inputs stage
+        into the flipped double buffer, and the jitted step call returns
+        immediately with device-array futures (JAX async dispatch). An
+        injected chaos fault raises :class:`InjectedFault` out of here —
+        callers unwind via ``_abort_stage``, exactly as the pre-split
+        engine did around its stage body."""
+        if plan.speculative:
+            self.scheduler.activate(plan.decision)
+        self._staging_idx ^= 1
+        fut = StageFuture(plan=plan)
+        decision = plan.decision
+        if decision.chunks and self._unified:
+            self._dispatch_mixed(fut)
+        else:
+            if decision.decoding:
+                self._dispatch_decode(fut)
+            if decision.chunks:              # non-unified archs only
+                self._dispatch_legacy_prefill(fut)
+        fut.t_dispatch = time.monotonic()
+        if plan.chain is not None:
+            # chained dispatch: enqueued BEFORE the in-flight stage's sync
+            # point, while the device is still executing it — the idle
+            # window between the two stages is structurally zero
+            self.gap_stages += 1
+            self.chained_stages += 1
+            self._t_sync_done = None
+        elif self._t_sync_done is not None:
+            # host stage gap: the device-idle window between the previous
+            # stage's materialization and this enqueue — what the async
+            # loop exists to shrink
+            self.host_gap_s += max(fut.t_dispatch - self._t_sync_done, 0.0)
+            self.gap_stages += 1
+            self._t_sync_done = None
+        return fut
+
+    def _materialize(self, fut: StageFuture) -> Dict[str, Any]:
+        """Block on the stage's device token arrays — the pipeline's ONLY
+        device sync point. The async loops call this OUTSIDE the lock so
+        client submits/cancels and fleet polls never wait behind device
+        compute."""
+        mat: Dict[str, Any] = {}
+        if fut.nxt is not None:
+            mat["nxt"] = np.asarray(fut.nxt)
+        if fut.cn is not None:
+            mat["cn"] = np.asarray(fut.cn)
+        if fut.legacy_nxt is not None:
+            mat["legacy_nxt"] = np.asarray(fut.legacy_nxt)
+        self._t_sync_done = time.monotonic()
+        return mat
+
+    def _commit_critical(self, fut: StageFuture,
+                         mat: Dict[str, Any]) -> None:
+        """The durable half of a commit — everything the NEXT stage's
+        dispatch depends on: sampled tokens, ``kv.lens`` advances, prefix
+        index registration, migrated-back restores, retirement of finished
+        slots, and the scheduler's position/promotion bookkeeping. Runs
+        under the lock; accounting nothing downstream reads is deferred
+        (:meth:`_commit_deferred`) past the next dispatch in the async
+        loops. Also freezes this stage's robustness-counter deltas so the
+        deferred report cannot absorb the next stage's window."""
+        plan = fut.plan
+        decision = plan.decision
+        tnow = plan.tnow
+        if decision.chunks and self._unified:
+            self._commit_mixed(fut, mat, tnow)
+        else:
+            if decision.decoding:
+                self._commit_decode(fut, mat, tnow)
+            if decision.chunks:              # non-unified archs only
+                self._commit_legacy_prefill(fut, mat, tnow)
         # migrated-back requests restore AFTER the stage ran: the dense
         # decode half sweeps every slot and would advance a just-restored
         # slot's length past its real context.
         for r in decision.restored:
-            self._admit_restored(r, tnow)
-
+            if not r.done and r.saved_cache is not None:
+                self._admit_restored(r, tnow)
         # ---- retire
         for r in ([c.req for c in decision.chunks] + decision.decoding
                   + decision.restored):
@@ -1177,16 +1543,28 @@ class ServingEngine:
                 self.kv.free(r.slot)
                 self._slot_req.pop(r.slot, None)
         self.scheduler.commit_stage(decision)
+        fut.deltas = (self.shed - plan.snap[0],
+                      self.expired - plan.snap[1],
+                      self.cancelled - plan.snap[2],
+                      self.retries - plan.snap[3])
 
-        # ---- MoE streamed-bytes / padded-vs-live FLOP accounting from the
-        # stage's ACTUAL router counts (per-layer average of the jitted
-        # step's summed counts); also folds them into the planner EMA.
-        counts_layer = self._update_counts(counts_sum)
+    def _commit_deferred(self, fut: StageFuture) -> StageReport:
+        """The accounting half of a commit: router-count EMA, the MoE
+        streamed-bytes / padded-vs-live FLOP traffic model, the
+        :class:`StageReport`, the post-stage audit and the peak-occupancy
+        counter. Nothing the next stage's plan or dispatch reads — the
+        async loops run it AFTER the next dispatch is already on device.
+        (The audit stays safe there: pages grown ahead of ``kv.lens`` by
+        an in-flight dispatch satisfy ``lens <= pages * page_size``.)"""
+        plan = fut.plan
+        decision = plan.decision
+        k_cold = plan.k_cold
+        counts_layer = self._update_counts(fut.counts)
         chunk_tokens = sum(c.tokens for c in decision.chunks)
         live_moe = len(decision.decoding) + chunk_tokens
         moe_bytes = moe_flops_live = moe_flops_padded = 0
         if (self.use_duplex and live_moe and self._moe_layers
-                and moe_caps is not None
+                and fut.moe_caps is not None
                 and (k_cold > 0 or self.moe_ragged)):
             from repro.core.duplex_moe import moe_traffic_model
             m = self.cfg.moe
@@ -1195,7 +1573,7 @@ class ServingEngine:
             else:
                 dcounts = np.round(
                     self._expected_counts(live_moe)).astype(np.int64)
-            ch, cc, cb = moe_caps
+            ch, cc, cb = fut.moe_caps
             stats = moe_traffic_model(dcounts, k_cold=k_cold, c_hot=ch,
                                       c_cold=cc, d_model=self.cfg.d_model,
                                       d_ff=m.d_ff_expert, c_block=cb,
@@ -1211,19 +1589,18 @@ class ServingEngine:
             stage_index=self._stage_idx, is_mixed=decision.is_mixed,
             num_decode=len(decision.decoding),
             num_prefill=len(decision.chunks), k_cold=k_cold,
-            bandwidth_flop_fraction=(splan.bandwidth_fraction()
-                                     if splan else 0.0),
-            wall_time=time.monotonic() - t0,
-            kv_bytes_streamed=int(kv_bytes),
+            bandwidth_flop_fraction=(plan.splan.bandwidth_fraction()
+                                     if plan.splan else 0.0),
+            wall_time=time.monotonic() - plan.t0,
+            kv_bytes_streamed=int(fut.kv_bytes),
             moe_bytes_streamed=int(moe_bytes),
             moe_flops_live=int(moe_flops_live),
             moe_flops_padded=int(moe_flops_padded),
             chunk_tokens=int(chunk_tokens),
             stage_tokens=int(live_moe),
             shared_kv_pages=self.kv.shared_pages,
-            shed=self.shed - snap[0], expired=self.expired - snap[1],
-            cancelled=self.cancelled - snap[2],
-            retries=self.retries - snap[3],
+            shed=fut.deltas[0], expired=fut.deltas[1],
+            cancelled=fut.deltas[2], retries=fut.deltas[3],
             audit_violations=self._run_audit())
         self.reports.append(report)
         self.peak_active = max(self.peak_active,
@@ -1231,6 +1608,441 @@ class ServingEngine:
                                + len(decision.restored))
         self._stage_idx += 1
         return report
+
+    def _abort_report(self, plan: StagePlan) -> StageReport:
+        """Report a stage an injected fault unwound (``_abort_stage`` has
+        already run): admissions are back at the queue head and nothing
+        advanced."""
+        decision = plan.decision
+        report = StageReport(
+            stage_index=self._stage_idx, is_mixed=decision.is_mixed,
+            num_decode=len(decision.decoding),
+            num_prefill=len(decision.chunks), k_cold=plan.k_cold,
+            bandwidth_flop_fraction=0.0,
+            wall_time=time.monotonic() - plan.t0, aborted=True,
+            shed=self.shed - plan.snap[0],
+            expired=self.expired - plan.snap[1],
+            cancelled=self.cancelled - plan.snap[2],
+            retries=self.retries - plan.snap[3],
+            audit_violations=self._run_audit())
+        self.reports.append(report)
+        self._stage_idx += 1
+        return report
+
+    def commit_stage(self, fut: StageFuture) -> StageReport:
+        """Materialize and fully commit an in-flight stage — the
+        synchronous composition ``step()`` uses. The async loops call the
+        halves directly so the accounting half can defer past the next
+        stage's dispatch."""
+        mat = self._materialize(fut)
+        self._commit_critical(fut, mat)
+        return self._commit_deferred(fut)
+
+    def step(self, now: Optional[float] = None) -> Optional[StageReport]:
+        """Run one continuous-batching stage synchronously: plan →
+        dispatch → commit, with semantics and chaos draw order identical
+        to the pre-split engine. Returns None when idle. ``now`` overrides
+        the wall clock (virtual-time benchmarks drive the deadline
+        machinery deterministically through it).
+
+        Stage order: injected latency lands on the clock; the expiry sweep
+        clears past-deadline work (releasing its capacity); preemption and
+        the injected forced eviction reshape residency; then admission and
+        the stage body run. An injected fault inside the stage body
+        unwinds via ``_abort_stage`` — this stage's admissions return to
+        the queue head, nothing advanced (durable state only moves in the
+        commit) — and the stage reports ``aborted=True``. The lock is held
+        across the whole stage, so concurrent submits/cancels/polls land
+        between stages."""
+        with self._lock:
+            plan = self.plan_stage(now)
+            if plan is None:
+                return None
+            try:
+                fut = self.dispatch_stage(plan)
+            except InjectedFault:
+                self._abort_stage(plan.decision)
+                return self._abort_report(plan)
+            return self.commit_stage(fut)
+
+    # ------------------------------------------------- speculation (async)
+    def _plan_speculative(self, cur: StagePlan) -> Optional[StagePlan]:
+        """Plan stage N+1 from the PROJECTED post-commit state of the
+        in-flight stage N, touching no scheduler or request state.
+        Predictable commit outcomes project exactly: chunk positions
+        advance to their span ends, length-limit finishes retire and free
+        their slots, final chunks and migrated-back restores join the
+        decode set. Unpredictable ones (an EOS finish) are assumed
+        "continues" — ``_validate_speculative`` re-checks against real
+        post-commit state at dispatch time, so a wrong guess costs one
+        re-plan, never a wrong token. Under-projection is SAFE (planned
+        work ⊆ allowed work), so the projection leans conservative."""
+        d = cur.decision
+        if d.chunks and not self._unified:
+            return None          # legacy prefill claims slots at commit
+        t0 = time.monotonic()
+        pos: Dict[int, int] = {}
+        done_rids = set()
+        finished_prefill = set()     # in-flight final chunks: promote at
+        promoted: List[Request] = []  # commit, leave the prefilling set
+        extra_prefilling: List[Request] = []
+        freed = 0
+        for c in d.chunks:
+            r = c.req
+            if r.done:
+                continue         # died after dispatch; commit drops the row
+            if c.is_last:
+                finished_prefill.add(r.rid)
+                # the final chunk samples the request's first token: a
+                # length-limit finish is certain, an EOS finish is not
+                if r.max_new_tokens <= 1:
+                    done_rids.add(r.rid)
+                    freed += 1
+                else:
+                    promoted.append(r)
+            else:
+                pos[r.rid] = c.end
+                if r not in self.scheduler.prefilling:
+                    extra_prefilling.append(r)   # in-flight admission
+        for r in d.decoding:
+            if not r.done and len(r.output) + 1 >= r.max_new_tokens:
+                done_rids.add(r.rid)             # certain length finish
+                freed += 1
+        restored_live = [r for r in d.restored
+                         if not r.done and r.saved_cache is not None]
+        # projected decode set, in the exact order commit_stage builds it:
+        # surviving decoders, then final-chunk promotions, then restores
+        running_proj = [r for r in self.scheduler.running
+                        if r.state == RequestState.DECODE
+                        and r.rid not in done_rids]
+        running_proj += promoted
+        running_proj += restored_live
+        prefilling_proj = ([r for r in self.scheduler.prefilling
+                            if not r.done
+                            and r.rid not in finished_prefill]
+                           + extra_prefilling)
+        queue_proj = [r for r in self.scheduler.queue if not r.done]
+        # slots: predicted finishes free theirs at retire; restores claim
+        # theirs at commit (in-flight first chunks already claimed at
+        # dispatch, so kv.free_slots reflects them)
+        free = max(self.kv.free_slots + freed - len(restored_live), 0)
+        if self.paged:
+            # current-state page cap — in-flight growth makes this an
+            # approximation either way; validation re-checks the real cap
+            free = min(free, self._page_admission_cap())
+        decision = self.scheduler.plan_stage(
+            free, prefilling=prefilling_proj, running=running_proj,
+            queue=queue_proj, pos=pos)
+        if decision is None:
+            return None
+        snap = (self.shed, self.expired, self.cancelled, self.retries)
+        return self._finish_plan(decision, t0, snap, self._now(None),
+                                 speculative=True)
+
+    def _build_chain(self, spec: StagePlan, fut: StageFuture
+                     ) -> Optional[ChainInfo]:
+        """Decide whether speculative stage N+1 may dispatch BEFORE stage
+        N materializes, and build its device-side token chaining. Eligible
+        when every decode input token is either host-known now or a row of
+        N's device output (the gather in :func:`_select_tokens`), and when
+        everything the dispatch claims — slots for admissions, pages for
+        KV growth — fits the CURRENT pool: a chained stage must never
+        depend on N's retires landing first, because they haven't.
+        Ineligible plans aren't misses; they fall back to the
+        validate-after-commit path (one sync gap, no re-plan)."""
+        d_prev = fut.plan.decision
+        d = spec.decision
+        if d.restored or d_prev.restored:
+            return None        # restores scatter saved KV into the cache
+        if fut.nxt is None:    # at commit — a chained reader would race it
+            return None
+        n_first = sum(1 for c in d.chunks if c.first)
+        if n_first:
+            if n_first > self.kv.free_slots:
+                return None
+            if self.paged and n_first > self._page_admission_cap():
+                return None
+        # paged nxt rows follow N's decoding order; dense nxt is by slot
+        if self.paged:
+            idx_nxt = {r.rid: i for i, r in enumerate(d_prev.decoding)}
+        else:
+            idx_nxt = {r.rid: r.slot for r in d_prev.decoding}
+        idx_cn = {c.req.rid: i for i, c in enumerate(d_prev.chunks)
+                  if c.is_last}
+        n = _bucket(max(len(d.decoding), 1) if d.chunks
+                    else len(d.decoding),
+                    self.decode_bs_buckets) if self.paged \
+            else self.kv.max_slots
+        src_n = np.full(n, -1, np.int32)
+        src_c = np.full(n, -1, np.int32)
+        fb = np.zeros(n, np.int32)
+        proj: Dict[int, int] = {}
+        page_need = 0
+        for i, r in enumerate(d.decoding):
+            if r.done or r.slot < 0 or self._slot_req.get(r.slot) is not r:
+                # the projected row lost its slot since N dispatched (a
+                # forced eviction or expiry at this turn's maintenance) —
+                # the validate path will re-plan; chaining would read and
+                # write through a dead or re-owned slot
+                return None
+            j = i if self.paged else r.slot
+            if r.rid in idx_nxt:
+                src_n[j] = idx_nxt[r.rid]
+                plen = 1       # kv.lens advances by one at commit N
+            elif r.rid in idx_cn:
+                # promoted final chunk: commit N jumps its len to the
+                # span end, and its first token is N's cn row
+                src_c[j] = idx_cn[r.rid]
+                plen = None
+            else:
+                fb[j] = int(self._tokens[r.slot])
+                plen = 0
+            if self.paged:
+                plen = (d_prev.chunks[idx_cn[r.rid]].end if plen is None
+                        else int(self.kv.lens[r.slot]) + plen)
+                proj[r.slot] = plen
+                page_need += self.kv.page_need(
+                    r.slot, min(plen + 1, self.kv.max_len))
+        if self.paged:
+            for c in d.chunks:
+                if c.req.slot >= 0:
+                    page_need += self.kv.page_need(c.req.slot, c.end)
+                else:
+                    # fresh admission: upper bound — prefix adoption at
+                    # dispatch can only reduce the fresh-page need
+                    page_need += -(-c.end // self.kv.page_size)
+            if page_need > self.kv.free_pages:
+                return None
+        prev_cn = fut.cn if fut.cn is not None \
+            else np.zeros(1, np.int32)
+        return ChainInfo(src_nxt=src_n, src_cn=src_c, fallback=fb,
+                         prev_nxt=fut.nxt, prev_cn=prev_cn,
+                         proj_lens=proj)
+
+    def _validate_speculative(self, spec: StagePlan, tnow: float) -> bool:
+        """Decide whether a speculative plan may dispatch against REAL
+        post-commit state (the fallback for plans that could not chain
+        pre-sync). Checks SAFETY, not maximality: a plan that under-admits
+        merely idles capacity for one stage, while a stale span or slot
+        would corrupt state. Any epoch bump — a submit, cancel, eviction
+        or expiry since the plan was formed — rejects wholesale. The
+        turn's stage maintenance has already run by the time this is
+        called."""
+        if spec.epoch != self._epoch:
+            return self._reject_spec("epoch")
+        spec.tnow = tnow
+        d = spec.decision
+        for c in d.chunks:
+            r = c.req
+            if r.done:
+                return self._reject_spec("chunk-done")
+            if c.first:
+                if r.saved_cache is not None \
+                        or r not in self.scheduler.queue:
+                    return self._reject_spec("admission-gone")
+                total = len(r.prompt) + len(r.output)
+                if self.scheduler.max_prefill_target is not None:
+                    total = min(total, self.scheduler.max_prefill_target)
+                start = min(r.prefill_pos, total - 1) if total > 0 else 0
+                # a late prefix-index hit moves the start — re-plan to
+                # pick up the longer share instead of a stale span
+                if start != c.start or c.target != total:
+                    return self._reject_spec("admission-span")
+            elif r not in self.scheduler.prefilling \
+                    or r.prefill_pos != c.start:
+                return self._reject_spec("chunk-position")
+        for r in d.decoding:
+            if (r.done or r.slot < 0
+                    or r.state != RequestState.DECODE
+                    or self._slot_req.get(r.slot) is not r):
+                return self._reject_spec("decode-row")
+        for r in d.restored:
+            if (r.done or r.saved_cache is None
+                    or r not in self.scheduler.queue):
+                return self._reject_spec("restore-gone")
+        admissions = sum(1 for c in d.chunks if c.first) + len(d.restored)
+        if admissions:
+            if admissions > self.kv.free_slots:
+                return self._reject_spec("free-slots")
+            if self.paged and admissions > self._page_admission_cap():
+                return self._reject_spec("page-cap")
+        return True
+
+    def _reject_spec(self, reason: str) -> bool:
+        """Count why a speculative plan was invalidated (observability:
+        ``stats()['spec_miss_reasons']``) and reject it."""
+        self.spec_miss_reasons[reason] = \
+            self.spec_miss_reasons.get(reason, 0) + 1
+        return False
+
+    def _pipeline_turn(self, fut: StageFuture,
+                       now: Optional[float] = None, dispatch: bool = True
+                       ) -> Tuple[Optional[StageFuture],
+                                  Optional[StageReport], bool]:
+        """One turn of the pipelined loop around an in-flight stage N.
+        Fast path: run the turn's maintenance, speculatively plan N+1 and
+        — when its inputs chain on N's device futures
+        (:meth:`_build_chain`) — dispatch it BEFORE materializing N, so
+        the device-idle window is structurally zero: N+1 is already
+        enqueued when N finishes. Then materialize N (outside the lock —
+        the only device wait), commit its durable half, and for plans
+        that could not chain, validate-or-replan and dispatch behind the
+        commit. Stage N's deferred accounting always runs behind the new
+        dispatch. Returns ``(in-flight future, stage N's report, whether
+        a new stage was formed)``."""
+        new_fut = None
+        aborted = None
+        spec = None
+        chained = False
+        tnow = 0.0
+        with self._lock:
+            if dispatch:
+                # the same per-stage maintenance draws the sync path makes
+                # (spikes, expiry, preemption, prefix rematch) — once per
+                # turn, before planning, so the chained and fallback paths
+                # see identical schedules
+                tnow = self._stage_maintenance(now)
+                spec = self._plan_speculative(fut.plan)
+                if spec is not None:
+                    spec.tnow = tnow
+                    chain = self._build_chain(spec, fut)
+                    if chain is not None:
+                        spec.chain = chain
+                        try:
+                            new_fut = self.dispatch_stage(spec)
+                            chained = True
+                            self.spec_hits += 1
+                        except InjectedFault:
+                            self._abort_stage(spec.decision)
+                            aborted = spec
+                        spec = None
+        mat = self._materialize(fut)
+        with self._lock:
+            self._commit_critical(fut, mat)
+            formed = chained
+            if dispatch and not chained and aborted is None:
+                snapnow = (self.shed, self.expired, self.cancelled,
+                           self.retries)
+                if spec is not None and self._validate_speculative(spec,
+                                                                   tnow):
+                    spec.snap = snapnow
+                    self.spec_hits += 1
+                    nxt_plan = spec
+                elif spec is not None:
+                    # the commit contradicted the projection (EOS finish,
+                    # cancel, eviction, expiry, a moved prefix start):
+                    # re-plan from real state — maintenance already ran
+                    self.spec_misses += 1
+                    nxt_plan = self.plan_stage(now, maintain=False,
+                                               snap=snapnow)
+                else:
+                    # maintenance already ran at the top of the turn
+                    nxt_plan = self.plan_stage(now, maintain=False,
+                                               snap=snapnow)
+                if nxt_plan is not None:
+                    formed = True
+                    try:
+                        new_fut = self.dispatch_stage(nxt_plan)
+                    except InjectedFault:
+                        self._abort_stage(nxt_plan.decision)
+                        aborted = nxt_plan
+            report = self._commit_deferred(fut)
+            if aborted is not None:
+                # report order: stage N's deferred report first, then the
+                # aborted stage N+1
+                self._abort_report(aborted)
+        return new_fut, report, formed
+
+    def run_async(self, requests: List[Request], *,
+                  max_stages: int = 10_000, stall_stages: int = 500,
+                  max_wall_s: Optional[float] = None) -> List[Request]:
+        """Drive submitted requests to drain through the PIPELINED loop:
+        while stage N executes on device, the host commits N−1's deferred
+        accounting and plans/dispatches N+1 from projected state. Token
+        streams are identical to :meth:`run` under greedy sampling — the
+        engine's cross-layout parity tests prove batch composition never
+        changes sampled tokens, and speculation only ever changes
+        composition, never content. Watchdog contract matches ``run()``:
+        a descriptive :class:`EngineStalledError` instead of a silent
+        spin, with the in-flight stage noted."""
+        t_start = time.monotonic()
+        for r in requests:
+            try:
+                self.submit(r)
+            except AdmissionRejected:
+                r.finish("rejected", self._now())
+        stages = 0
+        idle = 0
+        last = self._progress()
+        fut: Optional[StageFuture] = None
+        while True:
+            if (max_wall_s is not None
+                    and time.monotonic() - t_start > max_wall_s):
+                raise EngineStalledError(self._stall_msg(
+                    f"wall budget {max_wall_s}s exhausted",
+                    inflight=fut is not None))
+            if fut is None:
+                with self._lock:
+                    if not self.scheduler.has_work:
+                        break
+                    if stages >= max_stages:
+                        raise EngineStalledError(self._stall_msg(
+                            f"max_stages={max_stages} exhausted with work "
+                            f"pending"))
+                    plan = self.plan_stage()
+                    if plan is None:
+                        if not self.scheduler.has_work:
+                            break       # drained by the expiry sweep
+                        raise EngineStalledError(self._stall_msg(
+                            "no stage could be formed (capacity livelock "
+                            "— queued work cannot be admitted and nothing "
+                            "is running)"))
+                    try:
+                        fut = self.dispatch_stage(plan)
+                    except InjectedFault:
+                        self._abort_stage(plan.decision)
+                        self._abort_report(plan)
+                    stages += 1
+                continue
+            fut, _, formed = self._pipeline_turn(
+                fut, dispatch=stages < max_stages)
+            stages += int(formed)
+            prog = self._progress()
+            if prog > last:
+                last, idle = prog, 0
+            else:
+                idle += 1
+                if idle >= stall_stages:
+                    raise EngineStalledError(self._stall_msg(
+                        f"no progress across {idle} consecutive stages",
+                        inflight=fut is not None))
+        return requests
+
+    def step_async(self, now: Optional[float] = None
+                   ) -> Optional[StageReport]:
+        """One pipelined tick for an external driver (the fleet): commit
+        the previous tick's in-flight stage if one exists, dispatch the
+        next and leave it in flight. Returns the COMMITTED stage's report
+        — one tick stale relative to ``step()`` — or None when priming or
+        idle. A replica killed mid-flight simply drops ``_inflight``:
+        nothing durable advanced, which is the exactly-once failover
+        contract. ``scheduler.has_work`` stays true while a stage is in
+        flight (its requests sit in running/prefilling until commit), so
+        drain detection needs no extra machinery."""
+        fut, self._inflight = self._inflight, None
+        if fut is not None:
+            self._inflight, report, _ = self._pipeline_turn(fut, now)
+            return report
+        with self._lock:
+            plan = self.plan_stage(now)
+            if plan is None:
+                return None
+            try:
+                self._inflight = self.dispatch_stage(plan)
+            except InjectedFault:
+                self._abort_stage(plan.decision)
+                return self._abort_report(plan)
+        return None
 
     # ------------------------------------------------------------ run + stats
     def _progress(self) -> int:
@@ -1241,7 +2053,7 @@ class ServingEngine:
         return (sum(len(r.output) for r in self._requests.values())
                 + sum(1 for r in self._requests.values() if r.done))
 
-    def _stall_msg(self, why: str) -> str:
+    def _stall_msg(self, why: str, inflight: bool = False) -> str:
         stuck = sorted(r.rid for r in (list(self.scheduler.queue)
                                        + self.scheduler.prefilling
                                        + self.scheduler.running)
@@ -1255,6 +2067,8 @@ class ServingEngine:
         if self.paged:
             msg += (f", free_pages={self.kv.free_pages}/"
                     f"{self.kv.num_pages - 1}")
+        if inflight:
+            msg += ", one stage in flight (dispatched, uncommitted)"
         return msg
 
     def run(self, requests: List[Request], *, max_stages: int = 10_000,
@@ -1315,24 +2129,35 @@ class ServingEngine:
         ``stats(reset=True)`` call, so a fleet aggregator polling N engines
         can attribute sheds/retries/aborts to its window. ``reset=True``
         snapshots the current totals as the next window's base (the
-        cumulative values are never cleared)."""
-        out = {"stages": self._stage_idx,
-               "preemptions": self.preemptions,
-               "forced_evictions": self.forced_evictions,
-               "stage_aborts": self.stage_aborts,
-               "retries": self.retries,
-               "shed": self.shed,
-               "expired": self.expired,
-               "cancelled": self.cancelled,
-               "rejected": self.rejected,
-               "audit_violations": self.audit_violations,
-               "peak_active": self.peak_active,
-               "shared_tokens_skipped": self.shared_tokens_skipped,
-               "kv": self.kv.stats()}
-        out["delta"] = {k: out[k] - self._stats_base.get(k, 0)
-                        for k in self.STATS_DELTA_KEYS}
-        if reset:
-            self._stats_base = {k: out[k] for k in self.STATS_DELTA_KEYS}
-        if self.injector is not None:
-            out["fault_counts"] = dict(self.injector.counts)
-        return out
+        cumulative values are never cleared). Lock-guarded: with the async
+        loop running, a poll from another thread lands between commits and
+        never reads a torn window."""
+        with self._lock:
+            out = {"stages": self._stage_idx,
+                   "preemptions": self.preemptions,
+                   "forced_evictions": self.forced_evictions,
+                   "stage_aborts": self.stage_aborts,
+                   "retries": self.retries,
+                   "shed": self.shed,
+                   "expired": self.expired,
+                   "cancelled": self.cancelled,
+                   "rejected": self.rejected,
+                   "audit_violations": self.audit_violations,
+                   "peak_active": self.peak_active,
+                   "shared_tokens_skipped": self.shared_tokens_skipped,
+                   "spec_hits": self.spec_hits,
+                   "spec_misses": self.spec_misses,
+                   "spec_miss_reasons": dict(self.spec_miss_reasons),
+                   "chained_stages": self.chained_stages,
+                   "host_gap_s": self.host_gap_s,
+                   "gap_stages": self.gap_stages,
+                   "aging_promotions": self.scheduler.aging_promotions,
+                   "kv": self.kv.stats()}
+            out["delta"] = {k: out[k] - self._stats_base.get(k, 0)
+                            for k in self.STATS_DELTA_KEYS}
+            if reset:
+                self._stats_base = {k: out[k]
+                                    for k in self.STATS_DELTA_KEYS}
+            if self.injector is not None:
+                out["fault_counts"] = dict(self.injector.counts)
+            return out

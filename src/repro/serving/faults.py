@@ -35,6 +35,18 @@ production path pays one ``is None`` check. Draw order — and therefore the
 schedule — is deterministic for a fixed seed and workload; the chaos soak
 asserts greedy-token parity against the fault-free run plus a clean
 ``KVManager.audit()`` after every stage.
+
+Async loop (PR 8): the pipelined loop keeps the injection sites at the
+same two boundaries — ``step_error``/``latency_spike`` are drawn once per
+stage **dispatch** (inside ``_invoke``, whether the stage is dispatched
+speculatively, chained on in-flight tokens, or re-planned) and page faults
+surface at plan/**commit** time where pages are actually allocated — so a
+fixed seed draws the identical schedule in both loops and greedy parity
+holds under chaos. A fault raised while dispatching a speculative stage
+aborts only that stage (its admissions return to the queue; the in-flight
+stage it chained on still commits). The stall watchdog sees in-flight
+``StageFuture``\\s: a stage is "live" from dispatch until its commit, so a
+spiked clock cannot misread an overlapped stage as a hang.
 """
 from __future__ import annotations
 

@@ -125,10 +125,18 @@ class Fleet:
                  router="affinity",
                  injector: Optional[FaultInjector] = None,
                  failover: bool = True, failover_priority: int = 1,
-                 degrade_ticks: int = 2, min_live: int = 1):
+                 degrade_ticks: int = 2, min_live: int = 1,
+                 async_steps: bool = False):
         assert n_replicas >= 1
         self.engine_factory = engine_factory
         self.injector = injector
+        # async_steps (PR 8): each tick uses the replica's pipelined
+        # step_async() — commit the previous tick's in-flight stage, leave
+        # the next in flight — so N replicas' device work overlaps the
+        # fleet's host-side routing/polling. Reports lag one tick; a killed
+        # replica drops its in-flight future with nothing durable advanced,
+        # so the exactly-once failover ledger is untouched.
+        self.async_steps = async_steps
         self.router: Router = (router if isinstance(router, Router)
                                else make_router(router))
         self.failover = failover
@@ -306,7 +314,9 @@ class Fleet:
                     rep.spike_ticks -= 1
                     if rep.spike_ticks <= 0:
                         rep.health = ReplicaHealth.HEALTHY
-            reports[rep.id] = rep.engine.step(now=now)
+            reports[rep.id] = (rep.engine.step_async(now=now)
+                               if self.async_steps
+                               else rep.engine.step(now=now))
             if rep.draining and not rep.engine.scheduler.has_work:
                 self._retire(rep)
         self._harvest()

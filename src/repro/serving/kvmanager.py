@@ -283,6 +283,16 @@ class KVManager:
             self.index_version += 1
 
     # ---- paged capacity ------------------------------------------------------
+    def page_need(self, slot: int, target_len: int) -> int:
+        """Fresh pages ``ensure_len(slot, target_len)`` would have to
+        allocate from the pool right now (0 when the block table already
+        covers the target). Used by the async engine's chained-dispatch
+        eligibility check: a stage enqueued BEFORE its predecessor's
+        retires land must fit the CURRENT pool, never the projected one."""
+        assert self.paged and slot in self._active, slot
+        need = _cdiv(max(target_len, 1), self.page_size)
+        return max(need - len(self._slot_pages[slot]), 0)
+
     def ensure_len(self, slot: int, target_len: int) -> None:
         """Grow ``slot``'s block table until it covers ``target_len``
         positions (monotonic; smaller targets are a no-op). Fresh pages are

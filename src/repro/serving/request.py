@@ -42,6 +42,14 @@ class Request:
     # first). The fleet boosts failover re-submissions so a request that
     # already survived a replica death is not immediately re-evicted.
     priority: int = 0
+    # priority aging (PR 8): stages formed while this request sat in the
+    # admission queue. With ``aging_rounds=K`` the scheduler promotes the
+    # *effective* priority by one band per K skipped rounds so a starved
+    # low band eventually admits under sustained high-priority load.
+    # ``queue_seq`` is the scheduler's submit sequence number — the FIFO
+    # tiebreak within an effective-priority band when aging re-sorts.
+    aging_skips: int = 0
+    queue_seq: int = 0
     # why the request reached a terminal state: "stop" (eos), "length",
     # "cancelled", "shed", "rejected", "expired" or "lost" (replica died
     # with failover disabled); None while live.

@@ -30,6 +30,21 @@ prefilling / running request past its deadline so dead work never occupies
 a slot or a page. The scheduler only reorganizes its own structures; the
 *engine* releases slots, pages and queued-head prefix pins for the requests
 these paths return.
+
+Async pipelining (PR 8): stage formation is split into a **pure plan**
+(:meth:`plan_stage` — reads state, mutates nothing, and accepts projected
+``prefilling``/``running``/``pos`` overrides so the engine can plan stage
+N+1 against the *predicted* post-commit state while stage N is still on
+device) and an **activation** (:meth:`activate` — pops admitted requests
+off the queue, freezes their prefill targets, bumps aging counters).
+``next_stage`` composes the two and keeps the synchronous API unchanged.
+
+Priority aging (PR 8): with ``aging_rounds=K``, a queued request's
+*effective* priority is ``priority + skipped_rounds // K`` — every stage
+formed while it sits in the queue counts as a skipped round, so a starved
+low-priority band eventually out-ranks a sustained high-priority arrival
+stream instead of starving forever. ``aging_rounds=None`` (default)
+disables aging and preserves strict band ordering.
 """
 from __future__ import annotations
 
@@ -66,11 +81,15 @@ class ChunkSpan:
     the final chunk — the engine samples the request's next token from it.
     ``first`` marks the admission chunk (the one that claims a KV slot);
     with prefix sharing its ``start`` is the first *unshared* position, not
-    necessarily 0."""
+    necessarily 0. ``target`` carries the planned prefill target for
+    admission chunks — it is frozen into ``req.prefill_target`` only at
+    :meth:`ContinuousBatchingScheduler.activate`, so a never-dispatched
+    speculative plan leaves the request untouched."""
     req: Request
     start: int
     end: int
     first: bool = False
+    target: Optional[int] = None
 
     @property
     def tokens(self) -> int:
@@ -82,7 +101,9 @@ class ChunkSpan:
 
     @property
     def is_last(self) -> bool:
-        return self.end >= self.req.prefill_total
+        total = self.target if self.target is not None else \
+            self.req.prefill_total
+        return self.end >= total
 
 
 @dataclass
@@ -114,12 +135,17 @@ class ContinuousBatchingScheduler:
                  prefill_chunk_tokens: Optional[int] = None,
                  max_prefill_target: Optional[int] = None,
                  queue_cap: Optional[int] = None,
-                 overload_policy: str = "reject"):
+                 overload_policy: str = "reject",
+                 aging_rounds: Optional[int] = None):
         assert prefill_chunk_tokens is None or prefill_chunk_tokens >= 1
         assert overload_policy in OVERLOAD_POLICIES, overload_policy
         assert queue_cap is None or queue_cap >= 1, queue_cap
+        assert aging_rounds is None or aging_rounds >= 1, aging_rounds
         self.queue_cap = queue_cap
         self.overload_policy = overload_policy
+        self.aging_rounds = aging_rounds
+        self.aging_promotions = 0
+        self._submit_seq = 0
         self.shed_count = 0
         # KV-capacity cap on a request's prefill target: a recompute-
         # preempted replay covers prompt + generated-so-far, which can
@@ -138,6 +164,13 @@ class ContinuousBatchingScheduler:
         self.stage_counts = {"mixed": 0, "decode_only": 0}
 
     # ---- request intake ------------------------------------------------------
+    def effective_priority(self, req: Request) -> int:
+        """Admission priority after aging: the raw band plus one promotion
+        per ``aging_rounds`` stages the request spent queued (PR 8)."""
+        if self.aging_rounds is None:
+            return req.priority
+        return req.priority + req.aging_skips // self.aging_rounds
+
     def submit(self, req: Request, *, now: float = 0.0) -> List[Request]:
         """Enqueue ``req``. With a bounded queue, the overload policy makes
         room first: returns the shed victims (the caller must release any
@@ -147,7 +180,8 @@ class ContinuousBatchingScheduler:
         Admission order respects ``Request.priority`` (PR 7): a request
         enqueues ahead of strictly lower-priority queued work and FIFO
         within its own priority band — so the queue head is always the
-        oldest highest-priority candidate."""
+        oldest highest-priority candidate. With aging enabled the
+        comparison uses :meth:`effective_priority`."""
         shed: List[Request] = []
         if self.queue_cap is not None:
             while len(self.queue) >= self.queue_cap:
@@ -159,8 +193,11 @@ class ContinuousBatchingScheduler:
                 self.queue.remove(victim)
                 self.shed_count += 1
                 shed.append(victim)
+        self._submit_seq += 1
+        req.queue_seq = self._submit_seq
+        eff = self.effective_priority(req)
         idx = next((i for i, r in enumerate(self.queue)
-                    if r.priority < req.priority), None)
+                    if self.effective_priority(r) < eff), None)
         if idx is None:
             self.queue.append(req)
         else:
@@ -208,6 +245,10 @@ class ContinuousBatchingScheduler:
         req.was_preempted = True
         req.prefill_pos = 0
         req.prefill_target = None
+        # under aging re-sorts, a negative seq keeps the preempted request
+        # ahead of everything newer in its effective-priority band
+        self._submit_seq += 1
+        req.queue_seq = -self._submit_seq
         if req in self.running:
             self.running.remove(req)
         if req in self.prefilling:
@@ -228,7 +269,21 @@ class ContinuousBatchingScheduler:
         return bool(self.queue) or bool(self.running) or bool(self.prefilling)
 
     # ---- stage formation -----------------------------------------------------
-    def next_stage(self, free_slots: int) -> Optional[StageDecision]:
+    def plan_stage(self, free_slots: int, *,
+                   prefilling: Optional[List[Request]] = None,
+                   running: Optional[List[Request]] = None,
+                   queue=None,
+                   pos: Optional[dict] = None) -> Optional[StageDecision]:
+        """Form the next stage WITHOUT mutating any scheduler or request
+        state. The default call plans against live state; the async engine
+        passes projected ``prefilling``/``running``/``pos`` overrides to
+        plan stage N+1 against the predicted post-commit state of the
+        in-flight stage N (PR 8). A plan only takes effect when
+        :meth:`activate` runs — discarding an invalidated speculative plan
+        costs nothing."""
+        prefill_src = self.prefilling if prefilling is None else prefilling
+        queue_src = self.queue if queue is None else queue
+        pos = pos or {}
         chunks: List[ChunkSpan] = []
         restored: List[Request] = []
         chunked = self.prefill_chunk_tokens is not None
@@ -236,23 +291,24 @@ class ContinuousBatchingScheduler:
                   else self.max_prefill_tokens)
         used = 0
         # continue in-flight chunked prefills first (they hold slots)
-        for r in self.prefilling:
+        for r in prefill_src:
             if len(chunks) >= self.max_prefill_seqs or used >= budget:
                 break
-            n = min(r.prefill_total - r.prefill_pos, budget - used)
+            p = pos.get(r.rid, r.prefill_pos)
+            n = min(r.prefill_total - p, budget - used)
             if n <= 0:
                 continue
-            chunks.append(ChunkSpan(r, r.prefill_pos, r.prefill_pos + n))
+            chunks.append(ChunkSpan(r, p, p + n))
             used += n
-        # admit new work into free slots
+        # admit new work into free slots (queue order, same break points as
+        # the pre-split loop: the head blocks everything behind it)
         free = free_slots
-        while self.queue and free > 0:
-            r = self.queue[0]
+        for r in queue_src:
+            if free <= 0:
+                break
             if r.done:                  # cancelled/expired while queued
-                self.queue.popleft()    # (defensive: sweeps normally clear)
-                continue
+                continue                # (purged at activate; sweeps clear)
             if r.saved_cache is not None:        # migrated-back: restore only
-                self.queue.popleft()
                 restored.append(r)
                 free -= 1
                 continue
@@ -261,34 +317,86 @@ class ContinuousBatchingScheduler:
             total = len(r.prompt) + len(r.output)
             if self.max_prefill_target is not None:
                 total = min(total, self.max_prefill_target)
-            r.prefill_target = total
             # with prefix sharing, the engine set prefill_pos to the first
             # unshared position at submit — those positions' KV is already
             # resident, so spans start there and the shared prefix skips
             # its prefill stages entirely (prefill_pos == 0 otherwise).
-            start = min(r.prefill_pos, total - 1) if total > 0 else 0
+            p = pos.get(r.rid, r.prefill_pos)
+            start = min(p, total - 1) if total > 0 else 0
             if chunked:
                 if used >= budget:
                     break
                 span = ChunkSpan(r, start, min(total, start + budget - used),
-                                 first=True)
+                                 first=True, target=total)
             else:
                 if used + (total - start) > budget and used > 0:
                     break
                 # legacy unchunked: the whole remaining prompt in one span
                 # (a single over-budget prompt still runs alone rather than
                 # starving)
-                span = ChunkSpan(r, start, total, first=True)
-            self.queue.popleft()
-            r.state = RequestState.PREFILL
+                span = ChunkSpan(r, start, total, first=True, target=total)
             chunks.append(span)
             used += span.tokens
             free -= 1
-        decoding = [r for r in self.running if r.state == RequestState.DECODE]
+        if running is None:
+            decoding = [r for r in self.running
+                        if r.state == RequestState.DECODE]
+        else:
+            # projected override: the engine already applied predicted
+            # promotions/finishes, so take the list verbatim (members may
+            # still read PREFILL until the in-flight commit lands)
+            decoding = list(running)
         if not chunks and not decoding and not restored:
             return None
-        self.stage_counts["mixed" if chunks else "decode_only"] += 1
         return StageDecision(chunks, decoding, restored)
+
+    def activate(self, decision: StageDecision) -> None:
+        """Make a planned stage real: pop admitted requests off the queue,
+        freeze their prefill targets, transition them to PREFILL, and age
+        the passed-over queue. Called exactly once per dispatched plan; a
+        discarded speculative plan is simply never activated."""
+        if any(r.done for r in self.queue):
+            self.queue = deque(r for r in self.queue if not r.done)
+        for c in decision.chunks:
+            if not c.first:
+                continue
+            r = c.req
+            try:
+                self.queue.remove(r)
+            except ValueError:
+                pass
+            if c.target is not None:
+                r.prefill_target = c.target
+            r.state = RequestState.PREFILL
+        for r in decision.restored:
+            try:
+                self.queue.remove(r)
+            except ValueError:
+                pass
+        if self.aging_rounds is not None and self.queue:
+            promoted = False
+            for r in self.queue:
+                r.aging_skips += 1
+                if r.aging_skips % self.aging_rounds == 0:
+                    promoted = True
+                    self.aging_promotions += 1
+            if promoted:
+                # re-stabilize: effective-priority order, FIFO within a band
+                self.queue = deque(sorted(
+                    self.queue,
+                    key=lambda r: (-self.effective_priority(r), r.queue_seq)))
+        self.stage_counts["mixed" if decision.chunks else "decode_only"] += 1
+
+    def next_stage(self, free_slots: int) -> Optional[StageDecision]:
+        decision = self.plan_stage(free_slots)
+        if decision is None:
+            # purge terminal queued requests even on an empty plan so
+            # ``has_work`` cannot stick on a dead queue (pre-split behavior)
+            if any(r.done for r in self.queue):
+                self.queue = deque(r for r in self.queue if not r.done)
+            return None
+        self.activate(decision)
+        return decision
 
     def commit_stage(self, decision: StageDecision) -> None:
         """After the engine executes the stage: advance chunk positions,
@@ -302,6 +410,11 @@ class ContinuousBatchingScheduler:
                 if not r.done:
                     r.state = RequestState.DECODE
                 self.running.append(r)
+            elif r.done:
+                # cancelled/expired mid-flight (async loop): ``remove()``
+                # already pulled it — do not resurrect the row
+                if r in self.prefilling:
+                    self.prefilling.remove(r)
             elif r not in self.prefilling:
                 self.prefilling.append(r)
         for r in decision.restored:
