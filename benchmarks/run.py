@@ -36,6 +36,7 @@ FIGS = [
     "overload",              # goodput under overload + shedding (PR 6)
     "fleet",                 # multi-replica routing + failover (PR 7)
     "serve_async",           # pipelined vs sync serving loop (PR 8 tentpole)
+    "spec_decode",           # n-gram speculative decoding (PR 9 tentpole)
 ]
 
 

@@ -88,6 +88,11 @@ def route_component(cost: OpCost, *, threshold: float = OPB_THRESHOLD,
 # deliberately NOT pinned: a whole-prompt chunk is compute-bound like
 # prefill, while a short chunk over a long written prefix is
 # bandwidth-bound like decode — the Op/B rule places it per stage.
+# Spec-decode verify spans (PR 9, StageMix.spec_spans) ride the same
+# component: a k+1-token verify row over a long prefix sits between decode
+# and chunk on the interpolation, so acceptance directly RAISES the
+# stage's attn Op/B — exactly the measured quantity this rule routes on
+# (at high acceptance a verify stage can flip attn_chunk back to compute).
 _ALWAYS_COMPUTE = {"qkv+proj", "lm_head"}
 # Components the paper pins to the bandwidth unit in its stage policy even
 # when instantaneous Op/B is borderline:

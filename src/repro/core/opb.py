@@ -42,26 +42,38 @@ class StageMix:
                       processes prompt positions [start, end), attending over
                       the already-written [0, start) KV prefix plus the
                       in-flight chunk (ROADMAP "DESIGN: chunked prefill").
-    Empty prefill_len and chunk_spans => decoding-only stage.
+    ``spec_spans``  — (start, end) per speculative-decode verify sequence
+                      (PR 9): a decode row carrying 1 + k tokens (last
+                      sampled token + k drafts). Attention-wise identical to
+                      a chunk span — queries [start, end) over the written
+                      prefix — but every position's logits are sampled, so
+                      the LM head produces (end - start) outputs per row.
+                      Multi-token rows are the Op/B lever: attn goes from
+                      1 query to k+1 queries per KV stream, and the FC/MoE
+                      GEMMs amortize weights over k+1× the tokens.
+    Empty prefill_len, chunk_spans and spec_spans => decoding-only stage.
     """
     decode_ctx: Tuple[int, ...] = ()
     prefill_len: Tuple[int, ...] = ()
     chunk_spans: Tuple[Tuple[int, int], ...] = ()
+    spec_spans: Tuple[Tuple[int, int], ...] = ()
 
     @property
     def is_mixed(self) -> bool:
-        return len(self.prefill_len) > 0 or len(self.chunk_spans) > 0
+        return (len(self.prefill_len) > 0 or len(self.chunk_spans) > 0
+                or len(self.spec_spans) > 0)
 
     @property
     def num_tokens(self) -> int:
         """Tokens passing through the FC/MoE layers this stage."""
         return (len(self.decode_ctx) + sum(self.prefill_len)
-                + sum(e - s for s, e in self.chunk_spans))
+                + sum(e - s for s, e in self.chunk_spans)
+                + sum(e - s for s, e in self.spec_spans))
 
     @property
     def batch_size(self) -> int:
         return (len(self.decode_ctx) + len(self.prefill_len)
-                + len(self.chunk_spans))
+                + len(self.chunk_spans) + len(self.spec_spans))
 
 
 def decoding_only(batch: int, ctx: int) -> StageMix:
@@ -305,8 +317,9 @@ def layer_stage_cost(cfg: ModelConfig, kind: LayerKind, mix: StageMix,
     if kind.mixer == MAMBA:
         if mix.decode_ctx:
             comps.append(mamba_decode_cost(cfg, len(mix.decode_ctx)))
-        pre_tokens = sum(mix.prefill_len) + sum(e - s
-                                                for s, e in mix.chunk_spans)
+        pre_tokens = (sum(mix.prefill_len)
+                      + sum(e - s for s, e in mix.chunk_spans)
+                      + sum(e - s for s, e in mix.spec_spans))
         if pre_tokens:
             comps.append(mamba_prefill_cost(cfg, pre_tokens))
     else:
@@ -326,12 +339,16 @@ def layer_stage_cost(cfg: ModelConfig, kind: LayerKind, mix: StageMix,
         if mix.prefill_len:
             comps.append(pre)
         chk = OpCost("attn_chunk", 0.0, 0.0, 0.0)
-        for s0, s1 in mix.chunk_spans:
+        # spec-decode verify spans (PR 9) cost exactly like chunk spans —
+        # attention_chunk_cost already interpolates from decode (end =
+        # start+1) toward prefill as the span widens, which IS the raised
+        # verify-stage Op/B the duplex planner must see
+        for s0, s1 in (*mix.chunk_spans, *mix.spec_spans):
             chk = chk.merged(attention_chunk_cost(cfg, s0, s1,
                                                   window=window,
                                                   kv_quant=kv_quant),
                              "attn_chunk")
-        if mix.chunk_spans:
+        if mix.chunk_spans or mix.spec_spans:
             comps.append(chk)
         if kind.mixer == ATTN_CROSS:
             # decoder cross-attention reads encoder KV: decode ≈ attn_decode
@@ -353,7 +370,9 @@ def stage_cost_breakdown(cfg: ModelConfig, mix: StageMix,
         for c in lc.components:
             key = c.name
             agg[key] = agg[key].merged(c) if key in agg else c
-    # LM head (per generated token: decode seqs + 1 per prefill seq)
-    out_tokens = len(mix.decode_ctx) + len(mix.prefill_len)
+    # LM head (per generated token: decode seqs + 1 per prefill seq; a
+    # verify span samples EVERY position — end-start outputs per row)
+    out_tokens = (len(mix.decode_ctx) + len(mix.prefill_len)
+                  + sum(e - s for s, e in mix.spec_spans))
     agg["lm_head"] = _gemm("lm_head", out_tokens, cfg.d_model, cfg.vocab_size)
     return agg

@@ -173,6 +173,16 @@ def main(argv=None) -> int:
                         "plans/dispatches N+1 (JAX async dispatch); greedy "
                         "tokens are byte-identical to the sync loop; with "
                         "--replicas >1 every replica steps pipelined")
+    p.add_argument("--spec-k", type=int, default=0, metavar="K",
+                   help="self-speculative decoding (greedy only): draft up "
+                        "to K tokens per decode row by n-gram lookup over "
+                        "the request's own stream, verify them batchwise "
+                        "as one chunk-attention span, and rewind rejected "
+                        "KV page-granularly; tokens stay byte-identical to "
+                        "K=0 (default 0 = off)")
+    p.add_argument("--spec-ngram", type=int, default=3, metavar="N",
+                   help="tail n-gram length the drafter matches against "
+                        "earlier stream positions (with --spec-k)")
     p.add_argument("--aging-rounds", type=int, default=None, metavar="K",
                    help="priority aging: promote a queued request's "
                         "effective priority one band per K admission "
@@ -236,6 +246,8 @@ def main(argv=None) -> int:
                              queue_cap=args.queue_cap,
                              overload_policy=args.overload_policy,
                              aging_rounds=args.aging_rounds,
+                             spec_k=args.spec_k,
+                             spec_ngram=args.spec_ngram,
                              injector=(child_injector if fleet_mode
                                        else injector))
 
@@ -309,6 +321,13 @@ def main(argv=None) -> int:
               f"spec_misses={st2['spec_misses']} "
               f"host stage-gap mean={gap_ms:.3f}ms "
               f"over {st2['gap_stages']} gaps")
+    if args.spec_k > 0:
+        print(f"[serve] spec decode(k={args.spec_k}, "
+              f"ngram={args.spec_ngram}): "
+              f"proposed={st2['spec_proposed']} "
+              f"accepted={st2['spec_accepted']} "
+              f"(rate={st2['spec_acceptance']:.2f}), "
+              f"rewinds={st2['spec_rewinds']}")
     if args.aging_rounds is not None:
         print(f"[serve] priority aging(K={args.aging_rounds}): "
               f"{st2['aging_promotions']} promotions")

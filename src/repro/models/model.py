@@ -276,7 +276,7 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, attn_ctx=None, *,
 
 
 def mixed_step(params, cfg: ModelConfig, dec_tokens, chunk_tokens, cache, *,
-               attn_ctx=None, chunk_ctx):
+               attn_ctx=None, chunk_ctx, spec_tokens: bool = False):
     """One unified mixed continuous-batching stage (ROADMAP "DESIGN: chunked
     prefill"): decode rows and prefill-chunk rows run the decoder stack as a
     single token stream — attention per group against the shared cache,
@@ -288,7 +288,16 @@ def mixed_step(params, cfg: ModelConfig, dec_tokens, chunk_tokens, cache, *,
     ``decode_step``); ``chunk_ctx`` = {"starts", "chunk_lens", plus dense:
     "slots" cache rows / paged: "block_tables"}. Returns (dec_logits
     (Bd,1,V), chunk_logits (Bc,1,V) at each chunk's last live position,
-    new_cache, moe_counts (E,) fp32 or None)."""
+    new_cache, moe_counts (E,) fp32 or None).
+
+    ``spec_tokens`` (static, PR 9): stages carrying speculative verify
+    spans need the greedy token at EVERY chunk position, not just the last
+    — position i's argmax is the verifier's prediction for stream position
+    start+i+1, compared against draft i+1 to find the accepted prefix. The
+    return gains a 5th element, chunk_argmax (Bc, Sc) int32 (the LM head
+    runs over the whole chunk slab; verify spans are short, so this is the
+    k+1-row head cost speculation budgets for). False keeps the original
+    4-tuple so plain chunked stages pay nothing."""
     from repro.models.blocks import segment_mixed_step
     xd = embed_lookup(params["embed"], dec_tokens).astype(cfg.dtype)
     xc = embed_lookup(params["embed"], chunk_tokens).astype(cfg.dtype)
@@ -310,4 +319,11 @@ def mixed_step(params, cfg: ModelConfig, dec_tokens, chunk_tokens, cache, *,
     last = jnp.maximum(chunk_ctx["chunk_lens"].astype(jnp.int32) - 1, 0)
     xc_last = xc[jnp.arange(Bc), last][:, None, :]        # (Bc, 1, d)
     chunk_logits = _lm_head(params, cfg, xc_last)
+    if spec_tokens:
+        # argmax over f32 like sampling.sample's greedy branch — verify
+        # acceptance must reproduce the sampler's tie-breaks bit-exactly
+        chunk_argmax = jnp.argmax(
+            _lm_head(params, cfg, xc).astype(jnp.float32),
+            axis=-1).astype(jnp.int32)                         # (Bc, Sc)
+        return dec_logits, chunk_logits, new_cache, counts, chunk_argmax
     return dec_logits, chunk_logits, new_cache, counts

@@ -1,0 +1,81 @@
+"""Self-speculative drafting: prompt-lookup / n-gram token proposal (PR 9).
+
+Decode is the bandwidth-bound regime the paper builds a device for — one
+token per sequence per stage, every stage re-streaming the whole KV
+working set (GQA Op/B 4-8, §III-A). Speculative decoding attacks the same
+ratio from the software side: propose ``k`` future tokens per request,
+verify them all in ONE mixed-stage call, and commit the longest agreeing
+prefix. Each accepted token amortizes the KV/weight streams one more way,
+raising effective decode Op/B by the per-stage acceptance factor — the
+lever `arXiv 2507.15465` sizes from the hardware side.
+
+This drafter needs **no second model** (prompt lookup, a.k.a. n-gram
+speculation): natural-language and code streams repeat themselves, so the
+continuation that followed the *last occurrence* of the current tail
+n-gram is a strong guess for what follows it now. Drafting is pure
+host-side list matching over ``Request.token_stream()`` — it costs no
+device cycles and composes with every KV layout because the verify step
+is just a chunk span (`models/attention.py::chunk_attention` already
+handles "rows attending to a written prefix plus an in-flight span").
+
+Greedy-only by contract: acceptance compares the verifier's argmax to the
+draft, which reproduces the non-speculative greedy stream exactly.
+Sampled decoding would need rejection sampling to keep the output
+distribution — out of scope, so the engine gates speculation to
+``temperature == 0``.
+
+The drafter is stateless across requests (match state is rebuilt from the
+token stream each call); all scheduling/commit state lives on ``Request``
+(``draft`` = the proposal in flight) and acceptance stats on the engine.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+
+class NgramDrafter:
+    """Propose up to ``k`` tokens by matching the stream's tail n-gram.
+
+    For ``n = ngram .. 1`` (longest first), find the most recent earlier
+    occurrence of the last ``n`` tokens in the stream and propose the
+    tokens that followed it. Longer matches are rarer but much more
+    predictive; falling back to shorter ``n`` keeps proposal rate high on
+    loosely repetitive streams. Returns ``[]`` when nothing matches (the
+    request simply decodes one token, unspeculated, that stage).
+    """
+
+    def __init__(self, k: int = 4, ngram: int = 3):
+        assert k >= 1 and ngram >= 1, (k, ngram)
+        self.k = k
+        self.ngram = ngram
+
+    def draft(self, tokens: Sequence[int]) -> List[int]:
+        """``tokens`` = the full processed stream, *including* the latest
+        sampled-but-unverified token (the verify span's first input). The
+        proposal predicts the tokens after ``tokens[-1]``.
+
+        The match is extended PERIODICALLY: a most-recent match at
+        distance ``p`` behind the tail models the stream as locally
+        period-``p`` (token at position ``L+j`` = token at ``L+j-p``), so
+        the proposal reads indices past the stream end from its own
+        earlier entries instead of truncating at ``p`` tokens. A stream
+        stuck on one token (period 1) thus still drafts the full ``k`` —
+        exactly the regime where truncation would cost the most."""
+        toks = list(tokens)
+        length = len(toks)
+        if length < 2:
+            return []
+        for n in range(min(self.ngram, length - 1), 0, -1):
+            tail = toks[length - n:]
+            # most recent earlier occurrence of the tail n-gram; the match
+            # may not be the tail itself (start <= L-n-1) but its
+            # continuation may run into it — those are still known tokens.
+            for start in range(length - n - 1, -1, -1):
+                if toks[start:start + n] == tail:
+                    out: List[int] = []
+                    for j in range(self.k):
+                        idx = start + n + j
+                        out.append(toks[idx] if idx < length
+                                   else out[idx - length])
+                    return out
+        return []

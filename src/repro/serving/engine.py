@@ -81,8 +81,8 @@ from __future__ import annotations
 import functools
 import threading
 import time
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,6 +94,7 @@ from repro.core.dispatch import plan_stage as core_plan_stage
 from repro.core.execution import ExecutionPlan, execution_plan
 from repro.core.partition import DuplexPlanner, build_luts
 from repro.models.model import decode_step, init_cache, mixed_step, prefill
+from repro.serving.drafter import NgramDrafter
 from repro.serving.faults import (FaultInjector, InjectedFault,
                                   InjectedStepError)
 from repro.serving.kvmanager import KVManager
@@ -198,6 +199,13 @@ class StageReport:
     cancelled: int = 0
     retries: int = 0
     audit_violations: int = 0
+    # speculative decoding (PR 9): draft tokens this stage's verify spans
+    # carried / draft tokens the verifier's argmax agreed with (the bonus
+    # token every verify row commits on top is not counted — acceptance
+    # rate is spec_accepted / spec_proposed, and a rate of r means each
+    # verify row committed r·k + 1 tokens for one stage's latency).
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
 
 @dataclass
@@ -264,6 +272,7 @@ class StageFuture:
     plan: StagePlan
     nxt: Any = None                 # decode next-token device array
     cn: Any = None                  # chunk next-token device array
+    cn_all: Any = None              # per-position chunk argmax (spec verify)
     counts: Any = None              # summed per-expert router counts
     legacy_nxt: Any = None          # legacy monolithic prefill next tokens
     legacy_cache: Any = None        # legacy local cache (scattered at commit)
@@ -273,6 +282,14 @@ class StageFuture:
     # the deferred report can't absorb the NEXT stage's window
     deltas: Tuple[int, int, int, int] = (0, 0, 0, 0)
     t_dispatch: float = 0.0
+    # speculative decoding (PR 9): per-stage draft/accept counts frozen at
+    # the critical commit for the deferred StageReport
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    # (rid, token) pairs committed this stage, in commit order — the
+    # deferred commit fires ``on_token`` callbacks from here, OFF the
+    # critical section (only populated when a callback is registered)
+    emitted: List[Tuple[int, int]] = field(default_factory=list)
 
 
 class EngineStalledError(RuntimeError):
@@ -302,6 +319,8 @@ class ServingEngine:
                  aging_rounds: Optional[int] = None,
                  injector: Optional[FaultInjector] = None,
                  audit_stages: Optional[bool] = None,
+                 spec_k: int = 0, spec_ngram: int = 3,
+                 on_token: Optional[Callable[[int, int], None]] = None,
                  seed: int = 0):
         assert not cfg.is_encoder_decoder, \
             "engine serves decoder-only LMs; enc-dec is exercised via serve_step"
@@ -390,7 +409,13 @@ class ServingEngine:
         # silently truncated.
         self.prefill_len_buckets = tuple(sorted(
             {b for b in prefill_len_buckets if b < max_len} | {max_len}))
-        self.seq_buckets = tuple(sorted({1, 2, max_prefill_seqs}))
+        # chunk-row jit buckets: prefill admissions are capped at
+        # max_prefill_seqs, but with spec decoding (PR 9) every decode row
+        # may additionally carry a verify span — the row bucket must cover
+        # max_prefill_seqs + max_slots without per-count recompiles
+        row_cap = max_prefill_seqs + (max_slots if spec_k > 0 else 0)
+        self.seq_buckets = tuple(sorted(
+            {1, 2, max_prefill_seqs, row_cap} | set(_pow2_buckets(row_cap))))
         # chunk-length jit buckets: powers of two up to the chunk budget
         # (or max_len for whole-prompt spans)
         self.chunk_len_buckets = _pow2_buckets(
@@ -495,6 +520,36 @@ class ServingEngine:
         # path).
         self._staging_bufs: List[Dict[str, np.ndarray]] = [{}, {}]
         self._staging_idx = 0
+        # ---- speculative decoding (PR 9) ----
+        # spec_k > 0 turns on self-speculative decode: an n-gram drafter
+        # proposes up to spec_k tokens per decode row and the scheduler
+        # emits them as verify ChunkSpans through the SAME mixed-stage
+        # path (serving/drafter.py has the full contract). Greedy-only:
+        # acceptance compares the verifier's argmax against the draft,
+        # which reproduces the unspeculated greedy stream exactly.
+        self.spec_k = int(spec_k)
+        self.spec_ngram = int(spec_ngram)
+        self.drafter: Optional[NgramDrafter] = None
+        if self.spec_k > 0:
+            if sampling.temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding requires greedy sampling "
+                    "(temperature == 0): acceptance compares the "
+                    "verifier's argmax against the draft — sampled "
+                    "decoding would need rejection sampling to keep the "
+                    "output distribution")
+            if not self._unified:
+                raise NotImplementedError(
+                    "speculative decoding rides the unified mixed-stage "
+                    "chunk path (full self-attention decoder stacks only)")
+            self.drafter = NgramDrafter(k=self.spec_k, ngram=self.spec_ngram)
+        self.spec_proposed = 0   # draft tokens sent to verification
+        self.spec_accepted = 0   # draft tokens the verifier agreed with
+        self.spec_rewinds = 0    # verify rows that rolled KV back
+        # streaming (PR 9 satellite): per-token callback, fired from the
+        # DEFERRED commit half — after the next stage's dispatch in the
+        # async loops — so a slow consumer can never stall the pipeline.
+        self.on_token = on_token
 
     # ------------------------------------------------------------------ jits
     def _moe_caps(self, T: int, k_cold: int) -> Tuple[int, int, int]:
@@ -570,14 +625,18 @@ class ServingEngine:
 
     def _mixed_fn(self, k_cold: int, c_hot: int, c_cold: int, c_block: int,
                   n_chunks: int, chunk_len: int, n_batch: int = 0,
-                  n_pages: int = 0, n_cpages: int = 0):
+                  n_pages: int = 0, n_cpages: int = 0, spec: bool = False):
         """The unified mixed-stage step: decode rows + chunk rows through
         one traced model call (``models/model.py::mixed_step``) whose MoE
         layers see the concatenated token stream. Static key = (k_cold,
         capacities, chunk-row bucket, chunk-length bucket; paged: + decode
-        batch / live-page / chunk-page buckets)."""
+        batch / live-page / chunk-page buckets). ``spec`` (PR 9) keys the
+        speculative-verify variant: the model additionally returns the
+        greedy argmax at EVERY chunk position (``cn_all``), which the
+        commit compares against each verify span's draft to find the
+        accepted prefix."""
         key = (k_cold, c_hot, c_cold, n_chunks, chunk_len,
-               n_batch, n_pages, n_cpages)
+               n_batch, n_pages, n_cpages, spec)
         if key not in self._mixed_fns:
             cfg = self.cfg
             plan = self._moe_plan(k_cold, c_hot, c_cold, c_block)
@@ -587,30 +646,40 @@ class ServingEngine:
                 def fn(params, dec_tokens, dec_lengths, dec_bt, chunk_tokens,
                        starts, clens, chunk_bt, cache, key_):
                     with execution_plan(plan):
-                        dl, cl, new_cache, counts = mixed_step(
+                        out = mixed_step(
                             params, cfg, dec_tokens, chunk_tokens, cache,
                             attn_ctx={"lengths": dec_lengths,
                                       "block_tables": dec_bt,
                                       "valid": dec_lengths > 0},
                             chunk_ctx={"starts": starts,
                                        "chunk_lens": clens,
-                                       "block_tables": chunk_bt})
+                                       "block_tables": chunk_bt},
+                            spec_tokens=spec)
+                    dl, cl, new_cache, counts = out[:4]
                     kd, kc = jax.random.split(key_)
-                    return (sample(dl, kd, self.sampling),
-                            sample(cl, kc, self.sampling), new_cache, counts)
+                    nxt = sample(dl, kd, self.sampling)
+                    cn = sample(cl, kc, self.sampling)
+                    if spec:
+                        return nxt, cn, out[4], new_cache, counts
+                    return nxt, cn, new_cache, counts
             else:
                 @jax.jit
                 def fn(params, dec_tokens, dec_valid, chunk_tokens, slots,
                        starts, clens, cache, key_):
                     with execution_plan(plan):
-                        dl, cl, new_cache, counts = mixed_step(
+                        out = mixed_step(
                             params, cfg, dec_tokens, chunk_tokens, cache,
                             attn_ctx={"valid": dec_valid},
                             chunk_ctx={"slots": slots, "starts": starts,
-                                       "chunk_lens": clens})
+                                       "chunk_lens": clens},
+                            spec_tokens=spec)
+                    dl, cl, new_cache, counts = out[:4]
                     kd, kc = jax.random.split(key_)
-                    return (sample(dl, kd, self.sampling),
-                            sample(cl, kc, self.sampling), new_cache, counts)
+                    nxt = sample(dl, kd, self.sampling)
+                    cn = sample(cl, kc, self.sampling)
+                    if spec:
+                        return nxt, cn, out[4], new_cache, counts
+                    return nxt, cn, new_cache, counts
 
             self._mixed_fns[key] = fn
         return self._mixed_fns[key]
@@ -1059,6 +1128,7 @@ class ServingEngine:
         becomes durable."""
         decision = fut.plan.decision
         nxt = mat["nxt"]
+        emit = self.on_token is not None
         if self.paged:
             adv = []
             for i, r in enumerate(decision.decoding):
@@ -1067,6 +1137,8 @@ class ServingEngine:
                 tok = int(nxt[i])
                 self._tokens[r.slot] = tok
                 r.record_token(tok, tnow)
+                if emit:
+                    fut.emitted.append((r.rid, tok))
                 adv.append(r.slot)
             if adv:
                 self.kv.lens[np.asarray(adv)] += 1
@@ -1077,6 +1149,8 @@ class ServingEngine:
             tok = int(nxt[r.slot])
             self._tokens[r.slot] = tok
             r.record_token(tok, tnow)
+            if emit:
+                fut.emitted.append((r.rid, tok))
 
     def _dispatch_mixed(self, fut: StageFuture) -> None:
         """Dispatch half of a unified mixed stage: first chunks claim their
@@ -1098,13 +1172,21 @@ class ServingEngine:
                     # chunk starts at the first unshared position
                     self.kv.adopt_prefix(s, c.req.shared_pages)
                     c.req.shared_pages = None
+        spec = any(c.draft is not None for c in chunks)
         nc_b = _bucket(len(chunks), self.seq_buckets)
         sc_b = _bucket(max(c.tokens for c in chunks), self.chunk_len_buckets)
         ctokens = self._staging("m_ctokens", (nc_b, sc_b), np.int32)
         starts = self._staging("m_starts", (nc_b,), np.int32)
         clens = self._staging("m_clens", (nc_b,), np.int32)
         for i, c in enumerate(chunks):
-            seq = c.req.token_stream(c.end)[c.start:]
+            if c.draft is not None:
+                # verify span (PR 9): the last sampled — not yet written —
+                # token followed by the draft; its KV lands at [start, end)
+                # exactly like a prefill chunk's would
+                seq = c.req.token_stream(c.start + 1)[c.start:] + \
+                    list(c.draft)
+            else:
+                seq = c.req.token_stream(c.end)[c.start:]
             ctokens[i, :len(seq)] = seq
             starts[i] = c.start
             clens[i] = c.tokens
@@ -1155,13 +1237,22 @@ class ServingEngine:
                 + [(c.req.slot, n) for c, n in zip(chunks, cpages)])
             fut.moe_caps = self._moe_caps(nb + nc_b * sc_b, k_cold)
             fn = self._mixed_fn(k_cold, *fut.moe_caps, nc_b, sc_b,
-                                nb, mp, mpc)
+                                nb, mp, mpc, spec)
             if chain is not None:
+                # a chained stage never carries verify spans
+                # (_build_chain refuses them) — 4-tuple unpack is safe
                 fut.nxt, fut.cn, self.kv.cache, fut.counts = self._invoke(
                     _chain_fn(fn, chain.mode), self.params, chain.prev_nxt,
                     chain.prev_cn, chain.src_nxt, chain.src_cn,
                     chain.fallback, lengths, bt, ctokens, starts,
                     clens, bt_c, self.kv.cache, self._next_key())
+            elif spec:
+                (fut.nxt, fut.cn, fut.cn_all, self.kv.cache,
+                 fut.counts) = self._invoke(
+                    fn, self.params, dtokens, lengths,
+                    bt, ctokens, starts,
+                    clens, bt_c, self.kv.cache,
+                    self._next_key())
             else:
                 fut.nxt, fut.cn, self.kv.cache, fut.counts = self._invoke(
                     fn, self.params, dtokens, lengths,
@@ -1181,8 +1272,10 @@ class ServingEngine:
                             * self._kv_bytes_per_token)
             fut.moe_caps = self._moe_caps(self.kv.max_slots + nc_b * sc_b,
                                           k_cold)
-            fn = self._mixed_fn(k_cold, *fut.moe_caps, nc_b, sc_b)
+            fn = self._mixed_fn(k_cold, *fut.moe_caps, nc_b, sc_b,
+                                spec=spec)
             if chain is not None:
+                # chained stages never carry verify spans (see above)
                 fut.nxt, fut.cn, self.kv.cache, fut.counts = self._invoke(
                     _chain_fn(fn, chain.mode), self.params, chain.prev_nxt,
                     chain.prev_cn, chain.src_nxt, chain.src_cn,
@@ -1192,22 +1285,33 @@ class ServingEngine:
                 dtokens = self._staging("m_dtoks",
                                         (self.kv.max_slots, 1), np.int32)
                 dtokens[:, 0] = self._tokens
-                fut.nxt, fut.cn, self.kv.cache, fut.counts = self._invoke(
-                    fn, self.params, dtokens, valid,
-                    ctokens, cslots,
-                    starts, clens, self.kv.cache,
-                    self._next_key())
+                if spec:
+                    (fut.nxt, fut.cn, fut.cn_all, self.kv.cache,
+                     fut.counts) = self._invoke(
+                        fn, self.params, dtokens, valid,
+                        ctokens, cslots,
+                        starts, clens, self.kv.cache,
+                        self._next_key())
+                else:
+                    fut.nxt, fut.cn, self.kv.cache, fut.counts = self._invoke(
+                        fn, self.params, dtokens, valid,
+                        ctokens, cslots,
+                        starts, clens, self.kv.cache,
+                        self._next_key())
 
     def _commit_mixed(self, fut: StageFuture, mat: Dict[str, Any],
                       tnow: float) -> None:
         """Commit half of a mixed stage: decode tokens + lens advance,
         chunk lens jump to each span's end (their pages were written on
-        device), newly-full pages index for prefix sharing, and each final
-        chunk's sampled first token lands."""
+        device), newly-full pages index for prefix sharing, each final
+        chunk's sampled first token lands, and verify spans (PR 9) accept
+        their longest agreeing draft prefix — rewinding the KV of any
+        rejected tail."""
         decision = fut.plan.decision
         chunks = decision.chunks
         dn = mat["nxt"]
         cn = mat["cn"]
+        emit = self.on_token is not None
         if self.paged:
             adv = []
             for i, r in enumerate(decision.decoding):
@@ -1216,12 +1320,14 @@ class ServingEngine:
                 tok = int(dn[i])
                 self._tokens[r.slot] = tok
                 r.record_token(tok, tnow)
+                if emit:
+                    fut.emitted.append((r.rid, tok))
                 adv.append(r.slot)
             if adv:
                 self.kv.lens[np.asarray(adv)] += 1
             for c in chunks:
-                if not self._row_live(c.req):
-                    continue
+                if c.draft is not None or not self._row_live(c.req):
+                    continue            # verify spans commit below
                 self.kv.lens[c.req.slot] = c.end
                 if self.prefix_share:
                     # index the newly-full pages under their token ids so
@@ -1235,11 +1341,78 @@ class ServingEngine:
                 tok = int(dn[r.slot])
                 self._tokens[r.slot] = tok
                 r.record_token(tok, tnow)
+                if emit:
+                    fut.emitted.append((r.rid, tok))
         for i, c in enumerate(chunks):
             if c.is_last and self._row_live(c.req):
                 tok = int(cn[i])               # final chunk -> first token
                 self._tokens[c.req.slot] = tok
                 c.req.record_token(tok, tnow)
+                if emit:
+                    fut.emitted.append((c.req.rid, tok))
+        if fut.cn_all is not None:
+            self._commit_spec(fut, mat, tnow)
+
+    def _commit_spec(self, fut: StageFuture, mat: Dict[str, Any],
+                     tnow: float) -> None:
+        """Commit the stage's verify spans (PR 9). For each span, position
+        ``j`` of the verifier's per-position argmax (``cn_all``) is the
+        greedy prediction for stream position ``start+j+1`` given inputs
+        through ``start+j`` — identical, under greedy sampling, to what
+        unspeculated decode would have sampled there. The span commits its
+        longest agreeing draft prefix PLUS the verifier's own token at the
+        first disagreement (the "bonus": a verify row always nets at least
+        the one token plain decode would have produced). KV for the
+        rejected tail is rolled back page-granularly (:meth:`KVManager.
+        rewind`) or by resetting the dense device-side lengths — committed
+        state is bit-identical to having never drafted."""
+        decision = fut.plan.decision
+        cn_all = mat["cn_all"]
+        emit = self.on_token is not None
+        dense_rw_slots: List[int] = []
+        dense_rw_lens: List[int] = []
+        for i, c in enumerate(decision.chunks):
+            if c.draft is None:
+                continue
+            r = c.req
+            if not self._row_live(r):
+                continue                # died/evicted in flight: its pages
+            row = cn_all[i]             # were freed wholesale already
+            drafts = c.draft
+            a = 0
+            while a < len(drafts) and int(row[a]) == drafts[a]:
+                a += 1
+            self.spec_proposed += len(drafts)
+            self.spec_accepted += a
+            fut.spec_proposed += len(drafts)
+            fut.spec_accepted += a
+            cand = list(drafts[:a]) + [int(row[a])]
+            m = 0
+            for tok in cand:
+                r.record_token(tok, tnow)
+                if emit:
+                    fut.emitted.append((r.rid, tok))
+                m += 1
+                if r.done:              # EOS / length inside the span:
+                    break               # trailing accepts are discarded
+            new_len = c.start + m       # last committed token stays
+            if self.paged:              # unwritten, like plain decode
+                self.kv.lens[r.slot] = c.end   # pages cover the span
+                if r.done:
+                    continue            # retire frees the slot wholesale
+                if new_len < c.end:
+                    self.kv.rewind(r.slot, new_len)
+                    self.spec_rewinds += 1
+            else:
+                if r.done:
+                    continue
+                if new_len < c.end:
+                    dense_rw_slots.append(r.slot)
+                    dense_rw_lens.append(new_len)
+                    self.spec_rewinds += 1
+            self._tokens[r.slot] = cand[m - 1]
+        if dense_rw_slots:
+            self.kv.rewind_dense(dense_rw_slots, dense_rw_lens)
 
     def _dispatch_legacy_prefill(self, fut: StageFuture) -> None:
         """Dispatch half of the monolithic whole-prompt prefill
@@ -1289,6 +1462,8 @@ class ServingEngine:
             tok = int(nxt[i])
             self._tokens[s] = tok
             r.record_token(tok, tnow)
+            if self.on_token is not None:
+                fut.emitted.append((r.rid, tok))
 
     def _abort_stage(self, decision: StageDecision) -> None:
         """Unwind a stage an injected fault interrupted. Nothing durable has
@@ -1434,6 +1609,50 @@ class ServingEngine:
                          t0=t0, snap=snap, tnow=tnow,
                          speculative=speculative, epoch=self._epoch)
 
+    def _build_drafts(self) -> Optional[Dict[int, Tuple[int, List[int]]]]:
+        """PR 9: host-side n-gram drafting for the next stage. For every
+        decode-eligible row, ask the :class:`NgramDrafter` for up to
+        ``spec_k`` continuation tokens from the request's OWN stream
+        (prompt lookup — no second model), capped by the remaining token
+        budget (a verify span commits at most ``k+1`` tokens), the KV
+        capacity, and — under paged preemption — the page-pool slack left
+        after the already-admitted work's worst-case growth (drafting must
+        never push ``ensure_len`` into a pool the preemption planner
+        thinks is fine). Returns ``{rid: (start, draft_tokens)}`` for the
+        scheduler to turn into verify :class:`ChunkSpan`s, or None when
+        nothing drafted."""
+        drafts: Dict[int, Tuple[int, List[int]]] = {}
+        slack = (self.kv.free_pages - self._stage_page_need()
+                 if self.paged else 0)
+        for r in self.scheduler.running:
+            if r.done or r.slot < 0 or r.state != RequestState.DECODE:
+                continue
+            if self.paged:
+                start = int(self.kv.lens[r.slot])
+            else:
+                start = r.l_in + len(r.output) - 1
+            k = min(self.drafter.k,
+                    r.max_new_tokens - len(r.output) - 1,
+                    self.kv.max_len - start - 1)
+            if k < 1:
+                continue
+            toks = self.drafter.draft(r.token_stream())[:k]
+            if not toks:
+                continue
+            if self.paged:
+                base = self.kv.page_need(r.slot, start + 1)
+                while toks:
+                    extra = self.kv.page_need(
+                        r.slot, start + len(toks) + 1) - base
+                    if extra <= slack:
+                        slack -= extra
+                        break
+                    toks = toks[:-1]
+                if not toks:
+                    continue
+            drafts[r.rid] = (start, toks)
+        return drafts or None
+
     def plan_stage(self, now: Optional[float] = None, *,
                    maintain: bool = True,
                    snap: Optional[Tuple[int, int, int, int]] = None
@@ -1452,7 +1671,8 @@ class ServingEngine:
         free = self.kv.free_slots
         if self.paged:
             free = min(free, self._page_admission_cap())
-        decision = self.scheduler.next_stage(free)
+        drafts = self._build_drafts() if self.drafter is not None else None
+        decision = self.scheduler.next_stage(free, drafts=drafts)
         if decision is None:
             return None
         return self._finish_plan(decision, t0, snap, tnow)
@@ -1505,6 +1725,8 @@ class ServingEngine:
             mat["nxt"] = np.asarray(fut.nxt)
         if fut.cn is not None:
             mat["cn"] = np.asarray(fut.cn)
+        if fut.cn_all is not None:
+            mat["cn_all"] = np.asarray(fut.cn_all)
         if fut.legacy_nxt is not None:
             mat["legacy_nxt"] = np.asarray(fut.legacy_nxt)
         self._t_sync_done = time.monotonic()
@@ -1559,6 +1781,13 @@ class ServingEngine:
         plan = fut.plan
         decision = plan.decision
         k_cold = plan.k_cold
+        if self.on_token is not None and fut.emitted:
+            # streaming callbacks (PR 9 satellite): fired HERE, off the
+            # deferred path — a slow consumer can never stall the critical
+            # commit section or the next stage's dispatch
+            for rid, tok in fut.emitted:
+                self.on_token(rid, tok)
+            fut.emitted = []
         counts_layer = self._update_counts(fut.counts)
         chunk_tokens = sum(c.tokens for c in decision.chunks)
         live_moe = len(decision.decoding) + chunk_tokens
@@ -1601,6 +1830,8 @@ class ServingEngine:
             shared_kv_pages=self.kv.shared_pages,
             shed=fut.deltas[0], expired=fut.deltas[1],
             cancelled=fut.deltas[2], retries=fut.deltas[3],
+            spec_proposed=fut.spec_proposed,
+            spec_accepted=fut.spec_accepted,
             audit_violations=self._run_audit())
         self.reports.append(report)
         self.peak_active = max(self.peak_active,
@@ -1680,6 +1911,16 @@ class ServingEngine:
         d = cur.decision
         if d.chunks and not self._unified:
             return None          # legacy prefill claims slots at commit
+        if any(c.draft is not None for c in d.chunks):
+            # PR 9: the in-flight stage verifies drafts — how many it
+            # accepts (and how far each row's KV rewinds) is unknowable
+            # before materialization, so any projection past it is a
+            # guaranteed invalidation. A pending rewind IS a spec-miss:
+            # skip the projection and re-plan (with fresh drafts from the
+            # committed stream) after the commit lands.
+            self.spec_misses += 1
+            self._reject_spec("rewind")
+            return None
         t0 = time.monotonic()
         pos: Dict[int, int] = {}
         done_rids = set()
@@ -1717,6 +1958,16 @@ class ServingEngine:
                         and r.rid not in done_rids]
         running_proj += promoted
         running_proj += restored_live
+        if self.drafter is not None and running_proj:
+            # PR 9: the next stage would draft for these decode rows, but
+            # drafts n-gram-match against tokens the in-flight stage has
+            # not committed yet — a projected plan could only offer the
+            # undrafted (slower) stage. Fall back to plan-after-commit so
+            # every decode stage gets fresh drafts; pure-prefill stages
+            # still project and chain as before.
+            self.spec_misses += 1
+            self._reject_spec("draft")
+            return None
         prefilling_proj = ([r for r in self.scheduler.prefilling
                             if not r.done
                             and r.rid not in finished_prefill]
@@ -1754,6 +2005,11 @@ class ServingEngine:
         d = spec.decision
         if d.restored or d_prev.restored:
             return None        # restores scatter saved KV into the cache
+        if any(c.draft is not None for c in d_prev.chunks) \
+                or any(c.draft is not None for c in d.chunks):
+            # verify spans (PR 9): accept length / KV rewind are decided
+            # at commit, so neither side of a chain may carry them
+            return None
         if fut.nxt is None:    # at commit — a chained reader would race it
             return None
         n_first = sum(1 for c in d.chunks if c.first)
@@ -2119,7 +2375,8 @@ class ServingEngine:
     STATS_DELTA_KEYS = ("stages", "preemptions", "forced_evictions",
                         "stage_aborts", "retries", "shed", "expired",
                         "cancelled", "rejected", "audit_violations",
-                        "shared_tokens_skipped")
+                        "shared_tokens_skipped", "spec_proposed",
+                        "spec_accepted")
 
     def stats(self, reset: bool = False) -> dict:
         """Engine-lifetime robustness + capacity roll-up (the serve CLI and
@@ -2148,6 +2405,13 @@ class ServingEngine:
                    "spec_hits": self.spec_hits,
                    "spec_misses": self.spec_misses,
                    "spec_miss_reasons": dict(self.spec_miss_reasons),
+                   # speculative DECODING (PR 9) — distinct from the
+                   # speculative PLANNING counters above
+                   "spec_proposed": self.spec_proposed,
+                   "spec_accepted": self.spec_accepted,
+                   "spec_rewinds": self.spec_rewinds,
+                   "spec_acceptance": (self.spec_accepted
+                                       / max(self.spec_proposed, 1)),
                    "chained_stages": self.chained_stages,
                    "host_gap_s": self.host_gap_s,
                    "gap_stages": self.gap_stages,

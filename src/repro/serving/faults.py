@@ -47,6 +47,18 @@ aborts only that stage (its admissions return to the queue; the in-flight
 stage it chained on still commits). The stall watchdog sees in-flight
 ``StageFuture``\\s: a stage is "live" from dispatch until its commit, so a
 spiked clock cannot misread an overlapped stage as a hang.
+
+Speculative decoding (PR 9): a stage whose mixed batch carries verify
+spans is still ONE dispatched stage — its decode rows and all its
+speculative multi-token spans ride the single jitted call, so exactly one
+``step_error``/``latency_spike`` draw happens per dispatched stage, never
+one per span. A fixed chaos seed therefore draws the same schedule
+whether ``spec_k`` is 0 or not as long as the stage *sequence* matches;
+speculation changes the number of stages (that is the point), so parity
+claims compare a spec run against the same spec run, not across
+``spec_k`` values. KV rewind after a rejected draft happens at commit via
+the ordinary page-release path, so chaos audits see the same invariants
+(free XOR allocated, refcounts ≥ mappings) they always did.
 """
 from __future__ import annotations
 

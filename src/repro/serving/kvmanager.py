@@ -181,6 +181,7 @@ class KVManager:
             # index (Request.match_version caches the version last tried)
             self.index_version = 0
             self.cow_copies = 0
+            self.dedup_merges = 0
             self.block_tables = np.zeros((max_slots, self.max_pages_per_slot),
                                          np.int32)
             self.lens = np.zeros((max_slots,), np.int32)
@@ -339,6 +340,59 @@ class KVManager:
                 self._deindex(pid)
         return copied
 
+    def rewind(self, slot: int, new_len: int) -> int:
+        """Roll ``slot``'s valid length back to ``new_len`` — the
+        speculative-decode reject path (PR 9): drafts wrote KV past the
+        accepted prefix, and the cheapest undo is page-table surgery, not a
+        device op. Pages wholly past the new length are popped from the
+        block table and decref'd (COW/prefix-share safe: a shared page
+        survives under its other owners and stays indexed; only a last
+        reference recycles + deindexes). The kept boundary page, when
+        partial and privately owned, is deindexed eagerly — its tail will
+        be overwritten by continued decode, so the index must stop offering
+        it (a *shared* boundary page is left alone: the overwrite will COW
+        through ``ensure_writable`` like any other shared-page write).
+        Returns the number of block-table entries released."""
+        assert self.paged and slot in self._active, slot
+        cur = int(self.lens[slot])
+        assert 0 <= new_len <= cur, (slot, new_len, cur)
+        pages = self._slot_pages[slot]
+        keep = _cdiv(new_len, self.page_size) if new_len else 0
+        released = 0
+        while len(pages) > keep:
+            pid = pages.pop()
+            self.block_tables[slot, len(pages)] = 0
+            self._decref(pid)
+            released += 1
+        if keep and new_len < keep * self.page_size:
+            pid = pages[keep - 1]
+            if self._page_refs.get(pid, 0) == 1:
+                self._deindex(pid)
+        self.lens[slot] = new_len
+        return released
+
+    def rewind_dense(self, slots: Sequence[int],
+                     new_lens: Sequence[int]) -> None:
+        """Dense-layout counterpart of :meth:`rewind` (PR 9): roll the
+        device-side per-slot cache lengths back after a partially-rejected
+        verify span. The dense chunk step set ``len`` to the span end
+        in-jit; the accepted length is only known at commit, so the host
+        overwrites it here. Stale K/V past the new length self-masks (both
+        attention paths mask on per-entry ``pos`` / length) and is
+        overwritten in place as decode continues."""
+        assert not self.paged
+        sl = jnp.asarray(list(slots), jnp.int32)
+        nl = jnp.asarray(list(new_lens), jnp.int32)
+        fixed = []
+        for seg in self.cache:
+            blocks = []
+            for b in seg["blocks"]:
+                if "len" in b:            # attention caches only
+                    b = {**b, "len": b["len"].at[:, sl].set(nl[None])}
+                blocks.append(b)
+            fixed.append({**seg, "blocks": tuple(blocks)})
+        self.cache = fixed
+
     def _copy_page(self, src: int, dst: int) -> None:
         """Device-side copy of one pool page (all layers, K/V and scale
         leaves — every paged cache leaf is (layers, num_pages, ...))."""
@@ -405,10 +459,14 @@ class KVManager:
     def register_prefix(self, slot: int, tokens: Sequence[int]) -> int:
         """Index ``slot``'s full pages under the token ids they hold
         (``tokens`` = the slot's processed token stream, trimmed to its
-        valid length). Pages already indexed — or whose key is taken by an
-        identical-content page from another slot — are skipped; the chain
-        continues either way because keys are content-based. Returns the
-        number of pages newly indexed."""
+        valid length). Pages already indexed are skipped; when the key is
+        taken by an identical-content page from another slot, the duplicate
+        is **merged** (PR 9 dedupe): this slot's private copy is swapped
+        for the indexed page (refcount+1) and freed, so N slots that
+        computed the same full page converge on one physical copy. A page
+        that cannot merge (still shared, or pinned) is skipped as before;
+        the chain continues either way because keys are content-based.
+        Returns the number of pages newly indexed."""
         assert self.paged and slot in self._active, slot
         pages = self._slot_pages[slot]
         added = 0
@@ -418,8 +476,21 @@ class KVManager:
             pid = pages[i]
             if self._page_hash.get(pid) is not None:
                 continue                     # already indexed (maybe shared)
-            if key in self._hash_page:
-                continue                     # another page owns this prefix
+            qid = self._hash_page.get(key)
+            if qid is not None:
+                # another page already owns this exact prefix: merge our
+                # private duplicate onto it instead of coexisting. Only a
+                # refcount-1 page is merge-safe (refs > 1 means pins or
+                # other mappings we must not silently remap), and the index
+                # entry is verified exactly — a hash collision never merges.
+                if (qid != pid and self._page_key.get(qid) == exact
+                        and self._page_refs.get(pid, 0) == 1):
+                    self._page_refs[qid] += 1
+                    self.block_tables[slot, i] = qid
+                    pages[i] = qid
+                    self._decref(pid)        # frees the duplicate
+                    self.dedup_merges += 1
+                continue
             self._hash_page[key] = pid
             self._page_hash[pid] = key
             self._page_key[pid] = exact
@@ -478,7 +549,8 @@ class KVManager:
                         "free_pages": self.free_pages,
                         "shared_pages": self.shared_pages,
                         "indexed_pages": len(self._hash_page),
-                        "cow_copies": self.cow_copies})
+                        "cow_copies": self.cow_copies,
+                        "dedup_merges": self.dedup_merges})
         return out
 
     # ---- invariant audit (PR 6) ----------------------------------------------

@@ -84,12 +84,21 @@ class ChunkSpan:
     necessarily 0. ``target`` carries the planned prefill target for
     admission chunks — it is frozen into ``req.prefill_target`` only at
     :meth:`ContinuousBatchingScheduler.activate`, so a never-dispatched
-    speculative plan leaves the request untouched."""
+    speculative plan leaves the request untouched.
+
+    Speculative-decode verify spans (PR 9) reuse this type: ``draft`` set
+    means the span is not prefill but a DECODE-state request verifying
+    ``draft`` proposed tokens — positions ``[start, end)`` feed the last
+    sampled token followed by the draft (``end - start == len(draft)+1``),
+    and the engine's commit accepts the longest agreeing prefix instead of
+    advancing ``prefill_pos``. Verify spans never claim a slot
+    (``first=False``) and are invisible to :meth:`commit_stage`."""
     req: Request
     start: int
     end: int
     first: bool = False
     target: Optional[int] = None
+    draft: Optional[List[int]] = None
 
     @property
     def tokens(self) -> int:
@@ -97,10 +106,12 @@ class ChunkSpan:
 
     @property
     def is_first(self) -> bool:
-        return self.first or self.start == 0
+        return self.draft is None and (self.first or self.start == 0)
 
     @property
     def is_last(self) -> bool:
+        if self.draft is not None:
+            return False        # a verify span never samples a first token
         total = self.target if self.target is not None else \
             self.req.prefill_total
         return self.end >= total
@@ -126,7 +137,10 @@ class StageDecision:
     def mix(self) -> StageMix:
         return StageMix(
             decode_ctx=tuple(r.l_in + len(r.output) for r in self.decoding),
-            chunk_spans=tuple((c.start, c.end) for c in self.chunks))
+            chunk_spans=tuple((c.start, c.end) for c in self.chunks
+                              if c.draft is None),
+            spec_spans=tuple((c.start, c.end) for c in self.chunks
+                             if c.draft is not None))
 
 
 class ContinuousBatchingScheduler:
@@ -273,14 +287,22 @@ class ContinuousBatchingScheduler:
                    prefilling: Optional[List[Request]] = None,
                    running: Optional[List[Request]] = None,
                    queue=None,
-                   pos: Optional[dict] = None) -> Optional[StageDecision]:
+                   pos: Optional[dict] = None,
+                   drafts: Optional[dict] = None) -> Optional[StageDecision]:
         """Form the next stage WITHOUT mutating any scheduler or request
         state. The default call plans against live state; the async engine
         passes projected ``prefilling``/``running``/``pos`` overrides to
         plan stage N+1 against the predicted post-commit state of the
         in-flight stage N (PR 8). A plan only takes effect when
         :meth:`activate` runs — discarding an invalidated speculative plan
-        costs nothing."""
+        costs nothing.
+
+        ``drafts`` (PR 9) maps rid -> (start, proposed tokens) for decode
+        rows the engine wants verified speculatively this stage: each such
+        request leaves ``decoding`` and rides as a verify
+        :class:`ChunkSpan` instead (multi-token rows through the same
+        chunk-attention path). Eligibility (greedy sampling, length/page
+        headroom) is the engine's call — the scheduler just re-shapes."""
         prefill_src = self.prefilling if prefilling is None else prefilling
         queue_src = self.queue if queue is None else queue
         pos = pos or {}
@@ -346,6 +368,20 @@ class ContinuousBatchingScheduler:
             # promotions/finishes, so take the list verbatim (members may
             # still read PREFILL until the in-flight commit lands)
             decoding = list(running)
+        if drafts:
+            # verify spans ride AFTER the prefill chunks (stable commit
+            # order) and outside the prefill seq/token budgets — they are
+            # decode work wearing a chunk span's shape
+            still_decoding = []
+            for r in decoding:
+                d = drafts.get(r.rid)
+                if d is None:
+                    still_decoding.append(r)
+                    continue
+                start, toks = d
+                chunks.append(ChunkSpan(r, start, start + len(toks) + 1,
+                                        draft=list(toks)))
+            decoding = still_decoding
         if not chunks and not decoding and not restored:
             return None
         return StageDecision(chunks, decoding, restored)
@@ -387,8 +423,9 @@ class ContinuousBatchingScheduler:
                     key=lambda r: (-self.effective_priority(r), r.queue_seq)))
         self.stage_counts["mixed" if decision.chunks else "decode_only"] += 1
 
-    def next_stage(self, free_slots: int) -> Optional[StageDecision]:
-        decision = self.plan_stage(free_slots)
+    def next_stage(self, free_slots: int,
+                   drafts: Optional[dict] = None) -> Optional[StageDecision]:
+        decision = self.plan_stage(free_slots, drafts=drafts)
         if decision is None:
             # purge terminal queued requests even on an empty plan so
             # ``has_work`` cannot stick on a dead queue (pre-split behavior)
@@ -402,7 +439,9 @@ class ContinuousBatchingScheduler:
         """After the engine executes the stage: advance chunk positions,
         promote finished prefills to decode, retire completed requests."""
         for c in decision.chunks:
-            r = c.req
+            if c.draft is not None:
+                continue            # verify span: the engine's spec commit
+            r = c.req               # accepted/rewound; no prefill cursor here
             r.prefill_pos = c.end
             if r.prefill_done:
                 if r in self.prefilling:

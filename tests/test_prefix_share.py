@@ -150,15 +150,19 @@ def _check_invariants(kv):
 @settings(max_examples=30, deadline=None)
 @given(data=st.data())
 def test_refcount_invariants_property(tiny_dense, data):
-    """Random alloc/grow/register/share/COW/evict sequences never
+    """Random alloc/grow/register/share/COW/evict/rewind sequences never
     double-free or orphan a page, and releasing everything returns the
-    whole pool to the free heap."""
+    whole pool to the free heap. ``rewind`` (PR 9, the speculative-decode
+    reject path) must uphold the same invariants: popping a shared page
+    decrefs it without recycling, and a kept partial boundary page is
+    deindexed only when privately owned."""
     kv = KVManager(tiny_dense, max_slots=4, max_len=32, layout="paged",
                    page_size=4, num_pages=data.draw(st.integers(8, 24)))
     slots, pins = {}, []
     rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
     for _ in range(data.draw(st.integers(5, 40))):
-        ops = ["alloc", "grow", "register", "share", "cow", "evict", "unpin"]
+        ops = ["alloc", "grow", "register", "share", "cow", "evict",
+               "unpin", "rewind"]
         op = data.draw(st.sampled_from(ops))
         try:
             if op == "alloc" and kv.free_slots:
@@ -190,6 +194,10 @@ def test_refcount_invariants_property(tiny_dense, data):
                 del slots[s]
             elif op == "unpin" and pins:
                 kv.unpin(pins.pop())
+            elif op == "rewind" and slots:
+                s = data.draw(st.sampled_from(sorted(slots)))
+                cur = int(kv.lens[s])
+                kv.rewind(s, data.draw(st.integers(0, max(cur, 0))))
         except RuntimeError:
             pass                            # pool exhausted mid-op is legal
         _check_invariants(kv)

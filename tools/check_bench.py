@@ -22,6 +22,17 @@ compares each current ``<name>.json`` against the committed
 
 Baselines are re-seeded deliberately with ``--update`` when a PR moves the
 numbers on purpose; the diff then shows exactly what moved, by how much.
+
+Cross-commit history (PR 9): a fixed baseline only catches drift against
+ONE anchored run — slow creep that re-seeds the baseline each PR never
+trips it. With ``--history DIR``, every run appends one JSONL record
+(timestamp, commit, rows) to ``DIR/<name>.jsonl`` and each numeric field
+is additionally gated against the ROLLING MEDIAN of the last ``--history-n``
+recorded runs: the band anchors to recent reality instead of a hand-picked
+snapshot, and the median shrugs off a single outlier run. The history gate
+arms only once ``--history-min`` records exist, so fresh benchmarks pass
+while their trail accumulates. The current run is appended AFTER gating —
+a drifting run still leaves its record, but never vouches for itself.
 """
 from __future__ import annotations
 
@@ -30,7 +41,9 @@ import json
 import os
 import re
 import shutil
+import subprocess
 import sys
+import time
 
 DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), os.pardir,
                                  "benchmarks", "baselines")
@@ -64,6 +77,84 @@ def compare_rows(name, base_rows, cur_rows, *, rel, abs_tol):
     return problems
 
 
+def _median(vals):
+    s = sorted(vals)
+    n = len(s)
+    mid = n // 2
+    return s[mid] if n % 2 else (s[mid - 1] + s[mid]) / 2.0
+
+
+def _load_history(path, last_n):
+    """Last ``last_n`` well-formed records of a JSONL history file."""
+    if not os.path.exists(path):
+        return []
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue            # a torn append never poisons the gate
+            if isinstance(rec, dict) and isinstance(rec.get("rows"), list):
+                records.append(rec)
+    return records[-last_n:]
+
+
+def compare_history(name, records, cur_rows, *, rel, abs_tol, min_runs):
+    """Gate each numeric field against the rolling median of its history.
+
+    Same identity/tolerance philosophy as :func:`compare_rows`, but the
+    anchor is the median of the last N recorded runs instead of the single
+    committed baseline. Inactive until ``min_runs`` records exist."""
+    problems = []
+    if len(records) < min_runs:
+        return problems
+    for i, c in enumerate(cur_rows):
+        for key, cv in c.items():
+            if isinstance(cv, bool) or not isinstance(cv, (int, float)):
+                continue
+            if SKIP_FIELD.search(key):
+                continue
+            series = []
+            for rec in records:
+                rows = rec["rows"]
+                if i < len(rows) and isinstance(rows[i], dict):
+                    hv = rows[i].get(key)
+                    if isinstance(hv, (int, float)) \
+                            and not isinstance(hv, bool):
+                        series.append(hv)
+            if len(series) < min_runs:
+                continue
+            med = _median(series)
+            if abs(cv - med) > abs_tol + rel * abs(med):
+                problems.append(
+                    f"{name}[{i}].{key}: {cv} outside band around rolling "
+                    f"median {med} of last {len(series)} runs "
+                    f"(rel={rel}, abs={abs_tol})")
+    return problems
+
+
+def append_history(history_dir, name, cur):
+    """Append this run's rows (stamped with time + best-effort commit) to
+    ``<history_dir>/<name>.jsonl``."""
+    os.makedirs(history_dir, exist_ok=True)
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))
+        ).stdout.strip() or None
+    except Exception:
+        commit = None
+    rec = {"ts": round(time.time(), 3), "commit": commit,
+           "rows": cur.get("rows", [])}
+    with open(os.path.join(history_dir, f"{name}.jsonl"), "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--dir", required=True,
@@ -78,6 +169,18 @@ def main(argv=None) -> int:
     p.add_argument("--update", action="store_true",
                    help="re-seed the baselines from --dir instead of "
                         "comparing (commit the diff deliberately)")
+    p.add_argument("--history", default=None, metavar="DIR",
+                   help="cross-commit history: append each run's rows to "
+                        "DIR/<name>.jsonl and ALSO gate numeric fields "
+                        "against the rolling median of the last "
+                        "--history-n recorded runs")
+    p.add_argument("--history-n", type=int, default=8,
+                   help="rolling window: gate against the median of the "
+                        "last N history records")
+    p.add_argument("--history-min", type=int, default=3,
+                   help="arm the history gate only once this many records "
+                        "exist (fresh benchmarks pass while their trail "
+                        "accumulates)")
     args = p.parse_args(argv)
 
     if args.update:
@@ -113,6 +216,13 @@ def main(argv=None) -> int:
         problems += compare_rows(name, base.get("rows", []),
                                  cur.get("rows", []),
                                  rel=args.rel, abs_tol=args.abs_tol)
+        if args.history is not None:
+            records = _load_history(
+                os.path.join(args.history, f"{name}.jsonl"), args.history_n)
+            problems += compare_history(
+                name, records, cur.get("rows", []), rel=args.rel,
+                abs_tol=args.abs_tol, min_runs=args.history_min)
+            append_history(args.history, name, cur)
         checked += 1
     for pr in problems:
         print(f"[check_bench] DRIFT {pr}")
